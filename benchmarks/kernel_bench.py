@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: ref-path timings on CPU (the Pallas kernels
+target TPU; interpret-mode timing is not meaningful) + exact byte-movement
+accounting per kernel, which is the quantity the kernels optimize."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_codebook
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    m, k, n = 512, 1024, 1024
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+
+    w8, s8 = ops.prepare_w8(w)
+    us = _bench(jax.jit(lambda a, b, c: ref.w8a8_matmul_ref(
+        *ops.quantize_activations(a), b, c)), x, w8, s8)
+    print(f"kernel_w8a8_ref_{m}x{k}x{n},{us:.1f},"
+          f"w_bytes={k * n}_vs_fp32={4 * k * n}")
+
+    w4, s4 = ops.prepare_w4(w)
+    us = _bench(jax.jit(lambda a, b, c: ref.w4a8_matmul_ref(
+        *ops.quantize_activations(a), b, c)), x, w4, s4)
+    print(f"kernel_w4a8_ref_{m}x{k}x{n},{us:.1f},"
+          f"w_bytes={k * n // 2}_vs_fp32={4 * k * n}")
+
+    cb = make_codebook(8)
+    cb_t = ops.pad_codebook(cb)
+    v = jax.random.normal(key, (65536, 3))
+    us = _bench(jax.jit(lambda vv: ref.mddq_encode_ref(vv, jnp.asarray(cb_t.T))), v)
+    print(f"kernel_mddq_ref_64k_vectors,{us:.1f},"
+          f"out_bytes={65536 * 2}_vs_fp32={65536 * 12}")
+
+    bh, s, d = 8, 4096, 128
+    q = jax.random.normal(key, (bh, d))
+    kc = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, d))
+    vc = jax.random.normal(jax.random.fold_in(key, 3), (bh, s, d))
+    kq, ks, vq, vs = ops.prepare_kv_int8(kc, vc)
+    us = _bench(jax.jit(lambda *a: ref.decode_attention_int8kv_ref(
+        *a, softmax_scale=d ** -0.5)), q, kq, ks, vq, vs)
+    print(f"kernel_int8kv_decode_ref_{bh}x{s}x{d},{us:.1f},"
+          f"cache_bytes={2 * bh * s * d}_vs_bf16={4 * bh * s * d}")
+
+
+if __name__ == "__main__":
+    main()

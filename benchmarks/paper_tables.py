@@ -1,0 +1,149 @@
+"""Benchmarks reproducing the paper's tables/figures from pipeline artifacts.
+
+Each function prints ``name,us_per_call,derived`` CSV rows (harness contract)
+plus a human-readable table. Artifacts come from
+``python -m repro.training.pipeline`` (artifacts/so3/metrics.json); if absent,
+a --fast pipeline run is triggered first.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "so3")
+METRICS = os.path.join(ART, "metrics.json")
+
+
+def _metrics() -> dict:
+    if not os.path.exists(METRICS):
+        print("# no artifacts found -> running fast pipeline", file=sys.stderr)
+        subprocess.run([sys.executable, "-m", "repro.training.pipeline",
+                        "--fast"], check=True,
+                       env=dict(os.environ, PYTHONPATH="src"))
+    return json.load(open(METRICS))
+
+
+def _mev(m: dict, x: float) -> float:
+    return x * m["units"]["e_scale_eV"] * 1000.0
+
+
+def table1_complexity():
+    """Paper Table I: per-layer asymptotic cost with/without quantization.
+    Analytic (the table is analytic in the paper too), plus our measured
+    model-byte ratios as the constant-factor evidence."""
+    rows = [
+        ("PaiNN", "O(n<N>4F)", 1),
+        ("SpookyNet", "O(n<N>(l+1)^2 F)", 2),
+        ("NequIP", "O(n<N>(l+1)^6 F)", 3),
+        ("So3krates(ours)", "O(n<N>((l+1)^2+F))", 1),
+    ]
+    m = _metrics()
+    lat = m["latency"]
+    rho8 = lat["model_bytes_w8"] / lat["model_bytes_fp32"]
+    rho4 = lat["model_bytes_w4"] / lat["model_bytes_fp32"]
+    print("# Table I: complexity (analytic) + measured constant factors")
+    for name, cost, lmax in rows:
+        print(f"#   {name:18s} C_full={cost:22s} l_max={lmax} "
+              f"C_quant=C_full*rho_k")
+    print(f"#   measured rho_8={rho8:.3f} (theory 0.25), "
+          f"rho_4={rho4:.3f} (theory 0.125)")
+    print(f"table1_rho8,{rho8:.4f},theory=0.25")
+    print(f"table1_rho4,{rho4:.4f},theory=0.125")
+
+
+def table2_accuracy():
+    """Paper Table II: E-MAE / F-MAE per method on azobenzene(synthetic)."""
+    m = _metrics()
+    print("# Table II: accuracy (meV / meV/A), azobenzene-like synthetic")
+    print("# method            bits   E-MAE    F-MAE    stable")
+    order = [("fp32", "32/32"), ("naive_int8", "8/8"),
+             ("svq_kmeans", "8/8"), ("degree_quant", "8/8"),
+             ("gaq_w4a8", "4/8")]
+    for name, bits in order:
+        d = m[name]
+        stable = "diverged" if d.get("diverged") else "stable"
+        e, f = _mev(m, d["e_mae"]), _mev(m, d["f_mae"])
+        print(f"#  {name:16s} {bits:6s} {e:8.2f} {f:8.2f}  {stable}")
+        print(f"table2_{name}_emae_mev,{e:.3f},f_mae_mev={f:.3f}")
+    gaq, fp = _mev(m, m["gaq_w4a8"]["e_mae"]), _mev(m, m["fp32"]["e_mae"])
+    print(f"table2_gaq_vs_fp32,{gaq / max(fp, 1e-9):.3f},"
+          f"paper_claims_gaq_matches_fp32")
+
+
+def table3_lee():
+    """Paper Table III: Local Equivariance Error per method."""
+    m = _metrics()
+    print("# Table III: LEE (meV/A equivalent, force-norm units)")
+    for name in ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"]:
+        lee = _mev(m, m[name]["lee"])
+        print(f"#  {name:16s} LEE={lee:10.4f}")
+        print(f"table3_{name}_lee,{lee:.4f},")
+    if "lee_dir16" in m["gaq_w4a8"]:
+        lee16 = _mev(m, m["gaq_w4a8"]["lee_dir16"])
+        print(f"#  gaq_w4a8(dir16) LEE={lee16:10.4f}  (same ckpt, eval-time "
+              f"16-bit codebook)")
+        print(f"table3_gaq_dir16_lee,{lee16:.4f},")
+        ratio = m["naive_int8"]["lee"] / max(m["gaq_w4a8"]["lee_dir16"], 1e-12)
+    else:
+        ratio = m["naive_int8"]["lee"] / max(m["gaq_w4a8"]["lee"], 1e-12)
+    print(f"#  naive/GAQ ratio = {ratio:.1f}x (paper: >30x; directional "
+          f"resolution is the lever, see DESIGN.md §8)")
+    print(f"table3_naive_over_gaq,{ratio:.2f},paper_claims_over_30x")
+
+
+def table4_memory_wall():
+    """Paper Table IV: latency/memory breakdown — CPU bandwidth-multiplier
+    microbenchmark (weight-I/O row) + model footprints."""
+    m = _metrics()
+    lat = m["latency"]
+    io32, io8, io4 = (lat["weight_io_fp32_us"], lat["weight_io_int8_us"],
+                      lat["weight_io_int4_us"])
+    print("# Table IV: memory-wall breakdown (CPU analogue of paper's 4090)")
+    print(f"#  weight I/O  fp32 {io32:10.1f} us   int8 {io8:10.1f} us "
+          f"({io32 / io8:.2f}x)   int4 {io4:10.1f} us ({io32 / io4:.2f}x)")
+    print(f"#  gemv (compute, same across precisions): {lat['gemv_us']:.1f} us")
+    print(f"#  quant overhead (unfused CPU dequant): "
+          f"{lat['quant_overhead_us']:.1f} us -> fused in TPU Pallas kernel")
+    print(f"table4_weight_io_speedup_int8,{io32 / io8:.3f},paper=4.0x")
+    print(f"table4_weight_io_speedup_int4,{io32 / io4:.3f},theory=8x")
+    print(f"table4_model_mem_ratio_w4a8,"
+          f"{lat['model_bytes_fp32'] / lat['model_bytes_w4']:.2f},paper=4x")
+
+
+def fig3_nve():
+    """Paper Fig. 3: NVE stability (energy drift / explosion)."""
+    m = _metrics()
+    print("# Fig 3: NVE dynamics stability")
+    for name in ["fp32", "gaq_w4a8", "naive_int8"]:
+        d = m[name].get("nve")
+        if not d:
+            continue
+        drift = d["drift_ev_per_atom_ps"] * 1000
+        print(f"#  {name:12s} drift={drift:12.4f} meV/atom/ps "
+              f"blew_up={d['blew_up']} ({d['n_steps']} steps @ {d['dt_fs']}fs)")
+        print(f"fig3_{name}_drift,{drift:.4f},blew_up={d['blew_up']}")
+    print("# Fig 3 supplementary: 100 K (regime where the CPU-scale fp32 "
+          "model is itself stable)")
+    for name in ["fp32", "gaq_w4a8", "naive_int8"]:
+        for key in ("nve_100k", "nve_100k_dir14", "nve_100k_dir16"):
+            d = m[name].get(key)
+            if not d:
+                continue
+            drift = d["drift_ev_per_atom_ps"] * 1000
+            print(f"#  {name:12s}[{key}] drift={drift:12.4f} meV/atom/ps "
+                  f"blew_up={d['blew_up']} e_range={d.get('e_range', -1):.2f} eV")
+            print(f"fig3_{name}_{key},{drift:.4f},blew_up={d['blew_up']}")
+
+
+def main():
+    table1_complexity()
+    table2_accuracy()
+    table3_lee()
+    table4_memory_wall()
+    fig3_nve()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh (256 chips):
+    compute term    = FLOPs / (chips * 197 TFLOP/s)
+    memory term     = HBM bytes / (chips * 819 GB/s)
+    collective term = per-chip collective bytes / 50 GB/s
+FLOPs and HBM bytes are the analytic implementation costs (launch/costs.py;
+XLA's cost_analysis undercounts scan bodies — both raw and analytic are in
+the artifacts). Collective bytes come from the compiled HLO with while-loop
+trip expansion (launch/hlo_analysis.py); SPMD HLO shapes are per-chip, so
+the term divides by one link's bandwidth (equivalent to the global
+convention chips*link_bw with global = per-chip * chips).
+
+Roofline fraction = T_ideal / T_bound, where T_ideal = MODEL_FLOPS /
+(chips * peak) and T_bound = max(three terms): "how close would this program
+be to the hardware's best possible time for the useful math".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+CHIPS = 256
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}*.json"))):
+        rec = json.load(open(path))
+        if rec.get("tag", "") != tag or rec["mesh"] != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def terms(rec: dict) -> dict:
+    flops = rec["analytic_flops"]
+    hbm = rec["analytic_hbm_bytes"]["total"]
+    coll = sum(rec["collective_bytes"].values())
+    t_c = flops / (CHIPS * PEAK_FLOPS)
+    t_m = hbm / (CHIPS * HBM_BW)
+    t_n = coll / LINK_BW
+    t_bound = max(t_c, t_m, t_n)
+    dom = {t_c: "compute", t_m: "memory", t_n: "collective"}[t_bound]
+    t_ideal = rec["model_flops"] / (CHIPS * PEAK_FLOPS)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom, "bound_s": t_bound,
+        "useful_ratio": rec["model_flops"] / max(flops, 1),
+        "roofline_fraction": t_ideal / max(t_bound, 1e-30),
+        "hbm_split": rec["analytic_hbm_bytes"],
+    }
+
+
+_FIX_HINTS = {
+    ("compute",): "cut implementation overhead (causal block-skip in "
+                  "attention, sparser MoE dispatch) or quantize compute",
+    ("memory",): "quantize weights/KV (W4A8 + int8 cache) to shrink the "
+                 "dominant HBM stream",
+    ("collective",): "reshard to cut per-layer collectives (sequence-shard "
+                     "norms, overlap TP all-reduces, int8 gradient "
+                     "all-reduce)",
+}
+
+
+def render_table(mesh: str = "single", tag: str = "") -> str:
+    rows = []
+    hdr = (f"| arch | shape | compute s | memory s | collective s | "
+           f"dominant | useful | roofline frac |")
+    rows.append(hdr)
+    rows.append("|" + "---|" * 8)
+    for rec in load_cells(mesh, tag):
+        t = terms(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    print("# Roofline terms per (arch x shape), single-pod 16x16 (256 chips)")
+    recs = load_cells("single")
+    if not recs:
+        print("# no dry-run artifacts; run python -m repro.launch.dryrun --all")
+        return
+    for rec in recs:
+        t = terms(rec)
+        name = f"{rec['arch']}__{rec['shape']}"
+        if rec.get("quant_mode", "none") != "none" or rec.get("kv_quant"):
+            name += f"__{rec['quant_mode']}" + ("_kv8" if rec["kv_quant"] else "")
+        print(f"roofline_{name},{t['bound_s'] * 1e6:.2f},"
+              f"dom={t['dominant']};frac={t['roofline_fraction']:.3f};"
+              f"useful={t['useful_ratio']:.2f}")
+    print()
+    print(render_table("single"))
+
+
+if __name__ == "__main__":
+    main()

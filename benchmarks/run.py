@@ -1,0 +1,25 @@
+"""Benchmark harness entrypoint: one section per paper table/figure plus the
+roofline report. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--section tables|roofline|kernels]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "tables", "roofline", "kernels"])
+    args = ap.parse_args()
+    from benchmarks import paper_tables, roofline, kernel_bench
+    if args.section in ("all", "tables"):
+        paper_tables.main()
+    if args.section in ("all", "roofline"):
+        roofline.main()
+    if args.section in ("all", "kernels"):
+        kernel_bench.main()
+
+
+if __name__ == '__main__':
+    main()

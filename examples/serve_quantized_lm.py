@@ -1,0 +1,18 @@
+"""Example: quantized LM serving (the memory-wall fix applied to decode).
+
+Loads the qwen2-0.5b *family* smoke config, compares fp32 vs W8A8 vs W4A8
+(+ int8 KV cache) decode: memory footprint and tokens/s on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_quantized_lm.py
+"""
+import subprocess
+import sys
+import os
+
+env = dict(os.environ, PYTHONPATH="src")
+for quant, kv in [("none", False), ("serve_w8a8", True), ("serve_w4a8", True)]:
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
+           "--smoke", "--quant", quant, "--tokens", "16", "--batch", "2",
+           "--cache-len", "64"] + (["--kv-quant"] if kv else [])
+    print(f"\n== quant={quant} kv_quant={kv} ==")
+    subprocess.run(cmd, check=True, env=env)

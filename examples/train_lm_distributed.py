@@ -1,0 +1,15 @@
+"""Example: end-to-end distributed-style LM training driver (~100M-class
+smoke model, few hundred steps) with checkpoint/auto-resume and QAT.
+
+Run:  PYTHONPATH=src python examples/train_lm_distributed.py
+"""
+import os
+import subprocess
+import sys
+
+env = dict(os.environ, PYTHONPATH="src")
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "llama3.2-3b", "--smoke", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--ckpt-every", "100",
+                "--quant", "qat_w4a8", "--grad-compression", "ef8"],
+               check=True, env=env)

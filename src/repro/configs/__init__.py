@@ -1,0 +1,59 @@
+"""Architecture registry: `--arch <id>` ids map to LMConfig factories.
+
+Every assigned architecture has its own module with the exact published
+config plus a `smoke()` reduced config of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.models.lm.config import LMConfig, SHAPES, ShapeCell
+
+from . import (
+    zamba2_1p2b,
+    musicgen_large,
+    xlstm_1p3b,
+    qwen1p5_110b,
+    llama3p2_3b,
+    nemotron4_15b,
+    qwen2_0p5b,
+    moonshot_v1_16b_a3b,
+    qwen3_moe_30b_a3b,
+    chameleon_34b,
+    so3krates_paper,
+)
+
+_MODULES = {
+    "zamba2-1.2b": zamba2_1p2b,
+    "musicgen-large": musicgen_large,
+    "xlstm-1.3b": xlstm_1p3b,
+    "qwen1.5-110b": qwen1p5_110b,
+    "llama3.2-3b": llama3p2_3b,
+    "nemotron-4-15b": nemotron4_15b,
+    "qwen2-0.5b": qwen2_0p5b,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "chameleon-34b": chameleon_34b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, **overrides) -> LMConfig:
+    cfg = _MODULES[arch].config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> LMConfig:
+    return _MODULES[arch].smoke()
+
+
+def shapes_for(arch: str) -> tuple:
+    """The assigned input shapes for this arch; long_500k only for
+    sub-quadratic (SSM/hybrid) families."""
+    cfg = _MODULES[arch].config()
+    return tuple(s for s in SHAPES
+                 if s.shape_name != "long_500k" or cfg.sub_quadratic)

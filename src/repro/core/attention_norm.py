@@ -1,0 +1,41 @@
+"""Robust attention normalization (paper §III-E).
+
+Cosine attention: l2-normalize queries and keys, logits = tau * <q_hat, k_hat>
+(+ optional invariant bias), softmax. Bounds logits in [-tau, tau] so low-bit
+rounding of q/k cannot let one large magnitude dominate the softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["l2_normalize", "cosine_attention_logits", "robust_attention_weights"]
+
+_EPS = 1e-6
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = _EPS) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=axis, keepdims=True), eps)
+
+
+def cosine_attention_logits(q: jnp.ndarray, k: jnp.ndarray, tau: float = 10.0,
+                            bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (..., n_q, d), k: (..., n_k, d) -> logits (..., n_q, n_k)."""
+    qh = l2_normalize(q)
+    kh = l2_normalize(k)
+    logits = tau * jnp.einsum("...qd,...kd->...qk", qh, kh)
+    if bias is not None:
+        logits = logits + bias
+    return logits
+
+
+def robust_attention_weights(q: jnp.ndarray, k: jnp.ndarray, tau: float = 10.0,
+                             bias: Optional[jnp.ndarray] = None,
+                             mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logits = cosine_attention_logits(q, k, tau, bias)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e9)
+    return jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True)) / jnp.sum(
+        jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True)),
+        axis=-1, keepdims=True)

@@ -1,0 +1,146 @@
+"""Spherical codebooks for the direction quantizer Q_d : S^2 -> C.
+
+The paper requires a finite codebook C subset S^2 whose nearest-neighbour map
+approximately commutes with rotations. We provide:
+
+* ``fibonacci_sphere`` — near-uniform covering of S^2 (the default; covering
+  radius decays ~ 1/sqrt(N), close to optimal for large N).
+* ``octahedral_sphere`` — a grid symmetric under the octahedral subgroup of
+  SO(3); exact commutation holds for the 24 rotations of that subgroup, which
+  empirically lowers the *average* commutation error for small N.
+* ``covering_radius`` — Monte-Carlo estimate of delta_d (Eq. 6).
+* ``nearest_code`` — the Q_d map itself (argmax of dot products; on S^2 the
+  geodesic-nearest codeword is the max-cosine codeword).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fibonacci_sphere",
+    "octahedral_sphere",
+    "make_codebook",
+    "nearest_code",
+    "quantize_direction",
+    "covering_radius",
+]
+
+
+def fibonacci_sphere(n: int) -> np.ndarray:
+    """n near-uniform points on S^2 via the Fibonacci lattice. (n, 3) float32."""
+    i = np.arange(n, dtype=np.float64) + 0.5
+    phi = np.arccos(1.0 - 2.0 * i / n)           # polar angle
+    golden = np.pi * (1.0 + 5.0 ** 0.5)           # golden angle * 2
+    theta = golden * i
+    x = np.sin(phi) * np.cos(theta)
+    y = np.sin(phi) * np.sin(theta)
+    z = np.cos(phi)
+    pts = np.stack([x, y, z], axis=-1)
+    return (pts / np.linalg.norm(pts, axis=-1, keepdims=True)).astype(np.float32)
+
+
+def octahedral_sphere(n: int) -> np.ndarray:
+    """Codebook closed under the octahedral rotation subgroup.
+
+    Takes a Fibonacci seed restricted to one fundamental domain and replicates
+    it by the 24 rotation matrices of the cube/octahedron group, then dedups.
+    Resulting size is <= n (rounded to a multiple of orbit sizes).
+    """
+    group = _octahedral_rotations()
+    seed_n = max(1, n // 24)
+    seed = fibonacci_sphere(seed_n * 4)  # oversample, keep fundamental domain
+    # fundamental domain of the octahedral group: x >= y >= z >= 0 (approx)
+    mask = (seed[:, 0] >= seed[:, 1]) & (seed[:, 1] >= seed[:, 2]) & (seed[:, 2] >= 0)
+    seed = seed[mask][:seed_n]
+    if len(seed) == 0:
+        seed = np.array([[1.0, 0.0, 0.0]], dtype=np.float32)
+    orbit = np.einsum("gij,nj->gni", group, seed).reshape(-1, 3)
+    # dedup points that coincide (seed on a symmetry axis has small orbit)
+    rounded = np.round(orbit * 1e5).astype(np.int64)
+    _, idx = np.unique(rounded, axis=0, return_index=True)
+    pts = orbit[np.sort(idx)]
+    return (pts / np.linalg.norm(pts, axis=-1, keepdims=True)).astype(np.float32)
+
+
+def _octahedral_rotations() -> np.ndarray:
+    """The 24 rotation matrices of the octahedral group (signed permutations
+    with determinant +1)."""
+    mats = []
+    import itertools
+    for perm in itertools.permutations(range(3)):
+        for signs in itertools.product([1, -1], repeat=3):
+            m = np.zeros((3, 3))
+            for r, c in enumerate(perm):
+                m[r, c] = signs[r]
+            if np.isclose(np.linalg.det(m), 1.0):
+                mats.append(m)
+    out = np.stack(mats).astype(np.float32)
+    assert out.shape[0] == 24
+    return out
+
+
+def make_codebook(bits: int = 8, kind: str = "fibonacci") -> jnp.ndarray:
+    """Codebook with 2**bits entries (or the closest achievable size)."""
+    n = 2 ** bits
+    if kind == "fibonacci":
+        pts = fibonacci_sphere(n)
+    elif kind == "octahedral":
+        pts = octahedral_sphere(n)
+    else:
+        raise ValueError(f"unknown codebook kind {kind!r}")
+    return jnp.asarray(pts)
+
+
+_NEAREST_CHUNK = 4096
+
+
+def nearest_code(u: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Index of the geodesic-nearest codeword for each unit vector.
+
+    u: (..., 3); codebook: (N, 3). Returns int32 (...,).
+    Large codebooks (16-bit = 65536 entries) are scanned in chunks so the
+    score matrix never materializes at full width (the Pallas kernel tiles
+    the same way in VMEM).
+    """
+    n = codebook.shape[0]
+    if n <= _NEAREST_CHUNK:
+        scores = jnp.einsum("...d,nd->...n", u, codebook)
+        return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+    pad = (-n) % _NEAREST_CHUNK
+    cb = jnp.concatenate([codebook, jnp.tile(codebook[:1], (pad, 1))]) \
+        if pad else codebook
+    chunks = cb.reshape(-1, _NEAREST_CHUNK, 3)
+
+    def step(carry, ck):
+        best, idx, base = carry
+        scores = jnp.einsum("...d,nd->...n", u, ck[0])
+        s = jnp.max(scores, axis=-1)
+        i = jnp.argmax(scores, axis=-1).astype(jnp.int32) + base
+        take = s > best
+        return (jnp.where(take, s, best), jnp.where(take, i, idx),
+                base + _NEAREST_CHUNK), None
+
+    init = (jnp.full(u.shape[:-1], -2.0, u.dtype),
+            jnp.zeros(u.shape[:-1], jnp.int32), jnp.int32(0))
+    (best, idx, _), _ = jax.lax.scan(step, init, chunks[:, None])
+    return idx
+
+
+def quantize_direction(u: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Q_d: snap unit vectors to their nearest codeword. Shape-preserving."""
+    idx = nearest_code(u, codebook)
+    return codebook[idx]
+
+
+def covering_radius(codebook: jnp.ndarray, n_samples: int = 200_000,
+                    seed: int = 0) -> float:
+    """Monte-Carlo estimate of delta_d = sup_u min_c angle(u, c) (radians)."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (n_samples, 3))
+    u = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    cos = jnp.einsum("sd,nd->sn", u, codebook)
+    best = jnp.max(cos, axis=-1)
+    return float(jnp.max(jnp.arccos(jnp.clip(best, -1.0, 1.0))))

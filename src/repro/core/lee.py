@@ -1,0 +1,53 @@
+"""Local Equivariance Error (LEE) — paper Eq. 1 — metric and regularizer.
+
+LEE(f; G, R) = || f(rho_in(R) . G) - rho_out(R) f(G) ||_2
+
+For force-field models: rho_in rotates atom coordinates (and any input
+vectors), rho_out rotates predicted per-atom force vectors; scalar outputs
+(energies) are invariant so their rho_out is identity.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["random_rotation", "random_rotations", "lee", "lee_regularizer"]
+
+
+def random_rotation(key: jax.Array) -> jnp.ndarray:
+    """Uniform (Haar) random rotation via normalized quaternion. (3,3)."""
+    q = jax.random.normal(key, (4,))
+    q = q / jnp.linalg.norm(q)
+    w, x, y, z = q[0], q[1], q[2], q[3]
+    return jnp.array([
+        [1 - 2 * (y * y + z * z), 2 * (x * y - z * w), 2 * (x * z + y * w)],
+        [2 * (x * y + z * w), 1 - 2 * (x * x + z * z), 2 * (y * z - x * w)],
+        [2 * (x * z - y * w), 2 * (y * z + x * w), 1 - 2 * (x * x + y * y)],
+    ])
+
+
+def random_rotations(key: jax.Array, n: int) -> jnp.ndarray:
+    return jax.vmap(random_rotation)(jax.random.split(key, n))
+
+
+def lee(force_fn: Callable[[jnp.ndarray], jnp.ndarray],
+        coords: jnp.ndarray, rot: jnp.ndarray) -> jnp.ndarray:
+    """LEE for a force model. coords: (n_atoms, 3); rot: (3, 3).
+
+    force_fn maps coordinates -> per-atom forces (n_atoms, 3). Other inputs
+    (atom types etc.) should be closed over.
+    """
+    f_rot_in = force_fn(coords @ rot.T)      # f(R . G)
+    rot_f = force_fn(coords) @ rot.T          # rho(R) f(G)
+    return jnp.linalg.norm(f_rot_in - rot_f)
+
+
+def lee_regularizer(force_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                    coords: jnp.ndarray, key: jax.Array,
+                    n_rotations: int = 1) -> jnp.ndarray:
+    """E_R[LEE] estimated with n_rotations samples; differentiable."""
+    rots = random_rotations(key, n_rotations)
+    errs = jax.vmap(lambda R: lee(force_fn, coords, R))(rots)
+    return jnp.mean(errs)

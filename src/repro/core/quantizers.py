@@ -1,0 +1,162 @@
+"""Linear (invariant-branch) quantizers.
+
+Implements the paper's invariant-branch scheme: symmetric linear quantization
+with straight-through-estimator gradients, per-tensor or per-channel scales,
+for both weights (W4/W8) and activations (A8).
+
+All fake-quant functions are differentiable via STE and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "qmax",
+    "abs_max_scale",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "fake_quant_ste",
+    "pack_int4",
+    "unpack_int4",
+    "quantize_log_magnitude",
+    "dequantize_log_magnitude",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of a symmetric linear quantizer."""
+
+    bits: int = 8
+    # axis (or axes) along which a separate scale is computed; None = per-tensor
+    channel_axis: Optional[int] = None
+    # numerical floor for scales so zero tensors don't produce inf
+    eps: float = 1e-8
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+
+def qmax(bits: int) -> int:
+    """Largest representable magnitude of a signed symmetric b-bit grid."""
+    return 2 ** (bits - 1) - 1
+
+
+def abs_max_scale(x: jnp.ndarray, bits: int, channel_axis: Optional[int] = None,
+                  eps: float = 1e-8) -> jnp.ndarray:
+    """Symmetric abs-max calibration: scale s.t. max|x| maps to qmax."""
+    if channel_axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    return jnp.maximum(amax, eps) / qmax(bits)
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Real quantization to a signed integer grid (returns int8 storage)."""
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(scale.dtype) * scale
+
+
+@jax.custom_vjp
+def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize without STE (gradients are zero a.e.)."""
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    return q * scale
+
+
+def fake_quant_ste(x: jnp.ndarray, bits: int = 8,
+                   channel_axis: Optional[int] = None,
+                   scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Differentiable fake quantization with straight-through rounding.
+
+    The clip is expressed with jnp.clip on the pre-round value so gradients
+    outside the representable range are zero (standard QAT saturation).
+    """
+    if scale is None:
+        scale = abs_max_scale(jax.lax.stop_gradient(x), bits, channel_axis)
+    m = qmax(bits)
+    y = jnp.clip(x / scale, -m, m)
+    return _ste_round(y) * scale
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two nibbles per byte) — storage format for W4 weights.
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int values in [-8, 7] pairwise along the last axis into uint8.
+
+    Last axis must be even. out.shape[-1] == q.shape[-1] // 2.
+    """
+    if q.shape[-1] % 2 != 0:
+        raise ValueError(f"last dim must be even, got {q.shape}")
+    q = q.astype(jnp.int32) & 0xF  # two's complement nibble
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_int4; returns int8 values in [-8, 7]."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    # sign-extend nibbles
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Log-domain magnitude quantizer (the Q_m of MDDQ).
+# Vector magnitudes follow a Chi distribution (paper §III-D); a log-domain
+# grid allocates resolution multiplicatively, which keeps *relative* magnitude
+# error uniform — the right notion for force vectors spanning decades.
+# ---------------------------------------------------------------------------
+
+def quantize_log_magnitude(m: jnp.ndarray, bits: int = 8,
+                           m_min: float = 1e-6, m_max: float = 1e3) -> jnp.ndarray:
+    """Quantize positive magnitudes on a log grid. Returns integer codes."""
+    levels = 2 ** bits - 1
+    lm = jnp.log(jnp.clip(m, m_min, m_max))
+    lo, hi = jnp.log(m_min), jnp.log(m_max)
+    t = (lm - lo) / (hi - lo)
+    return jnp.clip(jnp.round(t * levels), 0, levels).astype(jnp.int32)
+
+
+def dequantize_log_magnitude(code: jnp.ndarray, bits: int = 8,
+                             m_min: float = 1e-6, m_max: float = 1e3) -> jnp.ndarray:
+    levels = 2 ** bits - 1
+    lo, hi = jnp.log(m_min), jnp.log(m_max)
+    t = code.astype(jnp.float32) / levels
+    return jnp.exp(lo + t * (hi - lo))

@@ -1,0 +1,54 @@
+"""Straight-through estimators, including the paper's Geometric STE.
+
+Geometric STE (paper Eq. 8): for a unit direction u quantized to codeword q,
+the backward pass projects the incoming gradient onto the tangent space of S^2
+at u:  dL/du := (I - u u^T) dL/dq.  Radial components are structurally invalid
+(MDDQ fixes ||u|| = 1) and act as noise under plain STE; projecting them out
+keeps the first-order update on the manifold (Prop III.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["geometric_ste_direction", "identity_ste"]
+
+
+@jax.custom_vjp
+def identity_ste(u: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Plain STE: forward -> q, backward -> pass gradient straight to u."""
+    return q
+
+
+def _id_fwd(u, q):
+    return q, None
+
+
+def _id_bwd(_, g):
+    return (g, None)
+
+
+identity_ste.defvjp(_id_fwd, _id_bwd)
+
+
+@jax.custom_vjp
+def geometric_ste_direction(u: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Forward: quantized direction q. Backward: tangent-projected gradient.
+
+    u: (..., 3) unit directions (pre-quantization)
+    q: (..., 3) codebook directions (stop-gradient side)
+    """
+    return q
+
+
+def _geo_fwd(u, q):
+    return q, u
+
+
+def _geo_bwd(u, g):
+    # (I - u u^T) g  ==  g - u <u, g>
+    radial = jnp.sum(u * g, axis=-1, keepdims=True)
+    return (g - u * radial, None)
+
+
+geometric_ste_direction.defvjp(_geo_fwd, _geo_bwd)

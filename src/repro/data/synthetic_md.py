@@ -1,0 +1,207 @@
+"""Synthetic molecular-dynamics dataset (rMD17 stand-in).
+
+rMD17/azobenzene is not downloadable in this offline container, so we build an
+azobenzene-like 24-atom molecule (C12 H10 N2) with a classical force field
+(harmonic bonds + harmonic angles + Lennard-Jones non-bonded) and sample
+configurations around equilibrium. Energies/forces labels come from the
+classical potential; the *relative* quantization claims of the paper (naive
+INT8 breaks symmetry/stability, GAQ preserves both) are what we validate.
+
+Units: eV, Angstrom (so "meV" numbers are 1e-3 of these energies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# species codes
+C, N, H = 6, 7, 1
+SPECIES_MAP = {1: 0, 6: 1, 7: 2}  # -> embedding rows
+
+
+def azobenzene_topology():
+    """Coordinates (24,3), species (24,), bonds [(i,j,r0,k)], angles [(i,j,k,th0,ka)].
+
+    Atom order: ring A carbons 0-5, ring B carbons 6-11, N 12-13, H 14-23.
+    """
+    cc, ch, cn, nn = 1.39, 1.08, 1.43, 1.25
+    coords = np.zeros((24, 3))
+    # two hexagons in the xy-plane, bridged by N=N
+    for r, (cx, sign) in enumerate([(-2.85, -1), (2.85, 1)]):
+        for i in range(6):
+            ang = np.pi / 3 * i + (np.pi / 6 if sign > 0 else -np.pi / 6)
+            coords[6 * r + i] = [cx + cc * np.cos(ang), cc * np.sin(ang), 0.0]
+    # N atoms between the rings
+    coords[12] = [-0.95, 0.30, 0.0]
+    coords[13] = [0.95, -0.30, 0.0]
+    species = np.array([C] * 12 + [N] * 2 + [H] * 10)
+
+    bonds: List[Tuple[int, int, float, float]] = []
+    kb, kbh = 25.0, 28.0  # eV / A^2
+    for r in range(2):
+        for i in range(6):
+            bonds.append((6 * r + i, 6 * r + (i + 1) % 6, cc, kb))
+    # ring-N bonds: attach N12 to ring-A atom closest, N13 to ring-B
+    ra = int(np.argmin(np.linalg.norm(coords[0:6] - coords[12], axis=1)))
+    rb = int(np.argmin(np.linalg.norm(coords[6:12] - coords[13], axis=1))) + 6
+    bonds.append((ra, 12, cn, kb))
+    bonds.append((rb, 13, cn, kb))
+    bonds.append((12, 13, nn, 35.0))
+    # hydrogens on the remaining ring carbons
+    h_idx = 14
+    for r, ring in enumerate([range(0, 6), range(6, 12)]):
+        center = coords[list(ring)].mean(0)
+        for ci in ring:
+            if ci in (ra, rb):
+                continue
+            direction = coords[ci] - center
+            direction /= np.linalg.norm(direction)
+            coords[h_idx] = coords[ci] + ch * direction
+            bonds.append((ci, h_idx, ch, kbh))
+            h_idx += 1
+    assert h_idx == 24
+
+    # angles: for every atom with >= 2 bonds, all bonded pairs
+    adj = {i: [] for i in range(24)}
+    for i, j, *_ in bonds:
+        adj[i].append(j)
+        adj[j].append(i)
+    angles: List[Tuple[int, int, int, float, float]] = []
+    for j in range(24):
+        nb = adj[j]
+        for a in range(len(nb)):
+            for b in range(a + 1, len(nb)):
+                i, k = nb[a], nb[b]
+                v1 = coords[i] - coords[j]
+                v2 = coords[k] - coords[j]
+                th0 = float(np.arccos(np.clip(
+                    v1 @ v2 / (np.linalg.norm(v1) * np.linalg.norm(v2)), -1, 1)))
+                angles.append((i, j, k, th0, 3.0))
+    return coords, species, bonds, angles
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassicalFF:
+    bond_idx: jnp.ndarray    # (B, 2) int
+    bond_r0: jnp.ndarray     # (B,)
+    bond_k: jnp.ndarray      # (B,)
+    angle_idx: jnp.ndarray   # (A, 3) int
+    angle_th0: jnp.ndarray   # (A,)
+    angle_k: jnp.ndarray     # (A,)
+    nb_pairs: jnp.ndarray    # (P, 2) non-bonded pairs
+    lj_eps: float = 0.002
+    lj_sigma: float = 2.4
+
+    def energy(self, coords: jnp.ndarray) -> jnp.ndarray:
+        ri = coords[self.bond_idx[:, 0]]
+        rj = coords[self.bond_idx[:, 1]]
+        d = jnp.linalg.norm(ri - rj, axis=-1)
+        e_bond = jnp.sum(self.bond_k * (d - self.bond_r0) ** 2)
+
+        a = coords[self.angle_idx[:, 0]] - coords[self.angle_idx[:, 1]]
+        b = coords[self.angle_idx[:, 2]] - coords[self.angle_idx[:, 1]]
+        cos = jnp.sum(a * b, -1) / (
+            jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-9)
+        th = jnp.arccos(jnp.clip(cos, -1 + 1e-7, 1 - 1e-7))
+        e_angle = jnp.sum(self.angle_k * (th - self.angle_th0) ** 2)
+
+        rij = coords[self.nb_pairs[:, 0]] - coords[self.nb_pairs[:, 1]]
+        d2 = jnp.sum(rij ** 2, -1)
+        s6 = (self.lj_sigma ** 2 / d2) ** 3
+        e_lj = jnp.sum(4 * self.lj_eps * (s6 ** 2 - s6))
+        return e_bond + e_angle + e_lj
+
+    def forces(self, coords: jnp.ndarray) -> jnp.ndarray:
+        return -jax.grad(self.energy)(coords)
+
+
+def make_ff() -> Tuple[jnp.ndarray, jnp.ndarray, ClassicalFF]:
+    coords, species, bonds, angles = azobenzene_topology()
+    bonded = {(min(i, j), max(i, j)) for i, j, *_ in bonds}
+    # 1-3 pairs (share an angle) are also excluded from LJ
+    for i, j, k, *_ in angles:
+        bonded.add((min(i, k), max(i, k)))
+    nb = [(i, j) for i in range(24) for j in range(i + 1, 24)
+          if (i, j) not in bonded]
+    ff = ClassicalFF(
+        bond_idx=jnp.array([(i, j) for i, j, *_ in bonds]),
+        bond_r0=jnp.array([b[2] for b in bonds]),
+        bond_k=jnp.array([b[3] for b in bonds]),
+        angle_idx=jnp.array([(i, j, k) for i, j, k, *_ in angles]),
+        angle_th0=jnp.array([a[3] for a in angles]),
+        angle_k=jnp.array([a[4] for a in angles]),
+        nb_pairs=jnp.array(nb),
+    )
+    sp = jnp.array([SPECIES_MAP[int(s)] for s in species])
+    return jnp.asarray(coords), sp, ff
+
+
+def sample_dataset(key: jax.Array, n_samples: int, sigma: float = 0.04,
+                   standardize: bool = True, sigma_mixture: bool = True):
+    """Perturb equilibrium geometry; label with the classical FF.
+
+    Returns dict with coords (S, 24, 3), energy (S,), forces (S, 24, 3),
+    species (24,), plus standardization constants e_shift / e_scale so MAEs
+    can be reported in the original eV units
+    (E_orig = E * e_scale + e_shift, F_orig = F * e_scale).
+    """
+    eq, species, ff = make_ff()
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(k1, (n_samples,) + eq.shape)
+    if sigma_mixture:
+        # broaden PES coverage so learned potentials stay stable in MD
+        sigmas = jnp.array([0.02, 0.05, 0.08, 0.12])
+        sig = sigmas[jax.random.randint(k2, (n_samples,), 0, len(sigmas))]
+        noise = noise * sig[:, None, None]
+    else:
+        noise = noise * sigma
+    coords = eq[None] + noise
+    e = jax.vmap(ff.energy)(coords)
+    f = jax.vmap(ff.forces)(coords)
+    e_shift = jnp.mean(e) if standardize else jnp.zeros(())
+    e_scale = jnp.maximum(jnp.std(e), 1e-6) if standardize else jnp.ones(())
+    return {"coords": coords, "energy": (e - e_shift) / e_scale,
+            "forces": f / e_scale, "species": species,
+            "e_shift": e_shift, "e_scale": e_scale}
+
+
+def sample_dataset_md(key: jax.Array, n_samples: int,
+                      temperature_K: float = 300.0, dt_fs: float = 0.5,
+                      stride: int = 40, standardize: bool = True):
+    """Sample configurations from a classical-FF NVE trajectory at the given
+    temperature — the rMD17 protocol (frames of an MD run), which covers the
+    thermally accessible region so learned potentials stay stable in MD.
+    """
+    from repro.md.nve import _FS, init_state
+
+    eq, species, ff = make_ff()
+    masses = jnp.array([12.011] * 12 + [14.007] * 2 + [1.008] * 10)
+    state = init_state(key, eq, masses, ff.forces, temperature_K)
+    dt = dt_fs * _FS
+    inv_m = (1.0 / masses)[:, None]
+
+    def step(s, _):
+        r, v, f = s
+        v_half = v + 0.5 * dt * f * inv_m
+        r_new = r + dt * v_half
+        f_new = ff.forces(r_new)
+        v_new = v_half + 0.5 * dt * f_new * inv_m
+        return (r_new, v_new, f_new), None
+
+    def frame(s, _):
+        s, _ = jax.lax.scan(step, s, None, length=stride)
+        return s, s[0]
+
+    s0 = (state.coords, state.veloc, state.forces)
+    _, coords = jax.lax.scan(frame, s0, None, length=n_samples)
+    e = jax.vmap(ff.energy)(coords)
+    f = jax.vmap(ff.forces)(coords)
+    e_shift = jnp.mean(e) if standardize else jnp.zeros(())
+    e_scale = jnp.maximum(jnp.std(e), 1e-6) if standardize else jnp.ones(())
+    return {"coords": coords, "energy": (e - e_shift) / e_scale,
+            "forces": f / e_scale, "species": species,
+            "e_shift": e_shift, "e_scale": e_scale}

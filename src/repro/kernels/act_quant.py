@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: fused per-row activation quantization (the A8 step).
+
+Dynamic activation quantization runs before every quantized matmul; unfused
+it costs one full read (abs-max) + one read/write (quantize) of the
+activation tensor. This kernel fuses both into a single VMEM-resident pass
+per (bm, K) row block: one HBM read, int8 write, f32 scale write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+
+
+def _act_quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]                                   # (bm, K) f32
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def act_quant(x: jnp.ndarray, *, bm: int = DEFAULT_BM,
+              interpret: bool = False):
+    """x: (M, K) f32 -> (q int8 (M, K), scale f32 (M, 1)), per-row abs-max."""
+    m, k = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0, f"M={m} % block {bm} != 0"
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _act_quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

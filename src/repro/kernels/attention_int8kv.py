@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: flash-decode attention with an int8-quantized KV cache.
+
+Beyond-paper extension of the memory-wall argument: at decode time the KV
+cache dominates HBM traffic (it is read in full for every generated token).
+Quantizing K/V to int8 with per-token scales quarters that traffic; this
+kernel streams int8 KV tiles into VMEM, dequantizes in-register, and runs an
+online-softmax (flash) reduction over sequence tiles.
+
+Shapes (one decoded token):
+  q        (BH, D)      f32   (BH = batch*kv_heads*q_per_kv collapsed)
+  k_q,v_q  (BH, S, D)   int8
+  k_s,v_s  (BH, S)      f32   per-token scales
+  out      (BH, D)      f32
+
+Grid = (BH, S/bs) with S innermost; running max/sum/acc live in VMEM scratch
+and persist across the S iterations (TPU grid order is sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 512
+_NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_s: int, softmax_scale: float):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                                  # (1, D)
+    k = kq_ref[0].astype(jnp.float32) * ks_ref[0][:, None]   # (bs, D)
+    v = vq_ref[0].astype(jnp.float32) * vs_ref[0][:, None]   # (bs, D)
+
+    logits = (k @ q[0]) * softmax_scale             # (bs,)
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                     # (bs,)
+
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * corr + (p @ v)[None, :]
+    m_ref[0, 0] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] / l_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_int8kv(q, k_q, k_scale, v_q, v_scale, *,
+                            softmax_scale: float | None = None,
+                            bs: int = DEFAULT_BS, interpret: bool = False):
+    bh, d = q.shape
+    bh2, seq, d2 = k_q.shape
+    assert bh == bh2 and d == d2 and seq % bs == 0, \
+        f"bad shapes q{q.shape} k{k_q.shape} bs={bs}"
+    if softmax_scale is None:
+        softmax_scale = 1.0 / (d ** 0.5)
+    n_s = seq // bs
+    grid = (bh, n_s)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n_s=n_s,
+                          softmax_scale=float(softmax_scale)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, bs, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs), lambda b, s: (b, s)),
+            pl.BlockSpec((1, bs, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs), lambda b, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running denom
+            pltpu.VMEM((1, d), jnp.float32),   # running numerator
+        ],
+        interpret=interpret,
+    )(q, k_q, k_scale, v_q, v_scale)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: MDDQ encode (direction codebook argmax + log-magnitude).
+
+The hot loop of GAQ serving: for a block of l=1 feature vectors, find the
+nearest spherical codeword (argmax of dot products against the codebook) and
+the log-domain magnitude code. Memory layout is TPU-native: vectors arrive as
+three planar components (N,) each (so the minor dimension is the N lane axis,
+128-aligned), the codebook sits VMEM-resident as (3, C) with C a multiple of
+128, and the score matrix (bn, C) is a VPU-friendly outer product.
+
+Compression: 3x f32 (96 bits) -> dir_bits + mag_bits (16 bits) = 6x.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 1024  # vectors per block
+
+
+def _mddq_kernel(vx_ref, vy_ref, vz_ref, cb_ref, idx_ref, mag_ref, *,
+                 mag_bits: int, m_min: float, m_max: float):
+    vx, vy, vz = vx_ref[...], vy_ref[...], vz_ref[...]      # (bn,)
+    m = jnp.sqrt(vx * vx + vy * vy + vz * vz)               # (bn,)
+    inv = 1.0 / jnp.maximum(m, 1e-12)
+    ux, uy, uz = vx * inv, vy * inv, vz * inv
+
+    cb = cb_ref[...]                                         # (3, C)
+    # scores (bn, C): outer products on the VPU; padded codebook entries are
+    # (0,0,0) -> score 0 < 1 >= some real entry's score for any unit u? Not
+    # guaranteed; pad entries are set to (0,0,-2) upstream so score <= -? No:
+    # we pad with the first codeword so argmax never selects junk.
+    scores = (ux[:, None] * cb[0][None, :]
+              + uy[:, None] * cb[1][None, :]
+              + uz[:, None] * cb[2][None, :])
+    idx_ref[...] = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+    levels = 2 ** mag_bits - 1
+    lo = jnp.log(m_min)
+    hi = jnp.log(m_max)
+    t = (jnp.log(jnp.clip(m, m_min, m_max)) - lo) / (hi - lo)
+    mag_ref[...] = jnp.clip(jnp.round(t * levels), 0, levels).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "mag_bits", "interpret"))
+def mddq_encode_kernel(vx, vy, vz, codebook_t, *, bn=DEFAULT_BN, mag_bits=8,
+                       m_min=1e-6, m_max=1e3, interpret=False):
+    """vx/vy/vz: (N,) f32 planar components; codebook_t: (3, C) f32.
+
+    N must be a multiple of bn; C a multiple of 128 (pad with copies of the
+    first codeword). Returns (idx int32 (N,), mag int32 (N,)).
+    """
+    n = vx.shape[0]
+    assert n % bn == 0, f"N={n} not divisible by block {bn}"
+    c = codebook_t.shape[1]
+    assert c % 128 == 0, f"codebook size {c} must be 128-aligned (pad it)"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_mddq_kernel, mag_bits=mag_bits, m_min=m_min,
+                          m_max=m_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((3, c), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vx, vy, vz, codebook_t)

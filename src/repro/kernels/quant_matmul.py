@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused dequantize-matmul for W8A8 and W4A8.
+
+The paper's speedup comes from streaming quantized weights (4x / 8x fewer
+HBM bytes) and dequantizing on the fly next to the compute unit. On TPU that
+means: int8/int4 weight tiles live in VMEM, nibble-unpack + scale happen in
+registers, and the MXU consumes int8 x int8 -> int32 (W8A8) or bf16 (after
+in-kernel dequant, W4A8).
+
+Layouts (MXU-aligned, multiples of 128 on the minor dims):
+  a_q     (M, K)  int8     per-row-quantized activations
+  a_scale (M, 1)  f32
+  w_q     (K, N)  int8     (W8 path)   per-column scales w_scale (1, N) f32
+  w_p     (K, N//2) uint8  (W4 path)   two nibbles per byte along N
+  out     (M, N)  f32
+
+Grid = (M/bm, N/bn, K/bk), K innermost; partial products accumulate into an
+f32 VMEM scratch tile and are written out on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _w8a8_kernel(a_ref, as_ref, w_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                        # (bm, bk) int8
+    w = w_ref[...]                        # (bk, bn) int8
+    # int8 x int8 -> int32 on the MXU
+    acc_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] * as_ref[...] * ws_ref[...]
+
+
+def _unpack_nibbles(p: jnp.ndarray) -> jnp.ndarray:
+    """(bk, bn//2) uint8 -> (bk, bn) int8, low nibble first."""
+    p = p.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    # interleave: out[:, 2i] = lo[:, i], out[:, 2i+1] = hi[:, i]
+    stacked = jnp.stack([lo, hi], axis=-1)          # (bk, bn//2, 2)
+    return stacked.reshape(p.shape[0], p.shape[1] * 2).astype(jnp.int8)
+
+
+def _w4a8_kernel(a_ref, as_ref, wp_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                        # (bm, bk) int8
+    w = _unpack_nibbles(wp_ref[...])      # (bk, bn) int8
+    acc_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] * as_ref[...] * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w8a8_matmul(a_q, a_scale, w_q, w_scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                bk=DEFAULT_BK, interpret=False):
+    m, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape {(m, k, n)} not divisible by blocks {(bm, bn, bk)}"
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_w8a8_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_q, a_scale, w_q, w_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w4a8_matmul(a_q, a_scale, w_packed, w_scale, *, bm=DEFAULT_BM,
+                bn=DEFAULT_BN, bk=DEFAULT_BK, interpret=False):
+    m, k = a_q.shape
+    k2, n_half = w_packed.shape
+    n = n_half * 2
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape {(m, k, n)} not divisible by blocks {(bm, bn, bk)}"
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_w4a8_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_q, a_scale, w_packed, w_scale)

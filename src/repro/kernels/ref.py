@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import unpack_int4
+
+
+# --- quant_matmul ----------------------------------------------------------
+
+def w8a8_matmul_ref(a_q, a_scale, w_q, w_scale):
+    """int8 x int8 matmul with row/col scales. All math in f32/int32."""
+    acc = jnp.matmul(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * a_scale * w_scale
+
+
+def w4a8_matmul_ref(a_q, a_scale, w_packed, w_scale):
+    w_q = unpack_int4(w_packed)  # unpack along N: (K, N//2) -> (K, N)
+    return w8a8_matmul_ref(a_q, a_scale, w_q, w_scale)
+
+
+# --- mddq -------------------------------------------------------------------
+
+def mddq_encode_ref(v, codebook, mag_bits=8, m_min=1e-6, m_max=1e3):
+    """v: (N, 3) -> (dir_idx int32 (N,), mag_code int32 (N,))."""
+    m = jnp.linalg.norm(v, axis=-1)
+    u = v / jnp.maximum(m[..., None], 1e-12)
+    idx = jnp.argmax(u @ codebook.T, axis=-1).astype(jnp.int32)
+    levels = 2 ** mag_bits - 1
+    lo, hi = jnp.log(m_min), jnp.log(m_max)
+    t = (jnp.log(jnp.clip(m, m_min, m_max)) - lo) / (hi - lo)
+    mag = jnp.clip(jnp.round(t * levels), 0, levels).astype(jnp.int32)
+    return idx, mag
+
+
+# --- int8-KV decode attention ------------------------------------------------
+
+def decode_attention_int8kv_ref(q, k_q, k_scale, v_q, v_scale, *, softmax_scale):
+    """One-token flash-decode with int8 KV cache.
+
+    q: (BH, D) f32; k_q/v_q: (BH, S, D) int8; k_scale/v_scale: (BH, S) f32.
+    Returns (BH, D) f32.
+    """
+    k = k_q.astype(jnp.float32) * k_scale[..., None]
+    v = v_q.astype(jnp.float32) * v_scale[..., None]
+    logits = jnp.einsum("bd,bsd->bs", q, k) * softmax_scale
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bs,bsd->bd", w, v)

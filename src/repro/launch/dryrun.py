@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices build the production meshes; jax.jit(...).lower(...).compile()
+must succeed, memory_analysis() proves per-device fit, cost_analysis() +
+collective parsing feed the roofline (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single [--quant serve_w8a8] [--kv-quant]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Writes artifacts/dryrun/<arch>__<shape>__<mesh>[__<tag>].json
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (abstract_cache, abstract_opt_state,
+                                abstract_params, input_specs, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.launch import costs as costs_lib
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.models.lm.config import SHAPES
+from repro.optim.adamw import AdamW
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts",
+                   "dryrun")
+
+def _spec_trees(cfg, cell, mesh, policy="tp"):
+    params = abstract_params(cfg)
+    p_specs = shd.param_specs(params, cfg, mesh, policy)
+    b_specs = shd.batch_specs(cfg, cell, mesh, policy)
+    return params, p_specs, b_specs
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             quant_mode: str = "none", kv_quant: bool = False,
+             kv_bits: int = 8, kv_replicate: int = 1,
+             attn_chunk_q: int = 1024, remat: bool = False,
+             act_sharding: str = "none", policy: str = "tp",
+             norm_f32: bool = True, grad_rs: bool = False,
+             mlstm_state_shard: bool = False, tag: str = "") -> dict:
+    cell = next(s for s in SHAPES if s.shape_name == shape_name)
+    cfg = configs.get_config(arch, quant_mode=quant_mode, kv_quant=kv_quant,
+                             kv_bits=kv_bits, kv_replicate=kv_replicate,
+                             attn_chunk_q=attn_chunk_q, remat=remat,
+                             act_sharding=act_sharding, norm_f32=norm_f32)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+
+    params, p_specs, b_specs = _spec_trees(cfg, cell, mesh, policy)
+    p_sh = shd.to_shardings(p_specs, mesh)
+    batch = input_specs(cfg, cell)
+    b_sh = {k: NamedSharding(mesh, b_specs[k]) for k in batch}
+
+    if cell.kind == "train":
+        opt = AdamW(lr=1e-4, weight_decay=0.1)
+        opt_state = abstract_opt_state(cfg, opt)
+        # AdamW mu/nu mirror the parameter shardings; step counter replicated
+        from repro.optim.adamw import AdamWState
+        opt_sh = AdamWState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh)
+        step = make_train_step(cfg, opt,
+                               grad_specs=p_specs if grad_rs else None)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, NamedSharding(mesh, P())),
+                         donate_argnums=(0, 1))
+        args = (params, opt_state, batch)
+    elif cell.kind == "prefill":
+        step = make_prefill_step(cfg)
+        logits_sh = NamedSharding(mesh, P(None, None, "model"))
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=logits_sh)
+        args = (params, batch)
+    else:  # decode
+        cache = abstract_cache(cfg, cell)
+        c_specs = shd.cache_specs(cache, cfg, cell, mesh,
+                                  mlstm_state_shard=mlstm_state_shard)
+        c_sh = shd.to_shardings(c_specs, mesh)
+        step = make_serve_step(cfg)
+        logits_sh = NamedSharding(mesh, P(None, "model"))
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, b_sh["tokens"]
+                                       if "tokens" in b_sh else b_sh["embeds"],
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(1,))
+        tok = batch.get("tokens", batch.get("embeds"))
+        args = (params, cache, tok, jax.ShapeDtypeStruct((), jnp.int32))
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll_bytes, coll_counts = analyze_collectives(compiled.as_text())
+    an_flops = costs_lib.cell_flops(cfg, cell)
+    an_bytes = costs_lib.cell_hbm_bytes(cfg, cell)
+    mflops = costs_lib.model_flops(cfg, cell)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "quant_mode": quant_mode, "kv_quant": kv_quant, "tag": tag,
+        "act_sharding": act_sharding, "policy": policy,
+        "kind": cell.kind, "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "n_devices": int(len(mesh.devices.ravel())),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+        },
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "analytic_flops": an_flops,
+        "analytic_hbm_bytes": an_bytes,
+        "model_flops": mflops,
+        "param_count": configs.get_config(arch).param_count(),
+        "active_param_count": configs.get_config(arch).active_param_count(),
+    }
+    return rec
+
+
+def cell_path(arch, shape, mesh_kind, tag=""):
+    name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    return os.path.join(ART, name + ".json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--kv-replicate", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--attn-chunk-q", type=int, default=1024)
+    ap.add_argument("--act-sharding", default="none",
+                    choices=["none", "dp", "dp_sp"])
+    ap.add_argument("--policy", default="tp", choices=["tp", "fsdp", "zero3", "cp"])
+    ap.add_argument("--norm-bf16", action="store_true")
+    ap.add_argument("--grad-rs", action="store_true")
+    ap.add_argument("--mlstm-state-shard", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(ART, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s.shape_name) for a in configs.ARCH_IDS
+                 for s in configs.shapes_for(a)]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            path = cell_path(arch, shape, mk, args.tag)
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {path}")
+                continue
+            print(f"[dryrun] {arch} x {shape} x {mk} "
+                  f"quant={args.quant} kv={args.kv_quant}", flush=True)
+            try:
+                rec = run_cell(arch, shape, mk, quant_mode=args.quant,
+                               kv_quant=args.kv_quant, kv_bits=args.kv_bits,
+                               kv_replicate=args.kv_replicate,
+                               remat=args.remat,
+                               attn_chunk_q=args.attn_chunk_q,
+                               act_sharding=args.act_sharding,
+                               policy=args.policy,
+                               norm_f32=not args.norm_bf16,
+                               grad_rs=args.grad_rs,
+                               mlstm_state_shard=args.mlstm_state_shard,
+                               tag=args.tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                print(f"  ok: flops={rec['flops']:.3e} "
+                      f"bytes={rec['bytes_accessed']:.3e} "
+                      f"coll={sum(rec['collective_bytes'].values()):.3e} "
+                      f"compile={rec['compile_s']}s", flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

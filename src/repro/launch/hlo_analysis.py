@@ -1,0 +1,132 @@
+"""Optimized-HLO analysis: collective bytes with while-loop trip expansion.
+
+XLA's executable-level cost_analysis counts each while-loop body ONCE, which
+silently undercounts anything inside a lax.scan (our layer stacks and
+attention/SSD chunk loops). This walker parses the compiled HLO text into
+computations, extracts per-computation collective bytes, reads each loop's
+trip count from its condition computation (the s32 bound constant), and
+multiplies recursively. The result is the true per-step collective traffic
+of the deployed program.
+
+Charging convention: each collective op is charged its RESULT tensor bytes
+(all-reduce: operand size; all-gather: gathered size; reduce-scatter:
+scattered size; all-to-all / collective-permute: transferred size).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(r"=\s*(.+?)\s(" + "|".join(COLLECTIVES) +
+                      r")(?:-start|-done)?\(")
+_WHILE_RE = re.compile(r"\swhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        b = _DTYPE_BYTES.get(m.group(1))
+        if b is None:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return int(total)
+
+
+def split_computations(hlo: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            m = _HDR_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    comps["__entry__"] = entry
+    return comps
+
+
+def analyze_collectives(hlo: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Returns (bytes per collective kind, op-executions per kind), with
+    while-loop bodies multiplied by their trip counts."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__")
+
+    def comp_trip(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        bounds = [int(m.group(1)) for l in lines for m in _CONST_RE.finditer(l)]
+        return max(bounds) if bounds else 1
+
+    local: Dict[str, Tuple[Dict[str, int], Dict[str, int], list]] = {}
+    for name, lines in comps.items():
+        by = {k: 0 for k in COLLECTIVES}
+        ct = {k: 0 for k in COLLECTIVES}
+        whiles = []
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if m and "-done(" not in line:   # count start (or plain), not done
+                kind = m.group(2)
+                by[kind] += _shape_bytes(m.group(1))
+                ct[kind] += 1
+            w = _WHILE_RE.search(line)
+            if w:
+                whiles.append((w.group(1), w.group(2)))
+        local[name] = (by, ct, whiles)
+
+    memo: Dict[str, Tuple[Dict[str, int], Dict[str, int]]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in local or depth > 16:
+            return ({k: 0 for k in COLLECTIVES}, {k: 0 for k in COLLECTIVES})
+        by, ct, whiles = local[name]
+        by, ct = dict(by), dict(ct)
+        for cond, body in whiles:
+            trips = comp_trip(cond)
+            b2, c2 = total(body, depth + 1)
+            for k in COLLECTIVES:
+                by[k] += trips * b2[k]
+                ct[k] += trips * c2[k]
+        memo[name] = (by, ct)
+        return memo[name]
+
+    return total(entry)
+
+
+def loop_summary(hlo: str) -> list:
+    """(cond, body, trips) for every while in the entry — debugging aid."""
+    comps = split_computations(hlo)
+    comps.pop("__entry__")
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond = w.group(1)
+                bounds = [int(m.group(1)) for l in comps.get(cond, [])
+                          for m in _CONST_RE.finditer(l)]
+                out.append((name, w.group(2), max(bounds) if bounds else 1))
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before any jax import, while tests/benches must see
+the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "DATA_AXES", "MODEL_AXIS"]
+
+# batch / sequence shard over these; tensor/expert parallel over MODEL_AXIS
+DATA_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1x1 mesh with the same axis names, for CPU tests of sharded code."""
+    return jax.make_mesh((1, 1), ("data", "model"))

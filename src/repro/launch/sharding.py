@@ -1,0 +1,261 @@
+"""Partition rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Scheme (baseline; §Perf iterates from here):
+  * DP over ("pod", "data") — batch dims.
+  * TP over "model" — Megatron column/row splits: every projection's non-
+    d_model dim (heads*head_dim, d_ff, vocab, d_inner, experts) divides 16
+    for all assigned archs, so weights shard cleanly.
+  * EP: MoE expert axis (leading E of wg/wu/wd) over "model".
+  * Decode caches: batch over DP when divisible, else sequence; heads over
+    "model" when divisible, else sequence/feature.
+Param leaves stacked by scan get a leading None (depth axis is never
+sharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm.config import LMConfig, ShapeCell
+
+M = "model"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# (regex, spec WITHOUT the stacked-depth axis). First match wins.
+_PARAM_RULES = [
+    # embeddings / head
+    (r"^embed$", P(M, None)),
+    (r"^lm_head$", P(None, M)),
+    (r"^final_norm$", P(None)),
+    # attention
+    (r"attn/w[qkv]$", P(None, M)),
+    (r"attn/wo$", P(M, None)),
+    (r"attn/b[qkv]$", P(M)),
+    (r"attn/tau$", P()),
+    # dense mlp
+    (r"mlp/(wg|wu|wi)$", P(None, M)),
+    (r"mlp/wd$", P(M, None)),
+    # moe (expert parallel on leading E)
+    (r"moe/router$", P(None, None)),
+    (r"moe/(wg|wu|wd)$", P(M, None, None)),
+    # mamba2
+    (r"(^|/)m/(w_z|w_x)$", P(None, M)),
+    (r"(^|/)m/(w_B|w_C|w_dt)$", P(None, M)),
+    (r"(^|/)m/conv_w$", P(None, M)),
+    (r"(^|/)m/conv_b$", P(M)),
+    (r"(^|/)m/(A_log|D|dt_bias)$", P(M)),
+    (r"(^|/)m/norm_w$", P(M)),
+    (r"(^|/)m/out_proj$", P(M, None)),
+    # mlstm
+    (r"b/(w_gate|w_up)$", P(None, M)),
+    (r"b/w[qkv]$", P(None, M)),
+    (r"b/wif$", P(None, None)),
+    (r"b/norm_w$", P(M)),
+    (r"b/down$", P(M, None)),
+    # slstm
+    (r"b/w_in$", P(None, M)),
+    (r"b/r$", P(None, None, M)),
+    (r"b/b$", P(M)),
+    # layer norms
+    (r"ln\d?$|/ln$", P(None)),
+]
+
+
+def _match_spec(path: str, shape, n_stack: int) -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            full = P(*([None] * n_stack + list(spec)))
+            # verify divisibility of every sharded dim; fall back to replicate
+            return full
+    return P(*([None] * len(shape)))
+
+
+def _stack_depth(path: str, cfg: LMConfig) -> int:
+    """How many leading stacked-scan axes this leaf carries."""
+    if path.startswith("blocks/"):
+        if cfg.block_pattern == "zamba2" and "/mamba/" in path:
+            return 2      # (groups, mamba_per_attn, ...)
+        if cfg.block_pattern == "xlstm" and "/mlstm/" in path:
+            return 2
+        return 1
+    return 0
+
+
+def _check_divisible(spec: P, shape, mesh: Mesh) -> P:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ok = []
+    for dim, s in zip(shape, spec):
+        if s is None:
+            ok.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        size = int(np.prod([axes[n] for n in names]))
+        ok.append(s if dim % size == 0 else None)
+    return P(*ok)
+
+
+def param_specs(abstract_params, cfg: LMConfig, mesh: Mesh,
+                policy: str = "tp"):
+    """PartitionSpec tree matching an (abstract) param tree.
+
+    policy:
+      tp   - Megatron tensor parallel over "model" (baseline rules above)
+      fsdp - fully-sharded data parallel: every matched weight shards its
+             first non-depth dim over ALL mesh axes; weights are gathered
+             per layer (bf16) instead of activations being all-reduced —
+             wins when B_local*S*d >> layer params (the train_4k regime).
+      zero3 - like fsdp but weights shard over the "model" axis only and
+             batch stays on the data axes: per-layer bf16 weight gathers
+             replace TP activation all-reduces while keeping the baseline
+             activation layout (B_local=16) so GSPMD propagation is tame.
+      cp   - context parallelism: weights FSDP-stored over the data axes
+             (output dim; gathered per layer since the batch owns "data"),
+             sequence sharded over "model" between blocks (use
+             act_sharding=dp_sp) — MLPs become collective-free, attention
+             pays one K/V all-gather over "model".
+    """
+
+    all_axes = tuple(mesh.axis_names)
+
+    def leaf(path, x):
+        p = _path_str(path)
+        # serve-quantized leaves are (w_q, w_scale) tuples: match the base
+        # path; scales get the matched spec's LAST-dim entry only.
+        is_scale = False
+        if re.search(r"/(0|1)$", p):
+            is_scale = p.endswith("/1")
+            p = p[:-2]
+        n_stack = _stack_depth(p, cfg)
+        if is_scale:
+            base = _match_spec(p, x.shape, n_stack)
+            spec = [None] * len(x.shape)
+            if len(base) >= 1 and len(x.shape) >= 1:
+                spec[-1] = base[len(base) - 1] if len(base) == len(x.shape) \
+                    else (base[-1] if base else None)
+            return _check_divisible(P(*spec), x.shape, mesh)
+        if policy in ("fsdp", "zero3", "cp"):
+            matched = any(re.search(pat, p) for pat, _ in _PARAM_RULES)
+            spec = [None] * len(x.shape)
+            if policy == "cp":
+                dp_axes = tuple(a for a in all_axes if a != M)
+                dp_axes = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+                if matched and len(x.shape) > n_stack:
+                    spec[-1] = dp_axes      # FSDP storage on the output dim
+            else:
+                shard_axes = all_axes if policy == "fsdp" else M
+                if matched and len(x.shape) > n_stack:
+                    spec[n_stack] = shard_axes
+            spec = P(*spec)
+        else:
+            spec = _match_spec(p, x.shape, n_stack)
+            if len(spec) < len(x.shape):  # pad missing minor axes
+                spec = P(*(list(spec) + [None] * (len(x.shape) - len(spec))))
+        return _check_divisible(spec, x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def batch_specs(cfg: LMConfig, cell: ShapeCell, mesh: Mesh,
+                policy: str = "tp") -> Dict[str, P]:
+    if policy == "fsdp":
+        axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = int(np.prod(list(axes.values())))
+        dp = tuple(mesh.axis_names) if cell.global_batch % total == 0 \
+            else tuple(a for a in mesh.axis_names if a != M)
+    else:
+        dp = tuple(a for a in mesh.axis_names if a != M)
+    dp = dp[0] if len(dp) == 1 else dp
+    if cell.kind == "decode" and cell.global_batch == 1:
+        dp_b = None                 # batch=1: replicate batch
+    else:
+        dp_b = dp
+    if cfg.frontend == "token":
+        specs = {"tokens": P(dp_b, None)}
+    else:
+        specs = {"embeds": P(dp_b, None, None)}
+    if cell.kind == "train":
+        specs["labels"] = P(dp_b, None)
+    return specs
+
+
+def cache_specs(abstract_cache, cfg: LMConfig, cell: ShapeCell, mesh: Mesh,
+                mlstm_state_shard: bool = False):
+    """Decode-cache specs: batch over DP if divisible else None; for KV
+    caches, heads over model if divisible else the sequence axis.
+
+    mlstm_state_shard: shard the mLSTM matrix state's d_k dim over "model".
+    Measured on the dry-run this forces SPMD involuntary full
+    rematerialization (collective-permutes of the state every step) because
+    the per-step read contracts over the sharded dim; default False
+    (replicate over model, batch-shard only) cuts decode collectives ~400x
+    (see EXPERIMENTS.md §Perf cell 2)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in mesh.axis_names if a != M)
+    dp_size = int(np.prod([axes[a] for a in dp]))
+    dp = dp[0] if len(dp) == 1 else dp
+    model_size = axes[M]
+
+    def leaf(path, x):
+        p = _path_str(path)
+        shape = x.shape
+        # leading axes: stacked scan groups (skip), then batch
+        n_stack = _stack_depth(p + "", cfg) if p.startswith("blocks") else 0
+        spec = [None] * len(shape)
+        bdim = n_stack
+        if shape[bdim] % dp_size == 0 and cell.global_batch > 1:
+            spec[bdim] = dp
+            batch_sharded = True
+        else:
+            batch_sharded = False
+        if re.search(r"/(k|v|k_q|v_q|k_s|v_s)$", p):
+            # (..., B, kv_heads, S, hd) or scales (..., B, kv_heads, S)
+            hdim, sdim = bdim + 1, bdim + 2
+            if shape[hdim] % model_size == 0:
+                spec[hdim] = M
+            elif shape[sdim] % model_size == 0:
+                spec[sdim] = M
+            if not batch_sharded and shape[sdim] % dp_size == 0 \
+                    and spec[sdim] is None:
+                spec[sdim] = dp     # long_500k: shard sequence over DP
+        elif re.search(r"/ssm$", p):
+            if shape[bdim + 1] % model_size == 0:
+                spec[bdim + 1] = M   # heads
+        elif re.search(r"/conv$", p):
+            if shape[bdim + 2] % model_size == 0:
+                spec[bdim + 2] = M   # d_inner
+        elif re.search(r"/state$", p):   # mlstm (B, H, dk, dv)
+            # shard the VALUE dim over model: aligned with column-parallel
+            # wv / row-parallel down, so per-step read/write stay local
+            if shape[bdim + 3] % model_size == 0:
+                spec[bdim + 3] = M
+            elif mlstm_state_shard and shape[bdim + 2] % model_size == 0:
+                spec[bdim + 2] = M
+        elif re.search(r"/norm$", p):    # mlstm normalizer (B, H, dk)
+            pass  # batch-sharded only (tiny)
+        elif re.search(r"/(h|c|n|m)$", p):  # slstm (B, d)
+            if shape[bdim + 1] % model_size == 0:
+                spec[bdim + 1] = M
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,72 @@
+"""NVE molecular dynamics (velocity Verlet) for stability experiments (Fig. 3).
+
+Units: eV, Angstrom, and a time unit t* chosen so that masses are in amu:
+with E in eV, m in amu, 1 t* = 10.1805 fs; we express dt in fs and convert.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# 1 fs in sqrt(amu * A^2 / eV)
+_FS = 1.0 / 10.180505
+
+
+class MDState(NamedTuple):
+    coords: jnp.ndarray    # (n, 3) Angstrom
+    veloc: jnp.ndarray     # (n, 3) A / t*
+    forces: jnp.ndarray    # (n, 3) eV / A
+
+
+def kinetic_energy(state: MDState, masses: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * jnp.sum(masses[:, None] * state.veloc ** 2)
+
+
+def init_state(key: jax.Array, coords: jnp.ndarray, masses: jnp.ndarray,
+               force_fn: Callable[[jnp.ndarray], jnp.ndarray],
+               temperature_K: float = 300.0) -> MDState:
+    """Maxwell-Boltzmann velocities at the given temperature (kB in eV/K)."""
+    kb = 8.617333e-5
+    std = jnp.sqrt(kb * temperature_K / masses)[:, None]
+    v = jax.random.normal(key, coords.shape) * std
+    v = v - v.mean(0, keepdims=True)  # remove CoM drift
+    return MDState(coords=coords, veloc=v, forces=force_fn(coords))
+
+
+def nve_trajectory(state: MDState, masses: jnp.ndarray,
+                   force_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                   energy_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                   dt_fs: float, n_steps: int, record_every: int = 10):
+    """Run velocity-Verlet; returns (final_state, recorded total energies).
+
+    Uses lax.scan; total-energy record has length n_steps // record_every.
+    """
+    dt = dt_fs * _FS
+    inv_m = (1.0 / masses)[:, None]
+
+    def step(s: MDState, _):
+        v_half = s.veloc + 0.5 * dt * s.forces * inv_m
+        r_new = s.coords + dt * v_half
+        f_new = force_fn(r_new)
+        v_new = v_half + 0.5 * dt * f_new * inv_m
+        return MDState(r_new, v_new, f_new), None
+
+    def outer(s: MDState, _):
+        s, _ = jax.lax.scan(step, s, None, length=record_every)
+        e_tot = energy_fn(s.coords) + kinetic_energy(s, masses)
+        return s, e_tot
+
+    state, energies = jax.lax.scan(outer, state, None,
+                                   length=n_steps // record_every)
+    return state, energies
+
+
+def energy_drift_rate(energies: jnp.ndarray, dt_fs: float,
+                      record_every: int, n_atoms: int) -> float:
+    """Least-squares slope of total energy, in eV/atom/ps."""
+    t_ps = jnp.arange(energies.shape[0]) * dt_fs * record_every * 1e-3
+    t = t_ps - t_ps.mean()
+    slope = jnp.sum(t * (energies - energies.mean())) / jnp.sum(t * t)
+    return float(slope) / n_atoms

@@ -1,0 +1,176 @@
+"""GQA attention: chunked-causal training path + KV-cache decode path.
+
+Training/prefill use a q-chunked blockwise attention (lax.scan over query
+blocks, full-row logits per block) so the S x S score matrix is never
+materialized — the pure-JAX analogue of flash attention, required for the
+32k prefill shapes. Decode attends one new token against the full cache,
+optionally int8-quantized (the paper's memory-wall fix applied to the KV
+cache; on TPU the Pallas kernel in repro/kernels/attention_int8kv.py fuses
+dequant, this jnp path is the portable formulation with identical math).
+
+Robust attention normalization (paper §III-E): when cfg.qk_norm, q and k are
+l2-normalized per head and logits scaled by a learnable tau instead of
+1/sqrt(d); bounds logits in [-tau, tau] so A8 rounding cannot reorder the
+softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention_norm import l2_normalize
+from .layers import apply_rope, dense_init, qlinear
+
+
+def init_attention(key, cfg, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, nh * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nh * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["tau"] = jnp.asarray(cfg.attn_tau, jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    B, S, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    mode = cfg.quant_mode
+    q = qlinear(x, params["wq"], mode, params.get("bq")).reshape(B, S, nh, hd)
+    k = qlinear(x, params["wk"], mode, params.get("bk")).reshape(B, S, nkv, hd)
+    v = qlinear(x, params["wv"], mode, params.get("bv")).reshape(B, S, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.qk_norm:
+        q = l2_normalize(q) * params["tau"].astype(x.dtype)
+        k = l2_normalize(k)
+        scale = 1.0
+    else:
+        scale = hd ** -0.5
+    return q, k, v, scale
+
+
+def causal_attention(params, x, cfg, positions=None):
+    """Full training/prefill attention. x: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v, scale = _project_qkv(params, x, cfg, positions)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = nh // nkv
+    q = q.reshape(B, S, nkv, g, hd)
+
+    bq = min(cfg.attn_chunk_q, S)
+    n_chunks = S // bq
+    assert S % bq == 0, f"S={S} % chunk {bq} != 0"
+
+    kT = jnp.moveaxis(k, 1, 3)          # (B, nkv, hd, S) -> used via einsum
+    row_ids = jnp.arange(S)
+
+    def chunk(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)  # (B,bq,kv,g,hd)
+        # logits over the *full* row: (B, nkv, g, bq, S)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qi, k) * scale
+        q_pos = i * bq + jnp.arange(bq)
+        mask = row_ids[None, :] <= q_pos[:, None]                # (bq, S)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        oi = jnp.einsum("bkgqs,bskd->bqkgd", w, v)               # (B,bq,kv,g,hd)
+        return carry, oi
+
+    _, outs = jax.lax.scan(chunk, None, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, nh * hd)        # re-stitch
+    return qlinear(out, params["wo"], cfg.quant_mode)
+
+
+# --- decode -------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, seq: int, dtype):
+    nkv, hd = cfg.n_kv_heads * cfg.kv_replicate, cfg.hd
+    if cfg.kv_quant:
+        w = hd if cfg.kv_bits == 8 else hd // 2   # int4: two nibbles/byte
+        qdt = jnp.int8 if cfg.kv_bits == 8 else jnp.uint8
+        return {
+            "k_q": jnp.zeros((batch, nkv, seq, w), qdt),
+            "v_q": jnp.zeros((batch, nkv, seq, w), qdt),
+            "k_s": jnp.zeros((batch, nkv, seq), jnp.float32),
+            "v_s": jnp.zeros((batch, nkv, seq), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, nkv, seq, hd), dtype),
+        "v": jnp.zeros((batch, nkv, seq, hd), dtype),
+    }
+
+
+def decode_attention(params, x, cfg, cache, cur_index):
+    """One decode step. x: (B, 1, d); cache holds seq_len past KV.
+
+    Returns (out (B, 1, d), new_cache). The new token's K/V are written at
+    cur_index (same position for every batch row; standard static-shape
+    serving layout).
+    """
+    B = x.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((B, 1), cur_index)
+    q, k_new, v_new, scale = _project_qkv(params, x, cfg, positions)
+    k_new = k_new[:, 0]                              # (B, kv, hd)
+    v_new = v_new[:, 0]
+    if cfg.kv_replicate > 1:
+        # contiguous repeat keeps q-group -> kv-head mapping consistent
+        k_new = jnp.repeat(k_new, cfg.kv_replicate, axis=1)
+        v_new = jnp.repeat(v_new, cfg.kv_replicate, axis=1)
+        nkv = nkv * cfg.kv_replicate
+    q = q[:, 0].reshape(B, nkv, nh // nkv, hd)      # (B, kv_eff, g, hd)
+
+    if cfg.kv_quant:
+        # quantize the incoming token, store int8/int4, attend over the
+        # quantized cache (fused dequant in the Pallas decode kernel on TPU)
+        from repro.core.quantizers import pack_int4, unpack_int4
+        qmax_v = 127.0 if cfg.kv_bits == 8 else 7.0
+        k_s = (jnp.maximum(jnp.max(jnp.abs(k_new), -1), 1e-8) / qmax_v
+               ).astype(jnp.float32)
+        v_s = (jnp.maximum(jnp.max(jnp.abs(v_new), -1), 1e-8) / qmax_v
+               ).astype(jnp.float32)
+        k_qt = jnp.clip(jnp.round(k_new / k_s[..., None]), -qmax_v, qmax_v
+                        ).astype(jnp.int8)
+        v_qt = jnp.clip(jnp.round(v_new / v_s[..., None]), -qmax_v, qmax_v
+                        ).astype(jnp.int8)
+        if cfg.kv_bits == 4:
+            k_qt, v_qt = pack_int4(k_qt), pack_int4(v_qt)
+        cache = {
+            "k_q": jax.lax.dynamic_update_index_in_dim(cache["k_q"], k_qt, cur_index, 2),
+            "v_q": jax.lax.dynamic_update_index_in_dim(cache["v_q"], v_qt, cur_index, 2),
+            "k_s": jax.lax.dynamic_update_index_in_dim(cache["k_s"], k_s, cur_index, 2),
+            "v_s": jax.lax.dynamic_update_index_in_dim(cache["v_s"], v_s, cur_index, 2),
+        }
+        kq = cache["k_q"] if cfg.kv_bits == 8 else unpack_int4(cache["k_q"])
+        vq = cache["v_q"] if cfg.kv_bits == 8 else unpack_int4(cache["v_q"])
+        k = kq.astype(x.dtype) * cache["k_s"][..., None].astype(x.dtype)
+        v = vq.astype(x.dtype) * cache["v_s"][..., None].astype(x.dtype)
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_index_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), cur_index, 2),
+            "v": jax.lax.dynamic_update_index_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), cur_index, 2),
+        }
+        k, v = cache["k"], cache["v"]
+
+    seq = k.shape[2]
+    logits = jnp.einsum("bkgd,bksd->bkgs", q, k) * scale     # (B,kv,g,S)
+    valid = jnp.arange(seq)[None, None, None, :] <= cur_index
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v).reshape(B, 1, nh * hd)
+    return qlinear(out, params["wo"], cfg.quant_mode), cache

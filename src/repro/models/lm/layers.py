@@ -1,0 +1,105 @@
+"""Shared LM building blocks: norms, rotary, MLPs, quantized linear."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import fake_quant_ste, unpack_int4
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            f32_stats: bool = True) -> jnp.ndarray:
+    dt = x.dtype
+    if f32_stats:
+        x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(x.dtype)).astype(dt)
+
+
+def dense_init(key, fan_in, fan_out, dtype=jnp.float32):
+    return (jax.random.normal(key, (fan_in, fan_out)) / jnp.sqrt(fan_in)
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-aware linear: the branch-separated policy applied to LMs.
+# Weights W4/W8 per-output-channel, activations A8 per-tensor; "none" mode is
+# a plain matmul. serve_* modes run the dequant math explicitly so the dry-run
+# cost analysis sees int8/int4 weight bytes (on TPU the Pallas kernel fuses
+# this; the jnp path is the portable/AOT-analyzable formulation).
+# ---------------------------------------------------------------------------
+
+def qlinear(x: jnp.ndarray, w, mode: str = "none",
+            bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x: (..., K); w: (K, N) fp or (w_q, w_scale) when pre-quantized."""
+    if mode == "none":
+        y = x @ w.astype(x.dtype)
+    elif mode == "qat_w4a8":
+        wq = fake_quant_ste(w, 4, channel_axis=w.ndim - 1)
+        xq = fake_quant_ste(x, 8)
+        y = xq @ wq.astype(x.dtype)
+    elif mode in ("serve_w8a8", "serve_w4a8"):
+        w_q, w_scale = w
+        if mode == "serve_w4a8" and w_q.dtype == jnp.uint8:
+            w_q = unpack_int4(w_q)   # fused in the Pallas kernel on TPU
+        # int8/int4 tensors stream from HBM; dequant happens next to compute
+        y = (x @ w_q.astype(x.dtype)) * w_scale.astype(x.dtype)
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def mlp_swiglu(params, x, mode="none"):
+    g = qlinear(x, params["wg"], mode)
+    u = qlinear(x, params["wu"], mode)
+    return qlinear(jax.nn.silu(g) * u, params["wd"], mode)
+
+
+def mlp_squared_relu(params, x, mode="none"):
+    h = jax.nn.relu(qlinear(x, params["wi"], mode))
+    return qlinear(h * h, params["wd"], mode)
+
+
+def init_mlp(key, cfg, d_ff=None, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        return {"wg": dense_init(ks[0], d, ff, dtype),
+                "wu": dense_init(ks[1], d, ff, dtype),
+                "wd": dense_init(ks[2], ff, d, dtype)}
+    if cfg.mlp_kind == "squared_relu":
+        return {"wi": dense_init(ks[0], d, ff, dtype),
+                "wd": dense_init(ks[1], ff, d, dtype)}
+    raise ValueError(cfg.mlp_kind)
+
+
+def apply_mlp(params, x, cfg, mode=None):
+    mode = cfg.quant_mode if mode is None else mode
+    if cfg.mlp_kind == "swiglu":
+        return mlp_swiglu(params, x, mode)
+    if cfg.mlp_kind == "squared_relu":
+        return mlp_squared_relu(params, x, mode)
+    raise ValueError(cfg.mlp_kind)
+
+
+# --- rotary ------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

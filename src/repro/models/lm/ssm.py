@@ -1,0 +1,208 @@
+"""Chunked linear-RNN scan (Mamba2 / SSD) + Mamba2 block.
+
+The SSD recurrence  S_t = a_t * S_{t-1} + B_t (x'_t)^T ,  y_t = C_t . S_t
+(per head; a_t scalar decay, S in R^{N x P}) is evaluated with the standard
+chunked algorithm: intra-chunk attention-like einsums + an inter-chunk
+lax.scan carrying the (H, N, P) state. Work is O(S * L) for chunk length L —
+sub-quadratic, which is what qualifies zamba2/xlstm for the long_500k shape.
+
+The same primitive implements mLSTM (xlstm.py): N=d_k, P=d_v(+1 for the
+normalizer), decay = log sigmoid(forget gate), x' = input-gate * value.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, qlinear, rmsnorm
+
+
+def chunked_linear_rnn(log_a: jnp.ndarray, B_in: jnp.ndarray,
+                       C_out: jnp.ndarray, x: jnp.ndarray,
+                       chunk: int, init_state: jnp.ndarray | None = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked scan for y_t = C_t . (sum_{s<=t} prod_{r in (s,t]} a_r B_s x_s^T).
+
+    log_a: (Bt, S, H)      per-step log decay (<= 0 for stability)
+    B_in : (Bt, S, G, N)   write keys (gate/dt pre-absorbed into x)
+    C_out: (Bt, S, G, N)   read keys
+    x    : (Bt, S, H, P)   values (pre-scaled by dt/input-gate)
+    Heads are grouped: head h uses B/C group h // (H // G).
+    Returns y (Bt, S, H, P) and final state (Bt, H, N, P).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    Hg = H // G
+    L = min(chunk, S)
+    assert S % L == 0, f"S={S} % chunk {L} != 0"
+    nc = S // L
+
+    # reshape to (Bt, nc, L, ...) and split heads into (G, Hg)
+    la = log_a.reshape(Bt, nc, L, G, Hg)
+    xs = x.reshape(Bt, nc, L, G, Hg, P)
+    Bi = B_in.reshape(Bt, nc, L, G, N)
+    Co = C_out.reshape(Bt, nc, L, G, N)
+
+    lcum = jnp.cumsum(la, axis=2)                       # inclusive cumsum
+    if init_state is None:
+        init_state = jnp.zeros((Bt, G, Hg, N, P), jnp.float32)
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]               # (L, L) t >= s
+
+    def one_chunk(state, inputs):
+        la_c, lc_c, x_c, b_c, c_c = inputs              # leading dim Bt
+        # intra-chunk: scores[t, s] = exp(l_t - l_s) (C_t . B_s), s <= t
+        cb = jnp.einsum("blgn,bmgn->bglm", c_c, b_c)    # (Bt, G, L, L)
+        dec = lc_c[:, :, None] - lc_c[:, None, :]       # l_t - l_s: (Bt,L,L,G,Hg)
+        dec = jnp.where(causal[None, :, :, None, None], dec, -1e30)
+        w = jnp.exp(dec) * cb.transpose(0, 2, 3, 1)[..., None]   # (Bt,L,L,G,Hg)
+        y_intra = jnp.einsum("blmgh,bmghp->blghp", w.astype(x_c.dtype), x_c)
+
+        # inter-chunk: y_inter[t] = exp(l_t) C_t . S_prev
+        read = jnp.exp(lc_c)[..., None] * c_c[:, :, :, None, :]  # (Bt,L,G,Hg,N)
+        y_inter = jnp.einsum("blghn,bghnp->blghp", read.astype(x_c.dtype),
+                             state.astype(x_c.dtype))
+
+        # state update: S_new = exp(l_L) S_prev + sum_s exp(l_L - l_s) B_s x_s^T
+        tail = lc_c[:, -1:, :, :] - lc_c                # l_L - l_s
+        wsrc = jnp.exp(tail)[..., None] * x_c            # (Bt,L,G,Hg,P)
+        contrib = jnp.einsum("blgn,blghp->bghnp", b_c, wsrc.astype(jnp.float32))
+        decay_L = jnp.exp(lc_c[:, -1])[..., None, None]  # (Bt,G,Hg,1,1)
+        state = decay_L * state + contrib
+        return state, y_intra + y_inter
+
+    # move chunk axis to the front for scan
+    def tr(a):
+        return jnp.moveaxis(a, 1, 0)
+
+    state, ys = jax.lax.scan(one_chunk, init_state,
+                             (tr(la), tr(lcum), tr(xs), tr(Bi), tr(Co)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bt, S, H, P)
+    return y, state.reshape(Bt, H, N, P)
+
+
+def linear_rnn_step(state, log_a, B_in, C_out, x):
+    """Single decode step. state: (Bt,H,N,P); log_a: (Bt,H); B_in/C_out:
+    (Bt,G,N); x: (Bt,H,P). Returns (y (Bt,H,P), new_state)."""
+    Bt, H, N, P = state.shape
+    G = B_in.shape[1]
+    Hg = H // G
+    s = state.reshape(Bt, G, Hg, N, P)
+    a = jnp.exp(log_a).reshape(Bt, G, Hg)[..., None, None]
+    contrib = jnp.einsum("bgn,bghp->bghnp", B_in,
+                         x.reshape(Bt, G, Hg, P).astype(jnp.float32))
+    s = a * s + contrib
+    y = jnp.einsum("bgn,bghnp->bghp", C_out, s).astype(x.dtype)
+    return y.reshape(Bt, H, P), s.reshape(Bt, H, N, P)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+_CONV_W = 4  # causal depthwise conv width
+
+
+def init_mamba2(key, cfg, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 8)
+    # separate projections per segment (z, x, B, C, dt) so each weight has a
+    # clean Megatron column split under tensor parallelism
+    return {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[3], d, di, dtype),
+        "w_B": dense_init(ks[4], d, G * N, dtype),
+        "w_C": dense_init(ks[5], d, G * N, dtype),
+        "w_dt": dense_init(ks[6], d, H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_W, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),           # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _project(params, x, mode):
+    z = qlinear(x, params["w_z"], mode)
+    xv = qlinear(x, params["w_x"], mode)
+    B_in = qlinear(x, params["w_B"], mode)
+    C_out = qlinear(x, params["w_C"], mode)
+    dt = qlinear(x, params["w_dt"], mode)
+    return z, xv, B_in, C_out, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (W, C) depthwise causal conv."""
+    W = w.shape[0]
+    w = w.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def mamba2_forward(params, x_res, cfg):
+    """Training/prefill. x_res: (B, S, d) -> (B, S, d)."""
+    B, S, d = x_res.shape
+    H, N, G, P = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    mode = cfg.quant_mode
+    z, xv, B_in, C_out, dt = _project(params, x_res, mode)
+    xv = _causal_conv(xv, params["conv_w"], params["conv_b"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    log_a = dt * A[None, None, :]
+    xh = xv.reshape(B, S, H, P)
+    y, _ = chunked_linear_rnn(log_a,
+                              B_in.reshape(B, S, G, N).astype(jnp.float32),
+                              C_out.reshape(B, S, G, N).astype(jnp.float32),
+                              xh * dt[..., None].astype(xh.dtype),
+                              cfg.ssm_chunk)
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, cfg.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_w"])
+    return qlinear(y, params["out_proj"], mode)
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    H, N, P = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, _CONV_W - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba2_step(params, x_res, cfg, cache):
+    """Decode step. x_res: (B, 1, d) -> ((B, 1, d), cache)."""
+    B = x_res.shape[0]
+    H, N, G, P = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    mode = cfg.quant_mode
+    z, xv, B_in, C_out, dt = _project(params, x_res[:, 0], mode)
+
+    # causal conv over (cached last W-1 inputs, current)
+    conv_in = jnp.concatenate([cache["conv"], xv[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(conv_in.dtype)
+    xv = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, w)
+                     + params["conv_b"].astype(conv_in.dtype))
+    new_conv = conv_in[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    log_a = dt * A[None, :]
+    xh = xv.reshape(B, H, P)
+    y, new_ssm = linear_rnn_step(cache["ssm"], log_a,
+                                 B_in.reshape(B, G, N).astype(jnp.float32),
+                                 C_out.reshape(B, G, N).astype(jnp.float32),
+                                 xh * dt[..., None].astype(xh.dtype))
+    y = y + xh * params["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B, cfg.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_w"])
+    out = qlinear(y, params["out_proj"], mode)
+    return out[:, None, :], {"conv": new_conv, "ssm": new_ssm}

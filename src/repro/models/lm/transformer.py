@@ -1,0 +1,311 @@
+"""LM assembly: block patterns, scan-over-layers, train & decode steps.
+
+Layer stacking uses lax.scan over parameter trees whose leaves carry a
+leading `depth` axis (one entry per scan group). This keeps the HLO O(1) in
+depth — essential both for MXU utilization analysis and for compiling the
+80-layer configs on the CPU host that runs the multi-pod dry-run.
+
+Block patterns
+  transformer : n_layers x [attn + mlp/moe]                (scan over layers)
+  zamba2      : scan groups of [zamba_mamba_per_attn x mamba2 + shared attn
+                + shared mlp] — the transformer block weights are SHARED
+                (closed over, not scanned), matching Zamba2's design.
+  xlstm       : scan groups of [7 x mLSTM + 1 x sLSTM].
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from .config import LMConfig
+from .layers import apply_mlp, dense_init, init_mlp, qlinear
+from .layers import rmsnorm as _rmsnorm_impl
+
+Params = Dict[str, Any]
+
+
+def _make_rmsnorm(cfg: LMConfig):
+    def rn(x, w):
+        return _rmsnorm_impl(x, w, f32_stats=cfg.norm_f32)
+    return rn
+
+
+def _constrain_acts(x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """Activation sharding constraint at block boundaries (cfg.act_sharding).
+
+    Reads the ambient physical mesh; no-op outside a mesh context or when
+    dims don't divide (e.g. batch=1 long-context decode)."""
+    if cfg.act_sharding == "none":
+        return x
+    from jax._src import mesh as mesh_lib
+    from jax.sharding import PartitionSpec as P
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty:
+        return x
+    axes = dict(zip(m.axis_names, m.devices.shape))
+    dp = tuple(a for a in m.axis_names if a != "model")
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % dp_size == 0 and dp_size > 1:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    if (cfg.act_sharding == "dp_sp" and x.ndim >= 3
+            and x.shape[1] % axes.get("model", 1) == 0 and x.shape[1] > 1):
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def n_groups(cfg: LMConfig) -> int:
+    if cfg.block_pattern == "transformer":
+        return cfg.n_layers
+    if cfg.block_pattern == "zamba2":
+        return cfg.n_layers // cfg.zamba_mamba_per_attn
+    if cfg.block_pattern == "xlstm":
+        return cfg.n_layers // (cfg.xlstm_mlstm_per_slstm + 1)
+    raise ValueError(cfg.block_pattern)
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Params:
+    keys = iter(jax.random.split(key, 16 + 4 * cfg.n_layers))
+    dt = cfg.param_dtype
+    p: Params = {
+        "embed": (jax.random.normal(next(keys), (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(next(keys), cfg.d_model, cfg.vocab, dt)
+
+    G = n_groups(cfg)
+    if cfg.block_pattern == "transformer":
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            blk = {"ln1": jnp.ones((cfg.d_model,), dt),
+                   "ln2": jnp.ones((cfg.d_model,), dt),
+                   "attn": attn.init_attention(k1, cfg)}
+            if cfg.moe:
+                blk["moe"] = moe_lib.init_moe(k2, cfg)
+            elif cfg.mlp_kind != "none":
+                blk["mlp"] = init_mlp(k2, cfg)
+            return blk
+        p["blocks"] = _stack([one(next(keys)) for _ in range(G)])
+    elif cfg.block_pattern == "zamba2":
+        def one(k):
+            ks = jax.random.split(k, cfg.zamba_mamba_per_attn)
+            return {"mamba": _stack([{"ln": jnp.ones((cfg.d_model,), dt),
+                                      **{"m": ssm_lib.init_mamba2(kk, cfg)}}
+                                     for kk in ks])}
+        p["blocks"] = _stack([one(next(keys)) for _ in range(G)])
+        # ONE shared transformer block reused at every group boundary
+        p["shared"] = {"ln1": jnp.ones((cfg.d_model,), dt),
+                       "ln2": jnp.ones((cfg.d_model,), dt),
+                       "attn": attn.init_attention(next(keys), cfg),
+                       "mlp": init_mlp(next(keys), cfg)}
+    elif cfg.block_pattern == "xlstm":
+        M = cfg.xlstm_mlstm_per_slstm
+        def one(k):
+            ks = jax.random.split(k, M + 1)
+            return {
+                "mlstm": _stack([{"ln": jnp.ones((cfg.d_model,), dt),
+                                  "b": xlstm_lib.init_mlstm(kk, cfg)}
+                                 for kk in ks[:M]]),
+                "slstm": {"ln": jnp.ones((cfg.d_model,), dt),
+                          "b": xlstm_lib.init_slstm(ks[M], cfg)},
+            }
+        p["blocks"] = _stack([one(next(keys)) for _ in range(G)])
+    else:
+        raise ValueError(cfg.block_pattern)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _group_forward(cfg: LMConfig, shared: Optional[Params]):
+    """Returns f(carry_x, group_params) -> (x, aux) for one scan group."""
+    rmsnorm = _make_rmsnorm(cfg)
+
+    def transformer_group(x, g):
+        h = attn.causal_attention(g["attn"], rmsnorm(x, g["ln1"]), cfg)
+        x = x + h
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe:
+            h, aux = moe_lib.moe_forward(g["moe"], rmsnorm(x, g["ln2"]), cfg)
+            x = x + h
+        elif cfg.mlp_kind != "none":
+            x = x + apply_mlp(g["mlp"], rmsnorm(x, g["ln2"]), cfg)
+        return x, aux
+
+    def zamba_group(x, g):
+        def mamba_one(xx, mg):
+            return xx + ssm_lib.mamba2_forward(
+                mg["m"], rmsnorm(xx, mg["ln"]), cfg), None
+        x, _ = jax.lax.scan(mamba_one, x, g["mamba"])
+        s = shared
+        x = x + attn.causal_attention(s["attn"], rmsnorm(x, s["ln1"]), cfg)
+        x = x + apply_mlp(s["mlp"], rmsnorm(x, s["ln2"]), cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def xlstm_group(x, g):
+        def mlstm_one(xx, mg):
+            return xx + xlstm_lib.mlstm_forward(
+                mg["b"], rmsnorm(xx, mg["ln"]), cfg), None
+        x, _ = jax.lax.scan(mlstm_one, x, g["mlstm"])
+        sg = g["slstm"]
+        x = x + xlstm_lib.slstm_forward(sg["b"], rmsnorm(x, sg["ln"]), cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    return {"transformer": transformer_group, "zamba2": zamba_group,
+            "xlstm": xlstm_group}[cfg.block_pattern]
+
+
+def forward(params: Params, cfg: LMConfig, tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V), moe_aux)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens].astype(cfg.dtype)
+
+    group_fn = _group_forward(cfg, params.get("shared"))
+    if cfg.remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    def scan_body(carry, g):
+        x, aux = carry
+        x = _constrain_acts(x, cfg)
+        x, a = group_fn(x, g)
+        return (x, aux + a), None
+
+    x = _constrain_acts(x, cfg)
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = _make_rmsnorm(cfg)(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, aux / n_groups(cfg)
+
+
+def lm_loss(params: Params, cfg: LMConfig, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, seq: int) -> Params:
+    dt = cfg.dtype
+    G = n_groups(cfg)
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    if cfg.block_pattern == "transformer":
+        return {"blocks": rep(attn.init_kv_cache(cfg, batch, seq, dt), G)}
+    if cfg.block_pattern == "zamba2":
+        per_group = {
+            "mamba": rep(ssm_lib.init_mamba2_cache(cfg, batch, dt),
+                         cfg.zamba_mamba_per_attn),
+            "attn": attn.init_kv_cache(cfg, batch, seq, dt),
+        }
+        return {"blocks": rep(per_group, G)}
+    if cfg.block_pattern == "xlstm":
+        per_group = {
+            "mlstm": rep(xlstm_lib.init_mlstm_cache(cfg, batch, dt),
+                         cfg.xlstm_mlstm_per_slstm),
+            "slstm": xlstm_lib.init_slstm_cache(cfg, batch, dt),
+        }
+        return {"blocks": rep(per_group, G)}
+    raise ValueError(cfg.block_pattern)
+
+
+def decode_step(params: Params, cfg: LMConfig, cache: Params,
+                tokens: jnp.ndarray, cur_index: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. tokens: (B, 1) int32 (or embeds (B, 1, d) for
+    non-token frontends). Returns (logits (B, V), new_cache)."""
+    if tokens.ndim == 3:
+        x = tokens.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens].astype(cfg.dtype)
+
+    rmsnorm = _make_rmsnorm(cfg)
+    shared = params.get("shared")
+
+    def transformer_group(x, g, c):
+        h, kv = attn.decode_attention(g["attn"], rmsnorm(x, g["ln1"]), cfg,
+                                      c, cur_index)
+        x = x + h
+        if cfg.moe:
+            h, _ = moe_lib.moe_forward(g["moe"], rmsnorm(x, g["ln2"]), cfg)
+            x = x + h
+        elif cfg.mlp_kind != "none":
+            x = x + apply_mlp(g["mlp"], rmsnorm(x, g["ln2"]), cfg)
+        return x, kv
+
+    def zamba_group(x, g, c):
+        def mamba_one(xx, gc):
+            mg, mc = gc
+            h, mc = ssm_lib.mamba2_step(mg["m"], rmsnorm(xx, mg["ln"]), cfg, mc)
+            return xx + h, mc
+        x, mcache = jax.lax.scan(mamba_one, x, (g["mamba"], c["mamba"]))
+        s = shared
+        h, kv = attn.decode_attention(s["attn"], rmsnorm(x, s["ln1"]), cfg,
+                                      c["attn"], cur_index)
+        x = x + h
+        x = x + apply_mlp(s["mlp"], rmsnorm(x, s["ln2"]), cfg)
+        return x, {"mamba": mcache, "attn": kv}
+
+    def xlstm_group(x, g, c):
+        def mlstm_one(xx, gc):
+            mg, mc = gc
+            h, mc = xlstm_lib.mlstm_step(mg["b"], rmsnorm(xx, mg["ln"]), cfg, mc)
+            return xx + h, mc
+        x, mcache = jax.lax.scan(mlstm_one, x, (g["mlstm"], c["mlstm"]))
+        sg = g["slstm"]
+        h, sc = xlstm_lib.slstm_step(sg["b"], rmsnorm(x, sg["ln"]), cfg,
+                                     c["slstm"])
+        x = x + h
+        return x, {"mlstm": mcache, "slstm": sc}
+
+    group_fn = {"transformer": transformer_group, "zamba2": zamba_group,
+                "xlstm": xlstm_group}[cfg.block_pattern]
+
+    def scan_body(x, gc):
+        g, c = gc
+        x, new_c = group_fn(x, g, c)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+    x = _make_rmsnorm(cfg)(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, {"blocks": new_cache}

@@ -1,0 +1,193 @@
+"""xLSTM blocks: mLSTM (parallel, matrix memory) + sLSTM (sequential).
+
+mLSTM is a linear RNN with matrix state C_t = f_t C_{t-1} + i_t k_t v_t^T and
+normalizer n_t = f_t n_{t-1} + i_t k_t; y_t = (C_t q_t) / max(|n_t . q_t|, 1).
+We reuse the chunked SSD scan from ssm.py with N=d_k, P=d_v+1 (the extra
+column carries the normalizer: v_aug = [v, 1]).
+
+sLSTM has true recurrence (h feeds the gates) and cannot be parallelized
+over time; it runs as a lax.scan over steps with exponential-gating
+stabilization (m-state). The published 7:1 mLSTM:sLSTM ratio keeps this
+sequential part a small fraction of the depth.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, qlinear, rmsnorm
+from .ssm import chunked_linear_rnn, linear_rnn_step
+
+
+def _heads(cfg):
+    di = cfg.d_model * cfg.xlstm_proj_factor
+    H = cfg.n_heads
+    dk = di // H // 2            # query/key dim per head
+    dv = di // H                 # value dim per head
+    return di, H, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    di, H, dk, dv = _heads(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate": dense_init(ks[0], d, di, dtype),        # z gate
+        "w_up": dense_init(ks[6], d, di, dtype),          # x path
+        "wq": dense_init(ks[1], di, H * dk, dtype),
+        "wk": dense_init(ks[2], di, H * dk, dtype),
+        "wv": dense_init(ks[3], di, H * dv, dtype),
+        "wif": dense_init(ks[4], di, 2 * H, dtype),       # input+forget gates
+        "norm_w": jnp.ones((di,), dtype),
+        "down": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _mlstm_qkv(params, xi, cfg, B, S):
+    di, H, dk, dv = _heads(cfg)
+    mode = cfg.quant_mode
+    q = qlinear(xi, params["wq"], mode).reshape(B, S, H, dk) * dk ** -0.5
+    k = qlinear(xi, params["wk"], mode).reshape(B, S, H, dk) * dk ** -0.5
+    v = qlinear(xi, params["wv"], mode).reshape(B, S, H, dv)
+    gates = qlinear(xi, params["wif"], mode).reshape(B, S, H, 2).astype(jnp.float32)
+    i_gate = jnp.exp(-jax.nn.softplus(-gates[..., 0]))     # sigmoid, stable
+    log_f = -jax.nn.softplus(-gates[..., 1])               # log sigmoid
+    return q, k, v, i_gate, log_f
+
+
+def mlstm_forward(params, x_res, cfg):
+    """(B, S, d) -> (B, S, d)."""
+    B, S, d = x_res.shape
+    di, H, dk, dv = _heads(cfg)
+    mode = cfg.quant_mode
+    z = qlinear(x_res, params["w_gate"], mode)
+    xi = qlinear(x_res, params["w_up"], mode)
+    q, k, v, i_gate, log_f = _mlstm_qkv(params, xi, cfg, B, S)
+
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)  # (B,S,H,dv+1)
+    # per-head keys: groups == heads (G=H) in the generic scan
+    y, _ = chunked_linear_rnn(log_f,
+                              (k * i_gate[..., None]).astype(jnp.float32),
+                              q.astype(jnp.float32),
+                              v_aug, cfg.ssm_chunk)
+    num, den = y[..., :dv], y[..., dv:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, S, di) * jax.nn.silu(z)
+    h = rmsnorm(h, params["norm_w"])
+    return qlinear(h, params["down"], mode)
+
+
+def init_mlstm_cache(cfg, batch: int, dtype):
+    """Matrix memory (B, H, dk, dv) + separate normalizer (B, H, dk).
+
+    The normalizer is NOT folded into the value dim (no dv+1 augmentation)
+    at decode time: keeping dv a clean power-of-two lets the state shard
+    over "model" on dv, aligned with the column-parallel wv/down weights, so
+    the per-step read/write are collective-free (EXPERIMENTS.md §Perf)."""
+    di, H, dk, dv = _heads(cfg)
+    return {"state": jnp.zeros((batch, H, dk, dv), jnp.float32),
+            "norm": jnp.zeros((batch, H, dk), jnp.float32)}
+
+
+def mlstm_step(params, x_res, cfg, cache):
+    B = x_res.shape[0]
+    di, H, dk, dv = _heads(cfg)
+    mode = cfg.quant_mode
+    z = qlinear(x_res[:, 0], params["w_gate"], mode)
+    xi = qlinear(x_res[:, 0], params["w_up"], mode)
+    q, k, v, i_gate, log_f = _mlstm_qkv(params, xi[:, None], cfg, B, 1)
+    ki = (k * i_gate[..., None])[:, 0].astype(jnp.float32).reshape(B, H, dk)
+    qf = q[:, 0].astype(jnp.float32).reshape(B, H, dk)
+    num, state = linear_rnn_step(cache["state"], log_f[:, 0], ki, qf, v[:, 0])
+    f = jnp.exp(log_f[:, 0])[..., None]                      # (B, H, 1)
+    norm = f * cache["norm"] + ki                            # (B, H, dk)
+    den = jnp.sum(norm * qf, axis=-1, keepdims=True)         # (B, H, 1)
+    h = (num.astype(jnp.float32)
+         / jnp.maximum(jnp.abs(den), 1.0)).astype(x_res.dtype)
+    h = h.reshape(B, di) * jax.nn.silu(z)
+    h = rmsnorm(h, params["norm_w"])
+    return qlinear(h, params["down"], mode)[:, None], \
+        {"state": state, "norm": norm}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input and block-diagonal recurrence
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh)) / jnp.sqrt(dh)
+              ).astype(dtype),
+        "b": jnp.zeros((4 * d,), dtype),
+        "norm_w": jnp.ones((d,), dtype),
+        "down": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _slstm_cell(params, cfg, x_t, state):
+    """x_t: (B, 4d) pre-projected input contribution."""
+    h, c, n, m = state
+    B = h.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh),
+                     params["r"].astype(h.dtype)).reshape(B, 4 * cfg.d_model)
+    gates = (x_t + rec + params["b"].astype(x_t.dtype)).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    log_f = -jax.nn.softplus(-gf)                      # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, gi)                 # stabilizer
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new.astype(x_t.dtype), c_new, n_new, m_new
+
+
+def slstm_forward(params, x_res, cfg):
+    """(B, S, d) -> (B, S, d). Sequential lax.scan over time."""
+    B, S, d = x_res.shape
+    mode = cfg.quant_mode
+    x_in = qlinear(x_res, params["w_in"], mode)        # (B, S, 4d)
+    state0 = (jnp.zeros((B, d), x_res.dtype), jnp.zeros((B, d), jnp.float32),
+              jnp.zeros((B, d), jnp.float32),
+              jnp.full((B, d), -1e30, jnp.float32))
+
+    def step(state, x_t):
+        state = _slstm_cell(params, cfg, x_t, state)
+        return state, state[0]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(x_in, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)
+    h = rmsnorm(h, params["norm_w"])
+    return qlinear(h, params["down"], mode)
+
+
+def init_slstm_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_step(params, x_res, cfg, cache):
+    mode = cfg.quant_mode
+    x_in = qlinear(x_res[:, 0], params["w_in"], mode)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(params, cfg, x_in, state)
+    out = qlinear(rmsnorm(h, params["norm_w"]), params["down"], mode)
+    return out[:, None], {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,240 @@
+"""So3krates-like SO(3)-equivariant transformer with GAQ quantization.
+
+Faithful to the paper's architecture description (§III-B):
+* two parallel per-atom branches — invariant scalars x (n, F) and equivariant
+  l=1 vectors v (n, Fv, 3) — interacting only via attention,
+* attention computed on invariant features + invariant geometric encodings
+  (radial basis of ||r_ij||), optionally with the paper's robust cosine
+  normalization (§III-E),
+* equivariant message path built from spherical harmonics Y_1(r_hat) = r_hat
+  and neighbour vectors, with invariant (attention-modulated) coefficients —
+  exactly SO(3)-equivariant in full precision,
+* energy readout from invariant features; forces via -grad (conservative).
+
+Quantization modes (cfg.quant):
+  "none"         FP32 baseline
+  "gaq_w4a8"     the paper's method: MDDQ on vectors (+ geometric STE),
+                 linear W4 (per-channel) / A8 on the rest, cosine attention
+  "naive_int8"   per-tensor linear INT8 on everything incl. Cartesian vector
+                 components — the symmetry-breaking baseline
+  "degree_quant" per-node-degree range calibration (graph-aware, geometry-
+                 agnostic baseline, after Tailor et al.)
+  "svq_kmeans"   hard spherical VQ with *no* STE — gradient-fracture baseline
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    MDDQConfig,
+    abs_max_scale,
+    fake_quant,
+    fake_quant_ste,
+    make_codebook,
+    mddq_fake_quant,
+    nearest_code,
+)
+from repro.core.attention_norm import l2_normalize
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class So3kratesConfig:
+    n_species: int = 20
+    feat: int = 64             # F invariant channels
+    vec_feat: int = 16         # Fv equivariant (l=1) channels
+    n_layers: int = 3
+    n_rbf: int = 16
+    cutoff: float = 10.0       # Angstrom; azobenzene fits inside
+    tau: float = 10.0          # cosine-attention inverse temperature
+    quant: str = "none"
+    w_bits: int = 4            # equivariant-branch weight bits (paper: W4)
+    w_bits_inv: int = 8        # invariant-branch weight bits (paper: 8)
+    a_bits: int = 8
+    # 16-bit spherical codebook + 8-bit log magnitude = 24 bits/vector --
+    # the same storage as naive INT8 (3 x 8-bit components) and 4x less than
+    # fp32, but with covering radius ~0.01 rad (vs 0.17 rad at 8 bits).
+    # The paper's LEE/F-MAE ratio (~0.7%) implies a comparable effective
+    # directional resolution.
+    dir_bits: int = 16
+    robust_attention: bool = True
+    geometric_ste: bool = True
+    # Branch-separated staged warm-up (paper §III-D): when True the
+    # equivariant-branch quantizer is disabled (scalars still quantized).
+    freeze_vec_quant: bool = False
+
+    def mddq(self) -> MDDQConfig:
+        return MDDQConfig(direction_bits=self.dir_bits,
+                          magnitude_bits=self.a_bits,
+                          geometric_ste=self.geometric_ste)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, fan_in, fan_out):
+    return jax.random.normal(key, (fan_in, fan_out)) * (1.0 / jnp.sqrt(fan_in))
+
+
+def init_params(key: jax.Array, cfg: So3kratesConfig) -> Params:
+    keys = iter(jax.random.split(key, 8 + cfg.n_layers * 16))
+    F, Fv, K = cfg.feat, cfg.vec_feat, cfg.n_rbf
+    p: Params = {"embed": jax.random.normal(next(keys), (cfg.n_species, F)) * 0.5}
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        p[f"{L}/wq"] = _dense_init(next(keys), F, F)
+        p[f"{L}/wk"] = _dense_init(next(keys), F, F)
+        p[f"{L}/wm"] = _dense_init(next(keys), F, F)       # scalar messages
+        p[f"{L}/rbf_m"] = _dense_init(next(keys), K, F)    # rbf gate, scalars
+        p[f"{L}/rbf_bias"] = _dense_init(next(keys), K, 1) # attention bias
+        p[f"{L}/wa"] = _dense_init(next(keys), F, Fv)      # coeff on Y_1(r_hat)
+        p[f"{L}/rbf_a"] = _dense_init(next(keys), K, Fv)
+        p[f"{L}/wb"] = _dense_init(next(keys), F, Fv)      # coeff on v_j
+        p[f"{L}/rbf_b"] = _dense_init(next(keys), K, Fv)
+        p[f"{L}/w_upd1"] = _dense_init(next(keys), F, F)
+        p[f"{L}/w_upd2"] = _dense_init(next(keys), F, F)
+        p[f"{L}/w_vnorm"] = _dense_init(next(keys), Fv, F)  # invariant feedback
+        p[f"{L}/ln_g"] = jnp.ones((F,))
+        p[f"{L}/ln_b"] = jnp.zeros((F,))
+    p["ro_w1"] = _dense_init(next(keys), F + Fv, F)
+    p["ro_w2"] = _dense_init(next(keys), F, 1) * 0.1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# quantization helpers (branch-separated, paper §III-D)
+# ---------------------------------------------------------------------------
+
+def _qw(w: jnp.ndarray, cfg: So3kratesConfig, branch: str) -> jnp.ndarray:
+    """Weight fake-quant: per-output-channel, W4 equivariant / W8 invariant."""
+    if cfg.quant == "none":
+        return w
+    bits = cfg.w_bits if branch == "eqv" else cfg.w_bits_inv
+    if cfg.quant in ("naive_int8", "degree_quant", "svq_kmeans"):
+        bits = 8  # baselines are W8A8
+    return fake_quant_ste(w, bits, channel_axis=w.ndim - 1)
+
+
+def _qact(x: jnp.ndarray, cfg: So3kratesConfig,
+          degrees: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Scalar-activation fake-quant (A8)."""
+    if cfg.quant == "none":
+        return x
+    if cfg.quant == "degree_quant" and degrees is not None:
+        # per-node range scaled by sqrt(degree) (Degree-Quant-style protection)
+        scale = abs_max_scale(jax.lax.stop_gradient(x), cfg.a_bits)
+        scale = scale * jnp.sqrt(degrees / jnp.maximum(degrees.max(), 1.0))[:, None]
+        scale = jnp.maximum(scale, 1e-8)
+        return fake_quant_ste(x, cfg.a_bits, scale=scale)
+    return fake_quant_ste(x, cfg.a_bits)
+
+
+def _qvec(v: jnp.ndarray, cfg: So3kratesConfig,
+          codebook: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Equivariant-feature quantization — where the methods differ."""
+    if cfg.quant == "none" or cfg.freeze_vec_quant:
+        return v
+    if cfg.quant == "gaq_w4a8":
+        return mddq_fake_quant(v, cfg.mddq(), codebook)
+    if cfg.quant == "svq_kmeans":
+        # hard spherical VQ, no gradient approximation: stop_gradient snaps
+        m = jnp.linalg.norm(v, axis=-1, keepdims=True)
+        u = v / jnp.maximum(m, 1e-12)
+        q = codebook[nearest_code(u, codebook)]
+        return jax.lax.stop_gradient(q * m)  # gradient fracture (paper §IV-B)
+    # naive / degree_quant: per-tensor linear INT8 on Cartesian components
+    return fake_quant_ste(v, 8)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * g + b
+
+
+def _rbf(d: jnp.ndarray, cfg: So3kratesConfig) -> jnp.ndarray:
+    centers = jnp.linspace(0.5, cfg.cutoff, cfg.n_rbf)
+    gamma = (cfg.n_rbf / cfg.cutoff) ** 2
+    phi = jnp.exp(-gamma * (d[..., None] - centers) ** 2)
+    # smooth cutoff envelope (cosine)
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cfg.cutoff, 0, 1)) + 1.0)
+    return phi * env[..., None]
+
+
+def energy(params: Params, cfg: So3kratesConfig, species: jnp.ndarray,
+           coords: jnp.ndarray, codebook: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Total energy of one molecule. species: (n,) int, coords: (n, 3)."""
+    if codebook is None and cfg.quant != "none":
+        codebook = make_codebook(cfg.dir_bits)
+    n = coords.shape[0]
+    rij = coords[None, :, :] - coords[:, None, :]          # r_j - r_i
+    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
+    mask = (d < cfg.cutoff) & ~jnp.eye(n, dtype=bool)
+    u = rij / d[..., None]                                  # Y_1 direction
+    rbf = _rbf(d, cfg) * mask[..., None]
+    degrees = mask.sum(-1).astype(jnp.float32)
+
+    x = params["embed"][species]                            # (n, F)
+    v = jnp.zeros((n, cfg.vec_feat, 3))
+
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        xn = _layernorm(x, params[f"{L}/ln_g"], params[f"{L}/ln_b"])
+        xn = _qact(xn, cfg, degrees)
+
+        q = xn @ _qw(params[f"{L}/wq"], cfg, "inv")
+        k = xn @ _qw(params[f"{L}/wk"], cfg, "inv")
+        bias = (rbf @ params[f"{L}/rbf_bias"])[..., 0]      # (n, n) invariant
+        if cfg.robust_attention and cfg.quant != "naive_int8" \
+                and cfg.quant != "degree_quant":
+            logits = cfg.tau * (l2_normalize(q) @ l2_normalize(k).T) + bias
+        else:
+            logits = (q @ k.T) / jnp.sqrt(q.shape[-1]) + bias
+        logits = jnp.where(mask, logits, -1e9)
+        alpha = jax.nn.softmax(logits, axis=-1)             # (n, n)
+
+        # invariant messages
+        msg = xn @ _qw(params[f"{L}/wm"], cfg, "inv")       # (n, F)
+        gate = rbf @ params[f"{L}/rbf_m"]                   # (n, n, F)
+        x = x + jnp.einsum("ij,ijf->if", alpha, gate * msg[None, :, :])
+        h = jax.nn.silu(_qact(x, cfg, degrees) @ _qw(params[f"{L}/w_upd1"], cfg, "inv"))
+        x = x + h @ _qw(params[f"{L}/w_upd2"], cfg, "inv")
+
+        # equivariant messages: coefficients are invariant scalars
+        ca = (xn @ _qw(params[f"{L}/wa"], cfg, "eqv"))[None, :, :] * (rbf @ params[f"{L}/rbf_a"])
+        cb = (xn @ _qw(params[f"{L}/wb"], cfg, "eqv"))[None, :, :] * (rbf @ params[f"{L}/rbf_b"])
+        dv = jnp.einsum("ij,ijc,ijd->icd", alpha, ca, u) \
+            + jnp.einsum("ij,ijc,jcd->icd", alpha, cb, v)
+        v = v + dv
+        v = _qvec(v, cfg, codebook)
+
+        # invariant feedback from vector norms (keeps branches coupled)
+        vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)       # (n, Fv) invariant
+        x = x + jax.nn.silu(_qact(vnorm, cfg, degrees)) @ _qw(params[f"{L}/w_vnorm"], cfg, "inv")
+
+    vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)
+    feats = jnp.concatenate([x, vnorm], axis=-1)
+    e_atom = jax.nn.silu(feats @ _qw(params["ro_w1"], cfg, "inv")) @ params["ro_w2"]
+    return jnp.sum(e_atom)
+
+
+def forces(params: Params, cfg: So3kratesConfig, species: jnp.ndarray,
+           coords: jnp.ndarray, codebook: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Conservative forces F = -dE/dr. (n, 3)."""
+    return -jax.grad(energy, argnums=3)(params, cfg, species, coords, codebook)
+
+
+def energy_and_forces(params, cfg, species, coords, codebook=None):
+    e, neg_f = jax.value_and_grad(energy, argnums=3)(params, cfg, species, coords, codebook)
+    return e, -neg_f

@@ -1,0 +1,65 @@
+"""Hand-rolled AdamW (no optax in this container) + cosine LR schedule.
+
+Pure-pytree implementation; state is a dict of pytrees so it shards exactly
+like the parameters (same PartitionSpecs) under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # global-norm clip; 0 disables
+
+    def init(self, params) -> AdamWState:
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=z,
+                          nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(sum(jnp.sum(g ** 2) for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: self.b2 * n + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, m, n):
+            return p - lr * ((m / bc1) / (jnp.sqrt(n / bc2) + self.eps)
+                             + self.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (base_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f

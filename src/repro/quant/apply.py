@@ -1,0 +1,73 @@
+"""Model-level quantization: convert a trained fp param tree into the
+serve-time W8/W4 representation consumed by `qlinear`'s serve modes.
+
+Policy (branch-separated, the paper's §III-D applied to LMs):
+  * every qlinear-consumed projection matrix -> (int8 | packed-int4, scale),
+    per-output-channel scales, computed per stacked matrix;
+  * precision-critical leaves stay fp: embeddings / lm head (accuracy),
+    norms/biases (tiny), MoE router (the "direction" analogue), conv taps;
+  * MoE expert tensors are quantized too (they dominate MoE bytes).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import pack_int4, qmax
+from repro.models.lm.config import LMConfig
+
+# paths (regex) of weights that go through qlinear or the expert einsums
+_QUANT_PATTERNS = [
+    r"attn/w[qkvo]$",
+    r"mlp/(wg|wu|wi|wd)$",
+    r"moe/(wg|wu|wd)$",
+    r"(^|/)m/(w_z|w_x|w_B|w_C|w_dt|out_proj)$",
+    r"b/(w_gate|w_up|wq|wk|wv|down|w_in)$",
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _per_matrix_scale(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-output-channel scale over the contracting (-2) axis only, so
+    stacked (depth, K, N) weights get independent scales per matrix."""
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax(bits)
+
+
+def quantize_matrix(w: jnp.ndarray, mode: str):
+    if mode == "serve_w8a8":
+        s = _per_matrix_scale(w, 8)
+        q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+        return (q, s.astype(jnp.float32))
+    if mode == "serve_w4a8":
+        s = _per_matrix_scale(w, 4)
+        q = jnp.clip(jnp.round(w / s), -7, 7).astype(jnp.int8)
+        return (pack_int4(q), s.astype(jnp.float32))
+    raise ValueError(mode)
+
+
+def quantize_params_tree(params, cfg: LMConfig):
+    mode = cfg.quant_mode
+    assert mode in ("serve_w8a8", "serve_w4a8")
+
+    def leaf(path, x):
+        p = _path_str(path)
+        if x.ndim >= 2 and any(re.search(pat, p) for pat in _QUANT_PATTERNS):
+            if mode == "serve_w4a8" and x.shape[-1] % 2:
+                return x  # odd minor dim: leave fp (none in assigned archs)
+            return quantize_matrix(x, mode)
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def quantized_bytes(tree) -> int:
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))

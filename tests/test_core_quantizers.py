@@ -1,0 +1,95 @@
+"""Unit + property tests for the invariant-branch linear quantizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+
+jax.config.update("jax_enable_x64", False)
+
+
+class TestScaleAndRoundTrip:
+    def test_qmax(self):
+        assert Q.qmax(8) == 127
+        assert Q.qmax(4) == 7
+
+    def test_abs_max_scale_per_tensor(self):
+        x = jnp.array([[-4.0, 2.0], [1.0, 3.0]])
+        s = Q.abs_max_scale(x, bits=8)
+        assert np.isclose(float(s), 4.0 / 127)
+
+    def test_abs_max_scale_per_channel(self):
+        x = jnp.array([[-4.0, 2.0], [1.0, 3.0]])
+        s = Q.abs_max_scale(x, bits=8, channel_axis=1)
+        assert s.shape == (1, 2)
+        np.testing.assert_allclose(np.asarray(s)[0], [4.0 / 127, 3.0 / 127])
+
+    def test_quant_dequant_error_bound(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (256, 64))
+        s = Q.abs_max_scale(x, 8)
+        err = jnp.abs(Q.dequantize(Q.quantize(x, s, 8), s) - x)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+
+    def test_fake_quant_idempotent(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (64,))
+        s = Q.abs_max_scale(x, 8)
+        y = Q.fake_quant(x, s, 8)
+        z = Q.fake_quant(y, s, 8)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-6)
+
+    @given(st.integers(2, 8))
+    @settings(max_examples=7, deadline=None)
+    def test_grid_size_property(self, bits):
+        x = jnp.linspace(-1, 1, 1001)
+        s = Q.abs_max_scale(x, bits)
+        y = np.unique(np.asarray(Q.fake_quant(x, s, bits)))
+        assert len(y) <= 2 ** bits  # symmetric grid has <= 2^b - 1 levels
+
+
+class TestSTE:
+    def test_fake_quant_ste_gradient_is_identity_inside_range(self):
+        x = jnp.array([0.1, -0.2, 0.3])
+        g = jax.grad(lambda v: jnp.sum(Q.fake_quant_ste(v, 8, scale=jnp.array(0.01))))(x)
+        np.testing.assert_allclose(np.asarray(g), np.ones(3), atol=1e-6)
+
+    def test_fake_quant_ste_gradient_zero_outside_range(self):
+        # value far beyond the representable range -> clipped -> zero grad
+        x = jnp.array([100.0])
+        g = jax.grad(lambda v: jnp.sum(Q.fake_quant_ste(v, 8, scale=jnp.array(0.01))))(x)
+        np.testing.assert_allclose(np.asarray(g), np.zeros(1), atol=1e-6)
+
+
+class TestInt4Packing:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_pack_unpack_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-8, 8, size=(4, 16)).astype(np.int8)
+        out = np.asarray(Q.unpack_int4(Q.pack_int4(jnp.asarray(q))))
+        np.testing.assert_array_equal(out, q)
+
+    def test_pack_halves_bytes(self):
+        q = jnp.zeros((8, 32), jnp.int8)
+        assert Q.pack_int4(q).shape == (8, 16)
+
+    def test_odd_dim_raises(self):
+        with pytest.raises(ValueError):
+            Q.pack_int4(jnp.zeros((3, 5), jnp.int8))
+
+
+class TestLogMagnitude:
+    def test_roundtrip_relative_error(self):
+        m = jnp.array([1e-4, 1e-2, 1.0, 10.0, 500.0])
+        code = Q.quantize_log_magnitude(m, 8)
+        m2 = Q.dequantize_log_magnitude(code, 8)
+        rel = np.abs(np.asarray(m2 / m) - 1.0)
+        # log grid with 256 levels over [1e-6, 1e3]: step = ln(1e9)/255 ~ 0.081
+        assert rel.max() < 0.05
+
+    def test_monotone(self):
+        m = jnp.linspace(1e-3, 100.0, 512)
+        code = np.asarray(Q.quantize_log_magnitude(m, 8))
+        assert (np.diff(code) >= 0).all()

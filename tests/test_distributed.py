@@ -1,0 +1,165 @@
+"""Tests: checkpoint manager (atomicity, corruption, resume, resharding),
+gradient compression (error feedback, int8 psum), sharding rules."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.compression import (ef_compress, ef_init, int8_psum,
+                                     int8_psum_tree)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(6.0), "step": jnp.asarray(3)}}
+
+
+class TestCheckpointManager:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        t = _tree()
+        mgr.save(10, t, extra={"loss": 1.5})
+        out = mgr.restore(10, jax.tree.map(jnp.zeros_like, t))
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b)), t, out)
+        assert mgr.extra(10)["loss"] == 1.5
+
+    def test_latest_skips_corrupt(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        t = _tree()
+        mgr.save(1, t)
+        mgr.save(2, t)
+        # corrupt step 2: flip bytes in one array file
+        d = tmp_path / "step_2"
+        manifest = json.load(open(d / "manifest.json"))
+        fname = next(iter(manifest["arrays"].values()))["file"]
+        with open(d / fname, "r+b") as f:
+            f.seek(100)
+            f.write(b"\xff\xff\xff\xff")
+        assert not mgr.is_valid(2)
+        assert mgr.latest_step() == 1
+
+    def test_keep_n_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        t = _tree()
+        for s in (1, 2, 3, 4):
+            mgr.save(s, t)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """Restore onto explicit shardings (the rescale path)."""
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        t = _tree()
+        mgr.save(5, t)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        out = mgr.restore(5, t, sh)
+        assert out["a"].sharding == NamedSharding(mesh, P())
+        np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(t["a"]))
+
+    def test_tmp_dir_cleanup_on_failure(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+
+        class Boom:
+            shape = (2,)
+
+            def __array__(self):
+                raise RuntimeError("boom")
+
+        with pytest.raises(Exception):
+            mgr.save(1, {"x": Boom()})
+        assert not [p for p in os.listdir(tmp_path) if p.startswith("step_1")]
+
+
+class TestGradientCompression:
+    def test_error_feedback_reduces_bias(self):
+        """With EF, the accumulated update converges to the true sum."""
+        g = {"w": jnp.full((64,), 0.003)}   # small grads: worst case for int8
+        state = ef_init(g)
+        total = jnp.zeros((64,))
+        for _ in range(50):
+            dq, state = ef_compress(g, state)
+            total = total + dq["w"]
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.full(64, 0.15), rtol=0.05)
+
+    def test_compression_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (128,))}
+        dq, state = ef_compress(g, ef_init(g))
+        err = np.abs(np.asarray(dq["w"] - g["w"]))
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+        assert err.max() <= scale / 2 + 1e-6
+        np.testing.assert_allclose(np.asarray(state.residual["w"]),
+                                   np.asarray(g["w"] - dq["w"]), atol=1e-7)
+
+    def test_int8_psum_shard_map(self):
+        """int8 collective matches fp psum on a real (1-sized) mesh axis."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16,))
+
+        f = shard_map(lambda v: int8_psum(v, "data"), mesh=mesh,
+                      in_specs=P(), out_specs=P())
+        out = f(x)
+        err = np.abs(np.asarray(out - x))
+        assert err.max() <= float(jnp.abs(x).max()) / 127 / 2 + 1e-6
+
+
+class TestShardingRules:
+    def test_param_specs_divisible(self):
+        """Every sharded dim divides the mesh axis on a 4x4 mesh."""
+        from repro import configs
+        from repro.launch import sharding as shd
+        from repro.launch.steps import abstract_params
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for arch in ["qwen2-0.5b", "zamba2-1.2b", "xlstm-1.3b",
+                     "qwen3-moe-30b-a3b"]:
+            cfg = configs.get_config(arch)
+            params = abstract_params(cfg)
+            specs = shd.param_specs(params, cfg, mesh)
+            # structure matches
+            assert jax.tree.structure(params, is_leaf=lambda x: hasattr(x, "shape")) \
+                .num_leaves == len(jax.tree.leaves(
+                    specs, is_leaf=lambda s: hasattr(s, "index") or s is None
+                    or type(s).__name__ == "PartitionSpec"))
+
+    def test_big_weights_are_sharded_on_production_mesh(self):
+        """On the 16x16 production mesh the large matrices must NOT be
+        replicated (memory would not fit otherwise). Runs in a subprocess
+        with 512 fake devices."""
+        import subprocess
+        import sys
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro import configs
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import abstract_params
+mesh = make_production_mesh(multi_pod=False)
+cfg = configs.get_config("qwen1.5-110b")
+params = abstract_params(cfg)
+specs = shd.param_specs(params, cfg, mesh)
+flat = {}
+def visit(path, spec):
+    key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    flat[key] = spec
+jax.tree_util.tree_map_with_path(visit, specs,
+    is_leaf=lambda s: type(s).__name__ == "PartitionSpec")
+for key in ["embed", "lm_head", "blocks/attn/wq", "blocks/mlp/wg"]:
+    assert any(s is not None for s in flat[key]), f"{key} replicated!"
+print("OK")
+"""
+        env = dict(os.environ, PYTHONPATH="src")
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, env=env, cwd=os.path.dirname(
+                               os.path.dirname(os.path.abspath(__file__))))
+        assert "OK" in r.stdout, r.stderr[-2000:]

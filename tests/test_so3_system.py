@@ -1,0 +1,128 @@
+"""System-level tests for the paper's model: equivariance, conservativity,
+QAT behaviour, MD integration, data pipeline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lee, make_codebook, random_rotation
+from repro.data.synthetic_md import make_ff, sample_dataset, sample_dataset_md
+from repro.md.nve import energy_drift_rate, init_state, nve_trajectory
+from repro.models import so3krates as so3
+
+CFG = so3.So3kratesConfig(feat=16, vec_feat=4, n_layers=2, dir_bits=8)
+MASSES = jnp.array([12.011] * 12 + [14.007] * 2 + [1.008] * 10)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = sample_dataset(jax.random.PRNGKey(0), 8)
+    params = so3.init_params(jax.random.PRNGKey(1), CFG)
+    return data, params
+
+
+class TestEquivariance:
+    def test_fp32_energy_invariant(self, setup):
+        data, params = setup
+        cfg = dataclasses.replace(CFG, quant="none")
+        coords = data["coords"][0]
+        R = random_rotation(jax.random.PRNGKey(2))
+        e1 = so3.energy(params, cfg, data["species"], coords)
+        e2 = so3.energy(params, cfg, data["species"], coords @ R.T)
+        assert abs(float(e1 - e2)) < 1e-4
+
+    def test_fp32_forces_equivariant(self, setup):
+        data, params = setup
+        cfg = dataclasses.replace(CFG, quant="none")
+        f = lambda c: so3.forces(params, cfg, data["species"], c)
+        R = random_rotation(jax.random.PRNGKey(3))
+        assert float(lee(f, data["coords"][0], R)) < 1e-4
+
+    def test_translation_invariance(self, setup):
+        data, params = setup
+        cfg = dataclasses.replace(CFG, quant="none")
+        coords = data["coords"][0]
+        e1 = so3.energy(params, cfg, data["species"], coords)
+        e2 = so3.energy(params, cfg, data["species"], coords + 5.0)
+        assert abs(float(e1 - e2)) < 1e-4
+
+    def test_gaq_lee_bounded_by_codebook(self, setup):
+        """Quantized-model LEE shrinks as the codebook refines."""
+        data, params = setup
+        errs = {}
+        for bits in (6, 12):
+            cfg = dataclasses.replace(CFG, quant="gaq_w4a8", dir_bits=bits)
+            cb = make_codebook(bits)
+            f = lambda c: so3.forces(params, cfg, data["species"], c, cb)
+            R = random_rotation(jax.random.PRNGKey(4))
+            errs[bits] = float(lee(f, data["coords"][0], R))
+        assert errs[12] < errs[6] + 1e-9
+
+    def test_permutation_equivariance(self, setup):
+        """Permuting atoms permutes forces (GNN invariant)."""
+        data, params = setup
+        cfg = dataclasses.replace(CFG, quant="none")
+        coords = data["coords"][0]
+        perm = np.random.default_rng(0).permutation(24)
+        f1 = so3.forces(params, cfg, data["species"], coords)
+        f2 = so3.forces(params, cfg, data["species"][perm], coords[perm])
+        np.testing.assert_allclose(np.asarray(f1)[perm], np.asarray(f2),
+                                   atol=1e-4)
+
+
+class TestConservativity:
+    def test_forces_are_gradient_field(self, setup):
+        """Finite-difference check F = -dE/dr."""
+        data, params = setup
+        cfg = dataclasses.replace(CFG, quant="none")
+        coords = data["coords"][0]
+        f = so3.forces(params, cfg, data["species"], coords)
+        eps = 1e-3
+        for (i, d) in [(0, 0), (5, 1), (13, 2)]:
+            dp = coords.at[i, d].add(eps)
+            dm = coords.at[i, d].add(-eps)
+            ep = so3.energy(params, cfg, data["species"], dp)
+            em = so3.energy(params, cfg, data["species"], dm)
+            fd = -(float(ep) - float(em)) / (2 * eps)
+            assert abs(fd - float(f[i, d])) < 2e-2
+
+
+class TestData:
+    def test_classical_ff_forces_conservative(self):
+        eq, sp, ff = make_ff()
+        f = ff.forces(eq)
+        eps = 1e-4
+        dp = eq.at[3, 1].add(eps)
+        dm = eq.at[3, 1].add(-eps)
+        fd = -(float(ff.energy(dp)) - float(ff.energy(dm))) / (2 * eps)
+        assert abs(fd - float(f[3, 1])) < 1e-2
+
+    def test_md_sampled_dataset_thermal(self):
+        """MD frames have finite, standardized labels and move away from eq."""
+        d = sample_dataset_md(jax.random.PRNGKey(0), 16, stride=10)
+        assert d["coords"].shape == (16, 24, 3)
+        assert np.isfinite(np.asarray(d["energy"])).all()
+        assert float(jnp.std(d["energy"])) == pytest.approx(1.0, rel=0.05)
+        eq, _, _ = make_ff()
+        disp = jnp.linalg.norm(d["coords"] - eq[None], axis=-1).mean()
+        assert 0.01 < float(disp) < 1.0
+
+
+class TestNVEIntegrator:
+    def test_harmonic_oscillator_energy_conserved(self):
+        """Two atoms on a spring: drift ~ 0 over many periods."""
+        k, r0 = 5.0, 1.5
+
+        def energy(c):
+            d = jnp.linalg.norm(c[0] - c[1])
+            return k * (d - r0) ** 2
+
+        force = lambda c: -jax.grad(energy)(c)
+        coords = jnp.array([[0.0, 0, 0], [1.8, 0, 0]])
+        masses = jnp.ones((2,)) * 12.0
+        st = init_state(jax.random.PRNGKey(0), coords, masses, force, 300.0)
+        _, e = nve_trajectory(st, masses, force, energy, 0.5, 4000, 40)
+        assert float(jnp.max(e) - jnp.min(e)) < 0.02 * abs(float(e[0])) + 1e-3
+        assert abs(energy_drift_rate(e, 0.5, 40, 2)) < 1e-3
