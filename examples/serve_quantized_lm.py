@@ -1,18 +1,30 @@
-"""Example: quantized LM serving (the memory-wall fix applied to decode).
+"""Example: quantized serving for both workloads via repro.launch.serve.
 
-Loads the qwen2-0.5b *family* smoke config, compares fp32 vs W8A8 vs W4A8
-(+ int8 KV cache) decode: memory footprint and tokens/s on CPU.
+1. LM decode (memory-wall fix): fp32 vs W8A8 vs W4A8 (+ int8 KV cache),
+   memory footprint and tokens/s on the qwen2-0.5b family smoke config.
+2. SO(3) force-field inference: the same quantized-kernel path behind
+   `repro.serving.QuantizedEngine` — batched, bucketed, variable-size
+   molecules (see examples/md_stability.py for the trained-model variant).
 
 Run:  PYTHONPATH=src python examples/serve_quantized_lm.py
 """
+import os
 import subprocess
 import sys
-import os
 
 env = dict(os.environ, PYTHONPATH="src")
+
 for quant, kv in [("none", False), ("serve_w8a8", True), ("serve_w4a8", True)]:
-    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
-           "--smoke", "--quant", quant, "--tokens", "16", "--batch", "2",
-           "--cache-len", "64"] + (["--kv-quant"] if kv else [])
-    print(f"\n== quant={quant} kv_quant={kv} ==")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--workload", "lm",
+           "--arch", "qwen2-0.5b", "--smoke", "--quant", quant,
+           "--tokens", "16", "--batch", "2", "--cache-len", "64"] \
+        + (["--kv-quant"] if kv else [])
+    print(f"\n== lm quant={quant} kv_quant={kv} ==")
     subprocess.run(cmd, check=True, env=env)
+
+print("\n== so3 batched quantized engine (w8a8) ==")
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--workload", "so3", "--mode", "w8a8", "--graphs", "8",
+                "--min-atoms", "6", "--max-atoms", "24",
+                "--buckets", "16", "32", "--lee"],
+               check=True, env=env)

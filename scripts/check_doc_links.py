@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Check that markdown cross-references in README.md and docs/ resolve.
+
+Validates every inline link `[text](target)` whose target is a relative
+path (external http(s) links and pure anchors are skipped; anchors on
+relative paths are checked against the target file's headings). Exits
+non-zero listing each broken link. Run from the repo root:
+
+    python scripts/check_doc_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = Path(__file__).resolve().parent.parent
+
+
+def heading_anchors(md: Path) -> set:
+    anchors = set()
+    for line in md.read_text().splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            slug = re.sub(r"[^\w\- ]", "", m.group(1).lower())
+            anchors.add(slug.strip().replace(" ", "-"))
+    return anchors
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in heading_anchors(md):
+                errors.append(f"{md}: broken anchor {target}")
+            continue
+        path_part, _, anchor = target.partition("#")
+        resolved = (md.parent / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md}: broken link {target}")
+        elif anchor and resolved.suffix == ".md" \
+                and anchor not in heading_anchors(resolved):
+            errors.append(f"{md}: broken anchor {target}")
+    return errors
+
+
+def main() -> int:
+    files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    errors = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken link(s)")
+        return 1
+    print(f"checked {len(files)} files: all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,7 +47,11 @@ class MDDQConfig:
 
 
 def _split(v: jnp.ndarray):
-    m = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    # NaN-safe norm: d||v||/dv at v = 0 is 0/0; clamping the squared norm
+    # before the sqrt makes the gradient exactly zero there instead, so
+    # zero vectors (isolated atoms, padded batch slots) stay differentiable.
+    m2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    m = jnp.sqrt(jnp.maximum(m2, _EPS * _EPS))
     u = v / jnp.maximum(m, _EPS)
     return m, u
 
@@ -79,8 +83,9 @@ def mddq_fake_quant(v: jnp.ndarray, cfg: MDDQConfig,
     else:
         m_hat = fake_quant_ste(m, cfg.magnitude_bits, channel_axis=None)
 
-    # zero vectors stay zero (direction undefined)
-    is_zero = m < _EPS
+    # zero vectors stay zero (direction undefined); <= because the safe
+    # norm in _split floors m at exactly _EPS for v == 0
+    is_zero = m <= _EPS
     return jnp.where(is_zero, 0.0, m_hat * u_hat)
 
 

@@ -82,6 +82,17 @@ def _w4a8_kernel(a_ref, as_ref, wp_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def w8a8_matmul(a_q, a_scale, w_q, w_scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
                 bk=DEFAULT_BK, interpret=False):
+    """Fused int8 x int8 -> f32 matmul with on-the-fly dequantization.
+
+    out[m, n] = sum_k a_q[m, k] * w_q[k, n] * a_scale[m, 0] * w_scale[0, n]
+
+    Accumulation is int32 on the MXU (exact); the scale multiply happens
+    once per output tile in f32. All of (M, N, K) must be divisible by the
+    block sizes — callers that cannot guarantee that should go through
+    ``repro.kernels.ops.matmul_w8a8``, which zero-pads to the 128-aligned
+    contract and slices the result. ``interpret=True`` runs the identical
+    kernel through the Pallas interpreter on CPU (no TPU required).
+    """
     m, k = a_q.shape
     k2, n = w_q.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
@@ -107,6 +118,15 @@ def w8a8_matmul(a_q, a_scale, w_q, w_scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def w4a8_matmul(a_q, a_scale, w_packed, w_scale, *, bm=DEFAULT_BM,
                 bn=DEFAULT_BN, bk=DEFAULT_BK, interpret=False):
+    """W4A8 variant of :func:`w8a8_matmul`: weights arrive nibble-packed.
+
+    ``w_packed`` holds two signed 4-bit values per uint8 along N (low
+    nibble first, see ``repro.core.quantizers.pack_int4``), so HBM traffic
+    for weights is 1/8 of fp32. Nibbles are sign-extended to int8 inside
+    the kernel (in VMEM/registers) and fed to the MXU as int8 x int8 ->
+    int32, identical to the W8 path from there on. Same 128-alignment
+    contract and ``interpret`` fallback as :func:`w8a8_matmul`.
+    """
     m, k = a_q.shape
     k2, n_half = w_packed.shape
     n = n_half * 2

@@ -43,6 +43,15 @@ def _per_matrix_scale(w: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 def quantize_matrix(w: jnp.ndarray, mode: str):
+    """One fp weight matrix -> its serving representation.
+
+    ``serve_w8a8``: (int8 (..., K, N), f32 scale (..., 1, N)) — symmetric
+    per-output-channel over the contracting axis.
+    ``serve_w4a8``: (uint8 (..., K, N//2) nibble-packed, f32 scale) — the
+    int4 grid is [-7, 7]; packing follows
+    ``repro.core.quantizers.pack_int4`` (low nibble first), matching the
+    in-kernel unpack of ``repro.kernels.quant_matmul.w4a8_matmul``.
+    """
     if mode == "serve_w8a8":
         s = _per_matrix_scale(w, 8)
         q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
@@ -55,6 +64,14 @@ def quantize_matrix(w: jnp.ndarray, mode: str):
 
 
 def quantize_params_tree(params, cfg: LMConfig):
+    """Convert a trained fp LM param tree into serve-time quantized form.
+
+    Leaves whose path matches ``_QUANT_PATTERNS`` (every qlinear-consumed
+    projection and MoE expert tensor) become ``(q, scale)`` tuples via
+    :func:`quantize_matrix`; all other leaves (embeddings, lm head, norms,
+    biases, router, conv taps) pass through unchanged. The result is what
+    ``repro.launch.serve --workload lm`` feeds the decode loop.
+    """
     mode = cfg.quant_mode
     assert mode in ("serve_w8a8", "serve_w4a8")
 
@@ -70,4 +87,7 @@ def quantize_params_tree(params, cfg: LMConfig):
 
 
 def quantized_bytes(tree) -> int:
+    """Total bytes of a (possibly quantized) param tree as stored —
+    int8/uint8 leaves count 1 byte per element, so the fp32-vs-served
+    ratio is the memory-compression factor reported by the launchers."""
     return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))

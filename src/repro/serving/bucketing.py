@@ -1,0 +1,135 @@
+"""Shape-class bucketing for variable-size molecular graphs.
+
+XLA (and especially the Pallas kernels) compile one program per input shape.
+Serving a stream of molecules whose atom counts vary freely would trigger a
+recompile per distinct ``n_atoms`` — fatal for latency. Instead every graph
+is assigned to a **bucket**: a fixed atom capacity drawn from a small ladder
+(default 16/32/64/128). Graphs are zero-padded up to their bucket capacity
+and stacked; batch sizes are likewise rounded up to a power-of-two **batch
+class** so the total number of distinct compiled shapes is
+``len(buckets) * len(batch classes)`` — a constant, independent of traffic.
+
+MXU alignment contract: the fused matmul kernels consume activations as a
+flattened ``(batch * capacity, features)`` matrix whose row count must be a
+multiple of 128 (one MXU tile side). ``plan_batches`` therefore rounds each
+batch so ``batch_class * capacity % 128 == 0``; the surplus rows are dummy
+all-padding molecules that are masked out of every result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Graph", "BucketSpec", "BatchPlan", "assign_bucket",
+           "plan_batches", "pad_graphs", "random_graphs", "MXU_LANE"]
+
+MXU_LANE = 128  # minor-dim tile side of the TPU MXU; the 128-alignment contract
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """One molecule: integer species codes (n,) and coordinates (n, 3)."""
+    species: np.ndarray
+    coords: np.ndarray
+
+    @property
+    def n_atoms(self) -> int:
+        return int(self.species.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """A shape class: molecules padded to ``capacity`` atoms, batched in
+    groups rounded up to a batch class with ``rows % 128 == 0``."""
+    capacity: int          # padded atom count per molecule
+    max_batch: int = 64    # upper bound on molecules per compiled batch
+
+    def batch_class(self, n_graphs: int) -> int:
+        """Smallest admissible batch size >= n_graphs: a power of two,
+        clamped to max_batch, then rounded up so batch*capacity is a
+        multiple of MXU_LANE (128)."""
+        b = 1
+        while b < min(n_graphs, self.max_batch):
+            b *= 2
+        b = min(b, self.max_batch)
+        # enforce the row-alignment contract: batch * capacity % 128 == 0
+        while (b * self.capacity) % MXU_LANE != 0:
+            b *= 2
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One compiled dispatch: which input graphs ride in which rows."""
+    bucket: BucketSpec
+    batch_size: int                 # rows in the stacked batch (incl. dummies)
+    graph_indices: Tuple[int, ...]  # positions in the caller's graph list
+
+
+def assign_bucket(n_atoms: int, buckets: Sequence[BucketSpec]) -> BucketSpec:
+    """Smallest bucket whose capacity holds the graph. Raises if none fits."""
+    for b in sorted(buckets, key=lambda b: b.capacity):
+        if n_atoms <= b.capacity:
+            return b
+    raise ValueError(
+        f"graph with {n_atoms} atoms exceeds the largest bucket "
+        f"({max(b.capacity for b in buckets)}); extend the bucket ladder")
+
+
+def random_graphs(n_graphs: int, min_atoms: int, max_atoms: int,
+                  n_species: int, seed: int = 0) -> List[Graph]:
+    """Uniform random molecules for benchmarks and smoke runs."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_graphs):
+        n = int(rng.integers(min_atoms, max_atoms + 1))
+        out.append(Graph(
+            species=rng.integers(0, n_species, n).astype(np.int32),
+            coords=(rng.normal(size=(n, 3)) * 2.0).astype(np.float32)))
+    return out
+
+
+def plan_batches(graphs: Sequence[Graph],
+                 buckets: Sequence[BucketSpec]) -> List[BatchPlan]:
+    """Group graphs into per-bucket batches of bounded shape classes."""
+    by_bucket: Dict[int, List[int]] = {}
+    spec_of: Dict[int, BucketSpec] = {}
+    for gi, g in enumerate(graphs):
+        spec = assign_bucket(g.n_atoms, buckets)
+        by_bucket.setdefault(spec.capacity, []).append(gi)
+        spec_of[spec.capacity] = spec
+    plans: List[BatchPlan] = []
+    for cap in sorted(by_bucket):
+        spec, idxs = spec_of[cap], by_bucket[cap]
+        for lo in range(0, len(idxs), spec.max_batch):
+            chunk = idxs[lo:lo + spec.max_batch]
+            plans.append(BatchPlan(bucket=spec,
+                                   batch_size=spec.batch_class(len(chunk)),
+                                   graph_indices=tuple(chunk)))
+    return plans
+
+
+def pad_graphs(graphs: Sequence[Graph], plan: BatchPlan,
+               pad_species: int = 0):
+    """Stack a plan's graphs into dense arrays with a validity mask.
+
+    Returns (species (B, cap) int32, coords (B, cap, 3) f32,
+    mask (B, cap) bool). Rows beyond ``len(plan.graph_indices)`` are dummy
+    all-padding molecules added only to satisfy the 128-row alignment.
+    Padded atoms get ``pad_species`` and coordinates far outside any cutoff
+    sphere would be wrong — they get zeros, and the forward pass masks them
+    out of the neighbour graph explicitly, so their values never matter.
+    """
+    cap, B = plan.bucket.capacity, plan.batch_size
+    species = np.full((B, cap), pad_species, dtype=np.int32)
+    coords = np.zeros((B, cap, 3), dtype=np.float32)
+    mask = np.zeros((B, cap), dtype=bool)
+    for row, gi in enumerate(plan.graph_indices):
+        g = graphs[gi]
+        n = g.n_atoms
+        species[row, :n] = np.asarray(g.species, dtype=np.int32)
+        coords[row, :n] = np.asarray(g.coords, dtype=np.float32)
+        mask[row, :n] = True
+    return species, coords, mask

@@ -1,0 +1,215 @@
+"""`QuantizedEngine` — batched, bucketed, quantized inference.
+
+The deployment entry point this repo's ROADMAP builds toward: variable-size
+molecular graphs in, per-molecule energies/forces out, with
+
+* **bucketing** (``repro.serving.bucketing``) bounding the number of
+  compiled shapes regardless of traffic mix,
+* **real quantized weights** (``repro.serving.qparams``) streamed through
+  the fused W8A8/W4A8 Pallas kernels — ``interpret=True`` is selected
+  automatically when no TPU is present so the identical code path runs on
+  CPU,
+* **masked batching** (``repro.serving.forward``): padded atoms are
+  excluded from results and diagnostics exactly, not approximately.
+
+Quickstart (see docs/serving.md):
+
+    from repro.models import so3krates as so3
+    from repro.serving import Graph, QuantizedEngine, ServeConfig
+
+    engine = QuantizedEngine.from_config(
+        so3.So3kratesConfig(feat=32, vec_feat=8, n_layers=2),
+        params=trained_params,                 # or None -> random init
+        serve=ServeConfig(mode="w8a8", bucket_sizes=(16, 32), max_batch=8))
+    engine.warmup()            # pre-compile every admissible shape class
+    results = engine.infer_batch([Graph(species, coords), ...])
+    results[0].energy, results[0].forces       # padding already stripped
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_codebook
+from repro.core.lee import random_rotations
+from repro.models import so3krates as so3
+from repro.serving.bucketing import (BucketSpec, Graph, pad_graphs,
+                                     plan_batches)
+from repro.serving.forward import batched_energy_and_forces
+from repro.serving.qparams import (fp32_bytes, quantize_so3_params,
+                                   serving_bytes)
+
+__all__ = ["ServeConfig", "MoleculeResult", "QuantizedEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-side knobs, orthogonal to the model architecture config."""
+    mode: str = "w8a8"                       # "fp32" | "w8a8" | "w4a8"
+    bucket_sizes: tuple = (16, 32, 64, 128)  # atom-capacity ladder
+    max_batch: int = 64                      # molecules per compiled batch
+    # MDDQ on l=1 features at serve time; None = follow the mode
+    # (on for quantized modes, off for fp32 so fp32 is a true reference)
+    quant_vectors: Optional[bool] = None
+    pad_species: int = 0
+
+    @property
+    def vectors_quantized(self) -> bool:
+        if self.quant_vectors is None:
+            return self.mode != "fp32"
+        return self.quant_vectors
+
+    def buckets(self) -> List[BucketSpec]:
+        return [BucketSpec(capacity=c, max_batch=self.max_batch)
+                for c in self.bucket_sizes]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoleculeResult:
+    """Per-molecule inference output with padding stripped."""
+    energy: float
+    forces: np.ndarray       # (n_atoms, 3)
+    n_atoms: int
+    bucket_capacity: int     # shape class the molecule rode in
+    batch_size: int
+
+
+class QuantizedEngine:
+    """Batched quantized-inference engine for the SO3krates force field."""
+
+    def __init__(self, model_cfg: so3.So3kratesConfig,
+                 params: Dict[str, jnp.ndarray], serve: ServeConfig):
+        self.model_cfg = model_cfg
+        self.serve = serve
+        self._fp32_bytes = fp32_bytes(params)   # fp32 tree is not retained
+        self.qparams = quantize_so3_params(params, serve.mode)
+        quant_vec = serve.vectors_quantized
+        self._codebook = (make_codebook(model_cfg.dir_bits)
+                          if quant_vec else None)
+        self._buckets = serve.buckets()
+        use_kernels = serve.mode != "fp32"
+
+        def _fwd(species, coords, mask):
+            return batched_energy_and_forces(
+                self.qparams, self.model_cfg, species, coords, mask,
+                self._codebook, quant_vectors=quant_vec,
+                use_kernels=use_kernels)
+
+        self._forward = jax.jit(_fwd)
+        self.compiled_shapes = set()
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, model_cfg: so3.So3kratesConfig,
+                    params: Optional[Dict[str, jnp.ndarray]] = None,
+                    serve: ServeConfig = ServeConfig(),
+                    seed: int = 0) -> "QuantizedEngine":
+        """Build an engine from a model config and (optionally) trained
+        fp32 params; random init when params is None (benchmarks, smoke)."""
+        if params is None:
+            params = so3.init_params(jax.random.PRNGKey(seed), model_cfg)
+        return cls(model_cfg, params, serve)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def interpret(self) -> bool:
+        """True when the Pallas kernels run in CPU interpret mode (no TPU)."""
+        return jax.default_backend() == "cpu"
+
+    @property
+    def backend(self) -> str:
+        return jax.default_backend()
+
+    def memory_report(self) -> Dict[str, int]:
+        served = serving_bytes(self.qparams)
+        return {"fp32_bytes": self._fp32_bytes, "served_bytes": served,
+                "compression_x": round(self._fp32_bytes / max(served, 1), 2)}
+
+    # -- serving ------------------------------------------------------------
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None,
+               batch_sizes: Optional[Sequence[int]] = None) -> float:
+        """Pre-compile the forward pass for the given shape classes.
+
+        By default every admissible batch class of every bucket is
+        compiled — the complete (finite) set of shapes ``infer_batch``
+        can ever dispatch, so a warmed engine never compiles under
+        traffic. Pass ``buckets`` and/or ``batch_sizes`` to restrict.
+        Returns wall-clock seconds spent compiling.
+        """
+        t0 = time.time()
+        caps = list(buckets) if buckets else [b.capacity
+                                              for b in self._buckets]
+        for cap in caps:
+            spec = next(b for b in self._buckets if b.capacity == cap)
+            if batch_sizes:
+                sizes = list(batch_sizes)
+            else:
+                # distinct batch classes for 1..max_batch graphs
+                sizes = sorted({spec.batch_class(n)
+                                for n in range(1, spec.max_batch + 1)})
+            for bsz in sizes:
+                self._run_padded(
+                    np.zeros((bsz, cap), np.int32),
+                    np.zeros((bsz, cap, 3), np.float32),
+                    np.zeros((bsz, cap), bool))
+        return time.time() - t0
+
+    def _run_padded(self, species, coords, mask):
+        self.compiled_shapes.add(species.shape)
+        e, f = self._forward(jnp.asarray(species), jnp.asarray(coords),
+                             jnp.asarray(mask))
+        return e, f
+
+    def infer_batch(self, graphs: Sequence[Graph]) -> List[MoleculeResult]:
+        """Energies and forces for a heterogeneous list of molecules.
+
+        Graphs are bucketed, padded, batched, and dispatched through the
+        quantized forward; results come back in input order with padding
+        (and dummy alignment molecules) stripped.
+        """
+        plans = plan_batches(graphs, self._buckets)
+        results: List[Optional[MoleculeResult]] = [None] * len(graphs)
+        for plan in plans:
+            species, coords, mask = pad_graphs(
+                graphs, plan, pad_species=self.serve.pad_species)
+            e, f = self._run_padded(species, coords, mask)
+            e = np.asarray(e)
+            f = np.asarray(f)
+            for row, gi in enumerate(plan.graph_indices):
+                n = graphs[gi].n_atoms
+                results[gi] = MoleculeResult(
+                    energy=float(e[row]), forces=f[row, :n],
+                    n_atoms=n, bucket_capacity=plan.bucket.capacity,
+                    batch_size=plan.batch_size)
+        return results  # type: ignore[return-value]
+
+    # -- diagnostics --------------------------------------------------------
+
+    def lee_diagnostic(self, graphs: Sequence[Graph], key: jax.Array,
+                       n_rotations: int = 4) -> Dict[str, float]:
+        """Local Equivariance Error of the *served* (quantized, batched)
+        model: || F(R.G) - R F(G) || per molecule, averaged over random
+        rotations, with padded atoms excluded by construction (forces on
+        them are exactly zero on both sides).
+        """
+        rots = np.asarray(random_rotations(key, n_rotations))
+        base = self.infer_batch(graphs)
+        errs = []
+        for R in rots:
+            rotated = [Graph(g.species, np.asarray(g.coords) @ R.T)
+                       for g in graphs]
+            rot_res = self.infer_batch(rotated)
+            for r0, r1 in zip(base, rot_res):
+                errs.append(float(np.linalg.norm(
+                    r1.forces - r0.forces @ R.T)))
+        return {"lee_mean": float(np.mean(errs)),
+                "lee_max": float(np.max(errs)),
+                "n_rotations": n_rotations, "n_graphs": len(graphs)}

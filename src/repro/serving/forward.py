@@ -1,0 +1,142 @@
+"""Batched, masked, quantized SO3krates forward pass.
+
+This is the serving counterpart of ``repro.models.so3krates.energy``: the
+same architecture (two-branch equivariant transformer, robust cosine
+attention, MDDQ on l=1 features) generalized to a *batch* of padded
+molecules and rewired so every per-atom matmul runs through the fused
+W8A8/W4A8 Pallas kernels via ``qparams.qmatmul``.
+
+Batching strategy: activations of shape (B, n_pad, F) are flattened to a
+single (B * n_pad, F) matrix per matmul — one kernel launch amortized over
+the whole batch, with B * n_pad a multiple of 128 by the bucketing
+contract (see ``repro.serving.bucketing``). Everything pairwise
+(attention, radial basis, vector messages) keeps the batch dimension and
+is masked so that
+
+* padded atoms never appear in any neighbour pair (``pair_mask`` carries
+  the per-atom validity mask on both sides),
+* padded atoms contribute exactly zero energy (masked readout sum), and
+* forces on padded atoms are exactly zero (the energy is independent of
+  their coordinates, so ``jax.grad`` returns 0 there).
+
+The same function body serves as its own oracle: ``use_kernels=False``
+swaps ``qmatmul`` for a pure-jnp integer-accumulation reference with
+identical quantization semantics, which is what ``tests/test_serving.py``
+compares against (batched kernels vs per-molecule reference, <= 1e-5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_codebook, mddq_fake_quant
+from repro.core.attention_norm import l2_normalize
+from repro.models.so3krates import So3kratesConfig, _layernorm, _rbf
+from repro.serving.qparams import QuantizedParams, qmatmul, ref_qmatmul
+
+__all__ = ["batched_energy", "batched_energy_and_forces"]
+
+
+def _dense(x: jnp.ndarray, qt, use_kernels: bool) -> jnp.ndarray:
+    """(B, n, F_in) @ W -> (B, n, F_out) through one flattened matmul."""
+    B, n, f = x.shape
+    mm = qmatmul if use_kernels else ref_qmatmul
+    y = mm(x.reshape(B * n, f), qt)
+    return y.reshape(B, n, -1)
+
+
+def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
+                   species: jnp.ndarray, coords: jnp.ndarray,
+                   mask: jnp.ndarray,
+                   codebook: Optional[jnp.ndarray] = None,
+                   *, quant_vectors: bool = True,
+                   use_kernels: bool = True) -> jnp.ndarray:
+    """Per-molecule energies for a padded batch.
+
+    species: (B, n) int32, coords: (B, n, 3) f32, mask: (B, n) bool
+    (True = real atom). Returns (B,) f32 — padded rows yield the energy of
+    the empty molecule (0 contributions), masked callers should ignore
+    them via the plan's graph indices.
+    """
+    B, n = species.shape
+    if codebook is None and quant_vectors:
+        codebook = make_codebook(cfg.dir_bits)
+
+    rij = coords[:, None, :, :] - coords[:, :, None, :]      # [b,i,j]=r_j-r_i
+    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
+    eye = jnp.eye(n, dtype=bool)[None]
+    pair_mask = ((d < cfg.cutoff) & ~eye
+                 & mask[:, :, None] & mask[:, None, :])      # (B, n, n)
+    u = rij / d[..., None]
+    rbf = _rbf(d, cfg) * pair_mask[..., None]                # (B, n, n, K)
+
+    x = qparams["embed"][species] * mask[..., None]          # (B, n, F)
+    v = jnp.zeros((B, n, cfg.vec_feat, 3))
+
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        xn = _layernorm(x, qparams[f"{L}/ln_g"], qparams[f"{L}/ln_b"])
+
+        q = _dense(xn, qparams[f"{L}/wq"], use_kernels)
+        k = _dense(xn, qparams[f"{L}/wk"], use_kernels)
+        bias = (rbf @ qparams[f"{L}/rbf_bias"])[..., 0]      # (B, n, n)
+        if cfg.robust_attention:
+            logits = cfg.tau * jnp.einsum(
+                "bif,bjf->bij", l2_normalize(q), l2_normalize(k)) + bias
+        else:
+            logits = jnp.einsum("bif,bjf->bij", q, k) \
+                / jnp.sqrt(q.shape[-1]) + bias
+        logits = jnp.where(pair_mask, logits, -1e9)
+        alpha = jax.nn.softmax(logits, axis=-1)              # (B, n, n)
+
+        # invariant messages (gate is rbf-masked -> padded pairs drop out)
+        msg = _dense(xn, qparams[f"{L}/wm"], use_kernels)
+        gate = rbf @ qparams[f"{L}/rbf_m"]                   # (B, n, n, F)
+        x = x + jnp.einsum("bij,bijf->bif", alpha,
+                           gate * msg[:, None, :, :])
+        h = jax.nn.silu(_dense(x, qparams[f"{L}/w_upd1"], use_kernels))
+        x = x + _dense(h, qparams[f"{L}/w_upd2"], use_kernels)
+
+        # equivariant messages: invariant coefficients x geometric directions
+        ca = _dense(xn, qparams[f"{L}/wa"], use_kernels)[:, None] \
+            * (rbf @ qparams[f"{L}/rbf_a"])                  # (B, n, n, Fv)
+        cb = _dense(xn, qparams[f"{L}/wb"], use_kernels)[:, None] \
+            * (rbf @ qparams[f"{L}/rbf_b"])
+        dv = jnp.einsum("bij,bijc,bijd->bicd", alpha, ca, u) \
+            + jnp.einsum("bij,bijc,bjcd->bicd", alpha, cb, v)
+        v = v + dv
+        if quant_vectors:
+            # padded atoms keep v == 0 forever; MDDQ maps zero vectors to
+            # zero and its norm gradient is NaN-safe there (core/mddq._split)
+            v = mddq_fake_quant(v, cfg.mddq(), codebook)
+
+        vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)        # (B, n, Fv)
+        x = x + _dense(jax.nn.silu(vnorm), qparams[f"{L}/w_vnorm"],
+                       use_kernels)
+
+    vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)
+    feats = jnp.concatenate([x, vnorm], axis=-1)
+    e_hid = jax.nn.silu(_dense(feats, qparams["ro_w1"], use_kernels))
+    e_atom = _dense(e_hid, qparams["ro_w2"], use_kernels)[..., 0]  # (B, n)
+    return jnp.sum(e_atom * mask, axis=-1)                   # (B,)
+
+
+def batched_energy_and_forces(qparams, cfg, species, coords, mask,
+                              codebook=None, *, quant_vectors=True,
+                              use_kernels=True):
+    """Energies (B,) and conservative forces (B, n, 3) = -dE/dr.
+
+    Differentiates through the quantized kernels via the straight-through
+    VJP in ``qparams.qmatmul``; padded atoms receive exactly zero force.
+    """
+    def total_energy(c):
+        e = batched_energy(qparams, cfg, species, c, mask, codebook,
+                           quant_vectors=quant_vectors,
+                           use_kernels=use_kernels)
+        return jnp.sum(e), e
+
+    (_, energies), neg_f = jax.value_and_grad(total_energy,
+                                              has_aux=True)(coords)
+    return energies, -neg_f

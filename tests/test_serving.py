@@ -1,0 +1,245 @@
+"""Tests for repro.serving: bucketing, padding semantics, batched-vs-
+reference agreement, and the CPU interpret fallback.
+
+All kernel paths run with interpret=True on CPU (selected automatically by
+repro.kernels.ops), so this suite exercises the exact code the engine
+serves with when no TPU is present.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import so3krates as so3
+from repro.serving import (BucketSpec, Graph, MXU_LANE, QuantizedEngine,
+                           ServeConfig, assign_bucket, pad_graphs,
+                           plan_batches, quantize_so3_params)
+from repro.serving.forward import batched_energy, batched_energy_and_forces
+
+CFG = so3.So3kratesConfig(feat=32, vec_feat=8, n_layers=2, n_rbf=8,
+                          dir_bits=6)
+
+
+def _graphs(ns, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Graph(species=rng.integers(0, CFG.n_species, n).astype(np.int32),
+                  coords=(rng.normal(size=(n, 3)) * 2.0).astype(np.float32))
+            for n in ns]
+
+
+@pytest.fixture(scope="module")
+def qparams_w8():
+    params = so3.init_params(jax.random.PRNGKey(0), CFG)
+    return quantize_so3_params(params, "w8a8")
+
+
+class TestBucketing:
+    def test_every_graph_gets_an_aligned_bucket(self):
+        buckets = [BucketSpec(16, max_batch=8), BucketSpec(32, max_batch=8),
+                   BucketSpec(64, max_batch=8)]
+        graphs = _graphs([3, 5, 11, 16, 17, 30, 33, 64, 7, 40])
+        plans = plan_batches(graphs, buckets)
+        covered = sorted(i for p in plans for i in p.graph_indices)
+        assert covered == list(range(len(graphs)))
+        for p in plans:
+            # alignment contract: total rows a multiple of the MXU lane
+            assert (p.batch_size * p.bucket.capacity) % MXU_LANE == 0
+            for gi in p.graph_indices:
+                assert graphs[gi].n_atoms <= p.bucket.capacity
+
+    def test_smallest_fitting_bucket_chosen(self):
+        buckets = [BucketSpec(16), BucketSpec(32), BucketSpec(64)]
+        assert assign_bucket(10, buckets).capacity == 16
+        assert assign_bucket(16, buckets).capacity == 16
+        assert assign_bucket(17, buckets).capacity == 32
+        assert assign_bucket(64, buckets).capacity == 64
+
+    def test_oversize_graph_raises(self):
+        with pytest.raises(ValueError, match="exceeds the largest bucket"):
+            assign_bucket(100, [BucketSpec(16), BucketSpec(64)])
+
+    def test_pad_graphs_mask_and_dummy_rows(self):
+        graphs = _graphs([5, 9])
+        buckets = [BucketSpec(16, max_batch=4)]
+        (plan,) = plan_batches(graphs, buckets)
+        species, coords, mask = pad_graphs(graphs, plan)
+        assert species.shape == (plan.batch_size, 16)
+        assert mask[0].sum() == 5 and mask[1].sum() == 9
+        # dummy alignment molecules are all-padding
+        assert not mask[len(graphs):].any()
+        np.testing.assert_array_equal(coords[0, 5:], 0.0)
+
+
+class TestPaddingSemantics:
+    def test_padded_atoms_zero_force_and_energy(self, qparams_w8):
+        g = _graphs([10])[0]
+        B, cap = 1, 16
+        species = np.zeros((B, cap), np.int32)
+        coords = np.zeros((B, cap, 3), np.float32)
+        mask = np.zeros((B, cap), bool)
+        species[0, :10], coords[0, :10], mask[0, :10] = g.species, g.coords, True
+        e, f = batched_energy_and_forces(
+            qparams_w8, CFG, jnp.asarray(species), jnp.asarray(coords),
+            jnp.asarray(mask))
+        f = np.asarray(f)
+        # forces on padded atoms are exactly zero (energy independent of them)
+        np.testing.assert_array_equal(f[0, 10:], 0.0)
+        assert np.isfinite(f).all() and np.isfinite(float(e[0]))
+
+    def test_energy_invariant_to_bucket_capacity(self, qparams_w8):
+        """The same molecule padded into a larger shape class yields the
+        same energy/forces — padding never leaks into results."""
+        g = _graphs([12], seed=3)[0]
+        out = {}
+        for cap in (16, 32):
+            species = np.zeros((1, cap), np.int32)
+            coords = np.zeros((1, cap, 3), np.float32)
+            mask = np.zeros((1, cap), bool)
+            species[0, :12], coords[0, :12], mask[0, :12] = \
+                g.species, g.coords, True
+            e, f = batched_energy_and_forces(
+                qparams_w8, CFG, jnp.asarray(species), jnp.asarray(coords),
+                jnp.asarray(mask))
+            out[cap] = (float(e[0]), np.asarray(f)[0, :12])
+        assert abs(out[16][0] - out[32][0]) < 1e-5
+        np.testing.assert_allclose(out[16][1], out[32][1], atol=1e-5)
+
+    def test_padded_coords_never_leak(self, qparams_w8):
+        """Garbage in the padded coordinate slots must not change results."""
+        g = _graphs([8], seed=4)[0]
+        cap = 16
+        species = np.zeros((1, cap), np.int32)
+        mask = np.zeros((1, cap), bool)
+        species[0, :8], mask[0, :8] = g.species, True
+        outs = []
+        for junk in (0.0, 1e3):
+            coords = np.full((1, cap, 3), junk, np.float32)
+            coords[0, :8] = g.coords
+            e, f = batched_energy_and_forces(
+                qparams_w8, CFG, jnp.asarray(species), jnp.asarray(coords),
+                jnp.asarray(mask))
+            outs.append((float(e[0]), np.asarray(f)[0, :8]))
+        assert outs[0][0] == pytest.approx(outs[1][0], abs=1e-6)
+        np.testing.assert_allclose(outs[0][1], outs[1][1], atol=1e-6)
+
+
+class TestBatchedMatchesReference:
+    @pytest.mark.parametrize("mode", ["w8a8", "w4a8"])
+    def test_batched_kernel_vs_per_molecule_reference(self, mode):
+        """Batched Pallas path == per-molecule pure-jnp oracle, <= 1e-5
+        (fp32 accumulation), for energies AND forces."""
+        params = so3.init_params(jax.random.PRNGKey(0), CFG)
+        qp = quantize_so3_params(params, mode)
+        ns = [5, 9, 14, 16]
+        B, cap = 4, 16
+        species = np.zeros((B, cap), np.int32)
+        coords = np.zeros((B, cap, 3), np.float32)
+        mask = np.zeros((B, cap), bool)
+        gs = _graphs(ns, seed=1)
+        for r, g in enumerate(gs):
+            n = g.n_atoms
+            species[r, :n], coords[r, :n], mask[r, :n] = \
+                g.species, g.coords, True
+        e_b, f_b = batched_energy_and_forces(
+            qp, CFG, jnp.asarray(species), jnp.asarray(coords),
+            jnp.asarray(mask), use_kernels=True)
+        for r, g in enumerate(gs):
+            e_r, f_r = batched_energy_and_forces(
+                qp, CFG, jnp.asarray(species[r:r + 1]),
+                jnp.asarray(coords[r:r + 1]), jnp.asarray(mask[r:r + 1]),
+                use_kernels=False)
+            assert abs(float(e_b[r] - e_r[0])) <= 1e-5
+            np.testing.assert_allclose(np.asarray(f_b[r]),
+                                       np.asarray(f_r[0]), atol=1e-5)
+
+    def test_fp32_mode_matches_original_model(self):
+        """ServeConfig(mode=fp32, no vector quant) reproduces the original
+        single-molecule so3krates forward."""
+        cfg = so3.So3kratesConfig(feat=32, vec_feat=8, n_layers=2, n_rbf=8,
+                                  quant="none")
+        params = so3.init_params(jax.random.PRNGKey(2), cfg)
+        qp = quantize_so3_params(params, "fp32")
+        g = _graphs([14], seed=5)[0]
+        e_ref = float(so3.energy(params, cfg, jnp.asarray(g.species),
+                                 jnp.asarray(g.coords)))
+        e_srv = batched_energy(qp, cfg, jnp.asarray(g.species[None]),
+                               jnp.asarray(g.coords[None]),
+                               jnp.ones((1, 14), bool),
+                               quant_vectors=False)
+        assert abs(float(e_srv[0]) - e_ref) < 1e-4 * max(1.0, abs(e_ref))
+
+
+class TestEngine:
+    def test_cpu_fallback_and_end_to_end(self):
+        """The engine auto-selects interpret mode on CPU and produces
+        finite, correctly-shaped, input-ordered results."""
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16, 32), max_batch=8)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        assert engine.backend == "cpu"
+        assert engine.interpret  # CPU fallback path is what this suite runs
+        graphs = _graphs([5, 20, 9], seed=7)
+        results = engine.infer_batch(graphs)
+        assert [r.n_atoms for r in results] == [5, 20, 9]
+        assert results[1].bucket_capacity == 32
+        for r in results:
+            assert r.forces.shape == (r.n_atoms, 3)
+            assert np.isfinite(r.forces).all() and np.isfinite(r.energy)
+        mem = engine.memory_report()
+        assert mem["served_bytes"] < mem["fp32_bytes"]
+
+    def test_engine_matches_direct_forward(self):
+        """infer_batch (bucketed, dummy-padded) == calling the forward
+        directly on a hand-padded batch."""
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        graphs = _graphs([6, 11], seed=9)
+        results = engine.infer_batch(graphs)
+        for g, r in zip(graphs, results):
+            cap = 16
+            species = np.zeros((1, cap), np.int32)
+            coords = np.zeros((1, cap, 3), np.float32)
+            mask = np.zeros((1, cap), bool)
+            n = g.n_atoms
+            species[0, :n], coords[0, :n], mask[0, :n] = \
+                g.species, g.coords, True
+            e, f = batched_energy_and_forces(
+                engine.qparams, CFG, jnp.asarray(species),
+                jnp.asarray(coords), jnp.asarray(mask),
+                engine._codebook)
+            assert abs(float(e[0]) - r.energy) <= 1e-5
+            np.testing.assert_allclose(np.asarray(f)[0, :n], r.forces,
+                                       atol=1e-5)
+
+    def test_warmup_compiles_shape_classes(self):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        engine.warmup()
+        # max_batch=8, capacity 16: every admissible batch class is the
+        # single aligned class (8, 16) -> exactly one compiled shape
+        assert engine.compiled_shapes == {(8, 16)}
+        # a warmed engine never compiles a new shape under traffic
+        engine.infer_batch(_graphs([5, 9, 11], seed=13))
+        assert engine.compiled_shapes == {(8, 16)}
+
+    def test_isolated_atoms_finite_forces(self):
+        """Atoms with no neighbours inside the cutoff keep v == 0 through
+        every layer; the NaN-safe norm in core.mddq must keep their force
+        gradient finite (regression: 0/0 in d||v||/dv at v = 0)."""
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        single = Graph(species=np.array([1], np.int32),
+                       coords=np.zeros((1, 3), np.float32))
+        far_pair = Graph(species=np.array([1, 1], np.int32),
+                         coords=np.array([[0, 0, 0], [50, 0, 0]],
+                                         np.float32))
+        for r in engine.infer_batch([single, far_pair]):
+            assert np.isfinite(r.energy)
+            assert np.isfinite(r.forces).all()
+
+    def test_lee_diagnostic_masks_padding(self):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        diag = engine.lee_diagnostic(_graphs([7, 12], seed=11),
+                                     jax.random.PRNGKey(0), n_rotations=2)
+        assert np.isfinite(diag["lee_mean"])
+        assert diag["lee_mean"] >= 0.0
