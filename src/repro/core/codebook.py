@@ -14,6 +14,8 @@ approximately commutes with rotations. We provide:
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -81,8 +83,15 @@ def _octahedral_rotations() -> np.ndarray:
     return out
 
 
+@functools.lru_cache(maxsize=None)
 def make_codebook(bits: int = 8, kind: str = "fibonacci") -> jnp.ndarray:
-    """Codebook with 2**bits entries (or the closest achievable size)."""
+    """Codebook with 2**bits entries (or the closest achievable size).
+
+    Cached: the host-side lattice construction is pure in (bits, kind)
+    and gets called per forward by serving/engine code — a 16-bit
+    codebook is 65536 numpy trig evaluations we only want once. The
+    returned jax array is immutable, so sharing one instance is safe.
+    """
     n = 2 ** bits
     if kind == "fibonacci":
         pts = fibonacci_sphere(n)

@@ -28,10 +28,12 @@ def _mddq_kernel(vx_ref, vy_ref, vz_ref, cb_ref, idx_ref, mag_ref, *,
     ux, uy, uz = vx * inv, vy * inv, vz * inv
 
     cb = cb_ref[...]                                         # (3, C)
-    # scores (bn, C): outer products on the VPU; padded codebook entries are
-    # (0,0,0) -> score 0 < 1 >= some real entry's score for any unit u? Not
-    # guaranteed; pad entries are set to (0,0,-2) upstream so score <= -? No:
-    # we pad with the first codeword so argmax never selects junk.
+    # scores (bn, C): outer products on the VPU. The 128-alignment padding
+    # of the codebook (ops.pad_codebook) appends COPIES OF CODEWORD 0, so
+    # a padded column can only ever tie codeword 0's score — and argmax
+    # returns the first maximizing index, i.e. the real index 0, never a
+    # padded slot. (Padding with zero vectors would NOT be safe: score 0
+    # beats every real codeword in the half-sphere opposite to u.)
     scores = (ux[:, None] * cb[0][None, :]
               + uy[:, None] * cb[1][None, :]
               + uz[:, None] * cb[2][None, :])
@@ -44,7 +46,8 @@ def _mddq_kernel(vx_ref, vy_ref, vz_ref, cb_ref, idx_ref, mag_ref, *,
     mag_ref[...] = jnp.clip(jnp.round(t * levels), 0, levels).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "mag_bits", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "mag_bits", "m_min",
+                                             "m_max", "interpret"))
 def mddq_encode_kernel(vx, vy, vz, codebook_t, *, bn=DEFAULT_BN, mag_bits=8,
                        m_min=1e-6, m_max=1e3, interpret=False):
     """vx/vy/vz: (N,) f32 planar components; codebook_t: (3, C) f32.

@@ -12,10 +12,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizers import abs_max_scale, pack_int4, quantize
+from repro.core.quantizers import (abs_max_scale, dequantize_log_magnitude,
+                                   pack_int4, quantize)
 from . import quant_matmul as _qm
 from . import mddq_kernel as _mk
 from . import attention_int8kv as _ak
+from . import edge_softmax as _es
+from . import ref as _ref
 
 
 def _interpret() -> bool:
@@ -101,8 +104,10 @@ def pad_codebook(codebook: jnp.ndarray) -> jnp.ndarray:
     return codebook.T.copy()
 
 
-@functools.partial(jax.jit, static_argnames=("bn",))
-def mddq_encode(v: jnp.ndarray, codebook_t: jnp.ndarray, bn: int = 1024):
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "mag_bits", "m_min", "m_max"))
+def mddq_encode(v: jnp.ndarray, codebook_t: jnp.ndarray, bn: int = 1024,
+                mag_bits: int = 8, m_min: float = 1e-6, m_max: float = 1e3):
     """v: (..., 3) fp -> (dir_idx int32, mag_code int32) of shape (...)."""
     lead = v.shape[:-1]
     flat = v.reshape(-1, 3)
@@ -112,8 +117,139 @@ def mddq_encode(v: jnp.ndarray, codebook_t: jnp.ndarray, bn: int = 1024):
         flat = jnp.concatenate([flat, jnp.ones((npad, 3), flat.dtype)], 0)
     idx, mag = _mk.mddq_encode_kernel(
         flat[:, 0].copy(), flat[:, 1].copy(), flat[:, 2].copy(), codebook_t,
-        bn=min(bn, flat.shape[0]), interpret=_interpret())
+        bn=min(bn, flat.shape[0]), mag_bits=mag_bits, m_min=m_min,
+        m_max=m_max, interpret=_interpret())
     return idx[:n].reshape(lead), mag[:n].reshape(lead)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def mddq_qdq_kernel(v, mddq_cfg, codebook):
+    """Serve-time MDDQ quantize-dequantize through the Pallas encode kernel.
+
+    Forward: ``mddq_encode_kernel`` (codebook argmax + log-magnitude code)
+    followed by the table decode — the value the serving engine would
+    reconstruct from stored codes. Backward: the Geometric-STE gradients
+    of the pure-jnp reference ``core.mddq.mddq_fake_quant`` (same pattern
+    as ``qmatmul``: integer forward, straight-through backward), so forces
+    differentiate through the kernel path. Zero vectors map to exactly
+    zero, matching the reference (isolated atoms, padded slots).
+
+    v: (..., 3); mddq_cfg: ``core.mddq.MDDQConfig`` (static, hashable);
+    codebook: (C, 3). ``ServeConfig.mddq_kernel`` selects this over the
+    fake-quant reference.
+    """
+    return _mddq_qdq_impl(v, mddq_cfg, codebook)
+
+
+def _mddq_qdq_impl(v, mddq_cfg, codebook):
+    if mddq_cfg.magnitude_domain != "log":
+        raise NotImplementedError(
+            "mddq_encode_kernel quantizes magnitudes on the log grid only; "
+            "use the fake-quant reference for linear-domain configs")
+    idx, mag = mddq_encode(v, pad_codebook(codebook),
+                           mag_bits=mddq_cfg.magnitude_bits,
+                           m_min=mddq_cfg.m_min, m_max=mddq_cfg.m_max)
+    m_q = dequantize_log_magnitude(mag, mddq_cfg.magnitude_bits,
+                                   mddq_cfg.m_min, mddq_cfg.m_max)
+    out = codebook[idx] * m_q[..., None]
+    m2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    return jnp.where(m2 <= 1e-24, 0.0, out)  # 1e-24 = core.mddq._EPS ** 2
+
+
+def _mddq_qdq_fwd(v, mddq_cfg, codebook):
+    return _mddq_qdq_impl(v, mddq_cfg, codebook), (v, codebook)
+
+
+def _mddq_qdq_bwd(mddq_cfg, res, g):
+    from repro.core.mddq import mddq_fake_quant
+    v, codebook = res
+    _, vjp = jax.vjp(lambda v_: mddq_fake_quant(v_, mddq_cfg, codebook), v)
+    (gv,) = vjp(g)
+    return gv, jnp.zeros_like(codebook)  # codebook frozen at serve time
+
+
+mddq_qdq_kernel.defvjp(_mddq_qdq_fwd, _mddq_qdq_bwd)
+
+
+# --- fused edge softmax (sparse serving path) ---------------------------------
+
+_NEG_BIAS = -1e9  # masked-edge logit; matches the dense forward's pair mask
+
+
+def _edge_softmax_pallas(q_scaled, k, bias, values, senders, receivers,
+                         edge_mask, cap):
+    """Layout prep + kernel launch. Folds the bias into the key's last
+    column (queries get a constant-1 column), zeroes masked keys/values,
+    localizes receiver indices, and pads feature dims to the 128-lane
+    contract before calling ``edge_softmax_kernel``."""
+    n, _ = q_scaled.shape
+    w = values.shape[1]
+    qp = _pad_to(jnp.concatenate(
+        [q_scaled, jnp.ones((n, 1), q_scaled.dtype)], axis=1), 1, 128)
+    k_e = k[senders] * edge_mask[:, None]
+    bias_m = jnp.where(edge_mask, bias, _NEG_BIAS)
+    kp = _pad_to(jnp.concatenate([k_e, bias_m[:, None]], axis=1), 1, 128)
+    vp = _pad_to(values * edge_mask[:, None], 1, 128)
+    recv_local = (receivers % cap).astype(jnp.int32)
+    out = _es.edge_softmax_kernel(qp, kp, recv_local, vp, cap=cap,
+                                  interpret=_interpret())
+    return out[:, :w]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def _edge_softmax_fused(q_scaled, k, bias, values, senders, receivers,
+                        edge_mask, cap):
+    return _edge_softmax_pallas(q_scaled, k, bias, values, senders,
+                                receivers, edge_mask, cap)
+
+
+def _edge_softmax_fwd(q_scaled, k, bias, values, senders, receivers,
+                      edge_mask, cap):
+    out = _edge_softmax_pallas(q_scaled, k, bias, values, senders,
+                               receivers, edge_mask, cap)
+    return out, (q_scaled, k, bias, values, senders, receivers, edge_mask)
+
+
+def _edge_softmax_bwd(cap, res, g):
+    # true gradients via the jnp oracle (identical math to the kernel);
+    # forces F = -dE/dr differentiate through the fused forward this way
+    q_scaled, k, bias, values, senders, receivers, edge_mask = res
+
+    def f(q_, k_, b_, v_):
+        return _ref.edge_softmax_ref(q_, k_, b_, senders, receivers,
+                                     edge_mask, v_, q_.shape[0])
+
+    _, vjp = jax.vjp(f, q_scaled, k, bias, values)
+    gq, gk, gb, gv = vjp(g)
+    f0 = lambda a: np.zeros(a.shape, jax.dtypes.float0)  # int/bool inputs
+    return gq, gk, gb, gv, f0(senders), f0(receivers), f0(edge_mask)
+
+
+_edge_softmax_fused.defvjp(_edge_softmax_fwd, _edge_softmax_bwd)
+
+
+def edge_softmax(q_scaled, k, bias, values, senders, receivers, edge_mask,
+                 *, cap: int, use_kernel=None):
+    """out[i] = sum_{e: recv(e)=i} alpha_e * values[e], alpha the segment
+    softmax of q_scaled[recv] . k[send] + bias over each receiver.
+
+    ``use_kernel=None`` auto-selects: the fused Pallas kernel only on a
+    TPU backend (its block specs and VMEM scratch are TPU-specific), XLA
+    segment ops (``ref.edge_softmax_ref``) everywhere else — on CPU the
+    interpreter has nothing to fuse *for*, and on GPU the segment ops
+    compile natively while the TPU kernel would not lower; pass
+    True/False to force either (tests force True to exercise the kernel
+    under interpret). Both paths agree to ~1e-6 and both are
+    differentiable (the kernel via a custom VJP whose backward runs the
+    oracle's gradients).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return _edge_softmax_fused(q_scaled, k, bias, values, senders,
+                                   receivers, edge_mask, cap)
+    return _ref.edge_softmax_ref(q_scaled, k, bias, senders, receivers,
+                                 edge_mask, values, q_scaled.shape[0])
 
 
 # --- int8-KV decode attention --------------------------------------------------

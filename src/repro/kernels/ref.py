@@ -34,6 +34,30 @@ def mddq_encode_ref(v, codebook, mag_bits=8, m_min=1e-6, m_max=1e3):
     return idx, mag
 
 
+# --- edge softmax (sparse serving path) --------------------------------------
+
+def edge_softmax_ref(q_scaled, k, bias, senders, receivers, edge_mask,
+                     values, n_nodes):
+    """Segment softmax + weighted segment-sum over an edge list.
+
+    q_scaled/k: (N, F) node features (attention scale folded into q);
+    bias/senders/receivers/edge_mask: (E,); values: (E, W).
+    Returns (N, W): out[i] = sum_{e: recv=i} alpha_e * values[e] with
+    alpha the per-receiver softmax of q[recv] . k[send] + bias. Masked
+    edges get logit -1e9 and zeroed values; receivers with no real edges
+    yield exactly zero.
+    """
+    logits = jnp.sum(q_scaled[receivers] * k[senders], axis=-1) + bias
+    logits = jnp.where(edge_mask, logits, -1e9)
+    seg_max = jax.ops.segment_max(logits, receivers, n_nodes)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    p = jnp.exp(logits - seg_max[receivers])
+    denom = jax.ops.segment_sum(p, receivers, n_nodes)
+    num = jax.ops.segment_sum(p[:, None] * (values * edge_mask[:, None]),
+                              receivers, n_nodes)
+    return num / jnp.maximum(denom, 1e-20)[:, None]
+
+
 # --- int8-KV decode attention ------------------------------------------------
 
 def decode_attention_int8kv_ref(q, k_q, k_scale, v_q, v_scale, *, softmax_scale):

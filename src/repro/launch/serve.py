@@ -92,10 +92,11 @@ def run_so3(args) -> None:
                                     dir_bits=args.dir_bits)
     serve = ServeConfig(mode=args.mode,
                         bucket_sizes=tuple(args.buckets),
-                        max_batch=args.max_batch)
+                        max_batch=args.max_batch,
+                        path=args.path)
     engine = QuantizedEngine.from_config(model_cfg, serve=serve)
     graphs = random_graphs(args.graphs, args.min_atoms, args.max_atoms,
-                           model_cfg.n_species)
+                           model_cfg.n_species, density=args.density)
 
     mem = engine.memory_report()
     print(f"workload=so3 mode={args.mode} backend={engine.backend} "
@@ -114,9 +115,11 @@ def run_so3(args) -> None:
     results = engine.infer_batch(graphs)
     dt = time.time() - t0
     buckets_used = sorted({r.bucket_capacity for r in results})
+    paths_used = sorted({r.path for r in results})
     print(f"infer_batch: {len(graphs)} molecules "
           f"({args.min_atoms}-{args.max_atoms} atoms) in {dt:.2f}s "
-          f"-> {len(graphs)/dt:.1f} mol/s, buckets used {buckets_used}")
+          f"-> {len(graphs)/dt:.1f} mol/s, buckets used {buckets_used}, "
+          f"paths {paths_used} (dispatch {engine.dispatch_stats})")
 
     if args.lee:
         diag = engine.lee_diagnostic(graphs[:4], jax.random.PRNGKey(1),
@@ -149,6 +152,16 @@ def main():
     ap.add_argument("--vec-feat", type=int, default=8)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--dir-bits", type=int, default=8)
+    ap.add_argument("--path", default="auto",
+                    choices=["dense", "sparse", "auto"],
+                    help="so3 execution path: dense O(n^2), or the "
+                         "sparse O(E) edge list (sparse/auto; batches "
+                         "whose cutoff graph overflows the bucket's edge "
+                         "capacity fall back to dense, see dispatch "
+                         "stats)")
+    ap.add_argument("--density", type=float, default=None,
+                    help="atoms per cubic Angstrom for the random graphs "
+                         "(None = legacy dense cloud)")
     ap.add_argument("--lee", action="store_true",
                     help="also report the served model's LEE diagnostic")
     args = ap.parse_args()

@@ -172,21 +172,52 @@ def _rbf(d: jnp.ndarray, cfg: So3kratesConfig) -> jnp.ndarray:
     return phi * env[..., None]
 
 
+def _vnorm(v: jnp.ndarray) -> jnp.ndarray:
+    """Invariant per-channel vector norms. (..., Fv, 3) -> (..., Fv)."""
+    return jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)
+
+
+def pair_geometry(coords: jnp.ndarray, cfg: So3kratesConfig,
+                  mask: Optional[jnp.ndarray] = None):
+    """Dense pairwise geometry, shared by the QAT model and the serving
+    oracle. coords: (..., n, 3); mask: (..., n) bool or None (True = real
+    atom). Returns (d, u, rbf, pair_mask) with leading dims preserved:
+    d (..., n, n), u = (r_j - r_i)/d, rbf masked to zero outside the
+    cutoff graph, pair_mask excluding self-pairs and padded atoms.
+    """
+    n = coords.shape[-2]
+    rij = coords[..., None, :, :] - coords[..., :, None, :]  # [i,j]=r_j-r_i
+    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
+    pair_mask = (d < cfg.cutoff) & ~jnp.eye(n, dtype=bool)
+    if mask is not None:
+        pair_mask = pair_mask & mask[..., :, None] & mask[..., None, :]
+    u = rij / d[..., None]
+    rbf = _rbf(d, cfg) * pair_mask[..., None]
+    return d, u, rbf, pair_mask
+
+
+def cosine_logits(q: jnp.ndarray, k: jnp.ndarray, bias: jnp.ndarray,
+                  cfg: So3kratesConfig, robust: bool) -> jnp.ndarray:
+    """Dense attention logits (..., n, n): the paper's robust cosine form
+    (tau * <q/|q|, k/|k|>) or plain scaled dot product, plus the
+    invariant radial-basis bias."""
+    if robust:
+        return cfg.tau * jnp.einsum("...if,...jf->...ij", l2_normalize(q),
+                                    l2_normalize(k)) + bias
+    return jnp.einsum("...if,...jf->...ij", q, k) \
+        / jnp.sqrt(q.shape[-1]) + bias
+
+
 def energy(params: Params, cfg: So3kratesConfig, species: jnp.ndarray,
            coords: jnp.ndarray, codebook: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Total energy of one molecule. species: (n,) int, coords: (n, 3)."""
     if codebook is None and cfg.quant != "none":
         codebook = make_codebook(cfg.dir_bits)
-    n = coords.shape[0]
-    rij = coords[None, :, :] - coords[:, None, :]          # r_j - r_i
-    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
-    mask = (d < cfg.cutoff) & ~jnp.eye(n, dtype=bool)
-    u = rij / d[..., None]                                  # Y_1 direction
-    rbf = _rbf(d, cfg) * mask[..., None]
+    d, u, rbf, mask = pair_geometry(coords, cfg)
     degrees = mask.sum(-1).astype(jnp.float32)
 
     x = params["embed"][species]                            # (n, F)
-    v = jnp.zeros((n, cfg.vec_feat, 3))
+    v = jnp.zeros((coords.shape[0], cfg.vec_feat, 3))
 
     for i in range(cfg.n_layers):
         L = f"layer{i}"
@@ -196,11 +227,9 @@ def energy(params: Params, cfg: So3kratesConfig, species: jnp.ndarray,
         q = xn @ _qw(params[f"{L}/wq"], cfg, "inv")
         k = xn @ _qw(params[f"{L}/wk"], cfg, "inv")
         bias = (rbf @ params[f"{L}/rbf_bias"])[..., 0]      # (n, n) invariant
-        if cfg.robust_attention and cfg.quant != "naive_int8" \
-                and cfg.quant != "degree_quant":
-            logits = cfg.tau * (l2_normalize(q) @ l2_normalize(k).T) + bias
-        else:
-            logits = (q @ k.T) / jnp.sqrt(q.shape[-1]) + bias
+        robust = (cfg.robust_attention and cfg.quant != "naive_int8"
+                  and cfg.quant != "degree_quant")
+        logits = cosine_logits(q, k, bias, cfg, robust)
         logits = jnp.where(mask, logits, -1e9)
         alpha = jax.nn.softmax(logits, axis=-1)             # (n, n)
 
@@ -220,10 +249,10 @@ def energy(params: Params, cfg: So3kratesConfig, species: jnp.ndarray,
         v = _qvec(v, cfg, codebook)
 
         # invariant feedback from vector norms (keeps branches coupled)
-        vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)       # (n, Fv) invariant
+        vnorm = _vnorm(v)                                   # (n, Fv) invariant
         x = x + jax.nn.silu(_qact(vnorm, cfg, degrees)) @ _qw(params[f"{L}/w_vnorm"], cfg, "inv")
 
-    vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)
+    vnorm = _vnorm(v)
     feats = jnp.concatenate([x, vnorm], axis=-1)
     e_atom = jax.nn.silu(feats @ _qw(params["ro_w1"], cfg, "inv")) @ params["ro_w2"]
     return jnp.sum(e_atom)

@@ -3,7 +3,9 @@
 The deployment layer of the GAQ reproduction: takes variable-size
 molecular graphs, buckets and pads them into MXU-aligned (multiple-of-128)
 shape classes to bound recompilation, runs the quantized SO3krates forward
-pass through the fused W8A8/W4A8 Pallas kernels (CPU ``interpret=True``
+pass — dense O(n^2) oracle or sparse O(E) edge-list path with its fused
+segment-softmax kernel, selected per batch by ``ServeConfig.path`` —
+through the fused W8A8/W4A8 Pallas kernels (CPU ``interpret=True``
 fallback selected automatically when no TPU is present), and returns
 per-molecule energies and conservative forces with padding masked out of
 both results and LEE diagnostics.
@@ -23,19 +25,24 @@ Public API:
 See docs/serving.md for the full semantics and docs/architecture.md for
 where this layer sits in the module map.
 """
-from repro.serving.bucketing import (BatchPlan, BucketSpec, Graph, MXU_LANE,
-                                     assign_bucket, pad_graphs, plan_batches,
-                                     random_graphs)
+from repro.serving.bucketing import (BatchPlan, BucketSpec, EDGE_LANE,
+                                     EdgeList, Graph, MXU_LANE,
+                                     assign_bucket, build_edge_list,
+                                     count_edges, default_edge_capacity,
+                                     pad_graphs, plan_batches, random_graphs)
 from repro.serving.engine import MoleculeResult, QuantizedEngine, ServeConfig
-from repro.serving.forward import batched_energy, batched_energy_and_forces
+from repro.serving.forward import (batched_energy, batched_energy_and_forces,
+                                   sparse_energy, sparse_energy_and_forces)
 from repro.serving.qparams import (QTensor, qmatmul, quantize_so3_params,
                                    ref_qmatmul, serving_bytes)
 
 __all__ = [
-    "BatchPlan", "BucketSpec", "Graph", "MXU_LANE", "assign_bucket",
-    "pad_graphs", "plan_batches", "random_graphs",
+    "BatchPlan", "BucketSpec", "EDGE_LANE", "EdgeList", "Graph", "MXU_LANE",
+    "assign_bucket", "build_edge_list", "count_edges",
+    "default_edge_capacity", "pad_graphs", "plan_batches", "random_graphs",
     "MoleculeResult", "QuantizedEngine", "ServeConfig",
     "batched_energy", "batched_energy_and_forces",
+    "sparse_energy", "sparse_energy_and_forces",
     "QTensor", "qmatmul", "quantize_so3_params", "ref_qmatmul",
     "serving_bytes",
 ]

@@ -14,18 +14,45 @@ flattened ``(batch * capacity, features)`` matrix whose row count must be a
 multiple of 128 (one MXU tile side). ``plan_batches`` therefore rounds each
 batch so ``batch_class * capacity % 128 == 0``; the surplus rows are dummy
 all-padding molecules that are masked out of every result.
+
+Edge capacity (the sparse serving path): every bucket also carries an
+**edge capacity** — a fixed, 128-aligned number of directed-edge slots per
+molecule. ``build_edge_list`` fills each molecule's slots with its real
+cutoff-graph edges (sorted by receiver) and pads the rest with masked
+self-loops, so the sparse forward and the ``edge_softmax`` kernel see one
+static shape per (bucket, batch class) — same recompilation bound as the
+dense path, but O(E) instead of O(n^2) memory and FLOPs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Graph", "BucketSpec", "BatchPlan", "assign_bucket",
-           "plan_batches", "pad_graphs", "random_graphs", "MXU_LANE"]
+__all__ = ["Graph", "BucketSpec", "BatchPlan", "EdgeList", "assign_bucket",
+           "plan_batches", "pad_graphs", "build_edge_list", "count_edges",
+           "default_edge_capacity", "random_graphs", "MXU_LANE", "EDGE_LANE"]
 
 MXU_LANE = 128  # minor-dim tile side of the TPU MXU; the 128-alignment contract
+EDGE_LANE = 128  # edge slots are padded to a multiple of this (kernel block)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def default_edge_capacity(capacity: int) -> int:
+    """Default per-molecule edge-slot count for a bucket.
+
+    Small buckets get the complete graph (n*(n-1) directed pairs — no graph
+    can overflow); from ~32 atoms up the capacity is clamped to an average
+    degree of 16 neighbours, the regime where the sparse path wins. Always
+    a multiple of EDGE_LANE. Molecules denser than the capacity fall back
+    to the dense path at plan time (see ``QuantizedEngine``).
+    """
+    full = capacity * (capacity - 1)
+    return _round_up(max(1, min(full, capacity * 16)), EDGE_LANE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +69,25 @@ class Graph:
 @dataclasses.dataclass(frozen=True)
 class BucketSpec:
     """A shape class: molecules padded to ``capacity`` atoms, batched in
-    groups rounded up to a batch class with ``rows % 128 == 0``."""
+    groups rounded up to a batch class with ``rows % 128 == 0``.
+
+    ``edge_capacity`` is the per-molecule edge-slot count for the sparse
+    path (None -> ``default_edge_capacity(capacity)``); it must be a
+    multiple of EDGE_LANE so the segment-softmax kernel's edge blocks
+    tile exactly.
+    """
     capacity: int          # padded atom count per molecule
     max_batch: int = 64    # upper bound on molecules per compiled batch
+    edge_capacity: Optional[int] = None  # per-molecule edge slots (sparse)
+
+    @property
+    def edges(self) -> int:
+        ec = (default_edge_capacity(self.capacity)
+              if self.edge_capacity is None else self.edge_capacity)
+        if ec % EDGE_LANE != 0:
+            raise ValueError(
+                f"edge_capacity {ec} is not a multiple of {EDGE_LANE}")
+        return ec
 
     def batch_class(self, n_graphs: int) -> int:
         """Smallest admissible batch size >= n_graphs: a power of two,
@@ -79,15 +122,29 @@ def assign_bucket(n_atoms: int, buckets: Sequence[BucketSpec]) -> BucketSpec:
 
 
 def random_graphs(n_graphs: int, min_atoms: int, max_atoms: int,
-                  n_species: int, seed: int = 0) -> List[Graph]:
-    """Uniform random molecules for benchmarks and smoke runs."""
+                  n_species: int, seed: int = 0,
+                  density: Optional[float] = None) -> List[Graph]:
+    """Uniform random molecules for benchmarks and smoke runs.
+
+    ``density`` (atoms per cubic Angstrom) switches to constant-density
+    placement: atoms uniform in a cube whose volume grows with n, so the
+    cutoff graph has a size-independent average degree — the physical
+    regime where the sparse path's O(E) beats the dense O(n^2). The
+    default (None) keeps the legacy normal(0, 2) cloud, which is nearly
+    fully connected under typical cutoffs.
+    """
     rng = np.random.default_rng(seed)
     out = []
     for _ in range(n_graphs):
         n = int(rng.integers(min_atoms, max_atoms + 1))
+        if density is None:
+            coords = rng.normal(size=(n, 3)) * 2.0
+        else:
+            side = (n / density) ** (1.0 / 3.0)
+            coords = rng.uniform(0.0, side, size=(n, 3))
         out.append(Graph(
             species=rng.integers(0, n_species, n).astype(np.int32),
-            coords=(rng.normal(size=(n, 3)) * 2.0).astype(np.float32)))
+            coords=coords.astype(np.float32)))
     return out
 
 
@@ -133,3 +190,84 @@ def pad_graphs(graphs: Sequence[Graph], plan: BatchPlan,
         coords[row, :n] = np.asarray(g.coords, dtype=np.float32)
         mask[row, :n] = True
     return species, coords, mask
+
+
+# ---------------------------------------------------------------------------
+# neighbour lists (the sparse serving path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """Padded edge list for one batch, flat-indexed into ``(B * cap,)``.
+
+    Layout contract (what ``repro.kernels.edge_softmax`` assumes):
+
+    * molecule ``b`` owns edge slots ``[b * edge_capacity, (b+1) * ec)``
+      exclusively — edges never cross molecule slot ranges;
+    * within a molecule's range, real edges come first, **sorted by
+      receiver**, followed by masked padding edges;
+    * padding edges are self-loops on the molecule's first atom slot
+      (sender == receiver == b * cap) with ``edge_mask == False``;
+    * ``receivers[e] // cap == senders[e] // cap == e // edge_capacity``
+      for every slot, masked or not.
+    """
+    senders: np.ndarray        # (B * ec,) int32, flat node index of atom j
+    receivers: np.ndarray      # (B * ec,) int32, flat node index of atom i
+    edge_mask: np.ndarray      # (B * ec,) bool, True = real cutoff edge
+    edge_capacity: int         # ec: slots per molecule
+    n_real: int                # total real edges across the batch
+
+
+def _pair_adjacency(coords: np.ndarray, mask: np.ndarray,
+                    cutoff: float) -> np.ndarray:
+    """Host-side cutoff-graph adjacency (B, cap, cap): d < cutoff, no
+    self-pairs, both atoms real — the single numpy mirror of the dense
+    forward's ``pair_geometry`` predicate (keep the two in sync)."""
+    d = np.linalg.norm(coords[:, :, None, :] - coords[:, None, :, :], axis=-1)
+    cap = coords.shape[1]
+    return ((d < cutoff) & ~np.eye(cap, dtype=bool)[None]
+            & mask[:, :, None] & mask[:, None, :])
+
+
+def count_edges(coords: np.ndarray, mask: np.ndarray,
+                cutoff: float) -> np.ndarray:
+    """Directed cutoff-graph edge count per molecule. coords: (B, cap, 3),
+    mask: (B, cap) -> (B,) int. Used at plan time to decide whether a
+    batch fits a bucket's edge capacity."""
+    return _pair_adjacency(coords, mask, cutoff).sum(axis=(1, 2))
+
+
+def build_edge_list(coords: np.ndarray, mask: np.ndarray, cutoff: float,
+                    edge_capacity: int) -> Optional[EdgeList]:
+    """Host-side neighbour-list construction for a padded batch.
+
+    coords: (B, cap, 3) f32, mask: (B, cap) bool. Emits the exact edge set
+    of the dense forward's ``pair_mask`` (d < cutoff, no self-pairs, both
+    atoms real), receiver-sorted, padded to ``edge_capacity`` slots per
+    molecule. Returns None when any molecule's edge count exceeds the
+    capacity — the caller falls back to the dense path for this batch.
+    """
+    B, cap = mask.shape
+    pair = _pair_adjacency(coords, mask, cutoff)             # (B, cap, cap)
+
+    senders = np.zeros(B * edge_capacity, dtype=np.int32)
+    receivers = np.zeros(B * edge_capacity, dtype=np.int32)
+    edge_mask = np.zeros(B * edge_capacity, dtype=bool)
+    n_real = 0
+    for b in range(B):
+        i, j = np.nonzero(pair[b])       # row-major: already receiver-sorted
+        e = i.shape[0]
+        if e > edge_capacity:
+            return None
+        lo = b * edge_capacity
+        receivers[lo:lo + e] = b * cap + i
+        senders[lo:lo + e] = b * cap + j
+        edge_mask[lo:lo + e] = True
+        # padding slots: masked self-loops on the molecule's first atom,
+        # so every index stays inside molecule b's node range
+        receivers[lo + e:lo + edge_capacity] = b * cap
+        senders[lo + e:lo + edge_capacity] = b * cap
+        n_real += e
+    return EdgeList(senders=senders, receivers=receivers,
+                    edge_mask=edge_mask, edge_capacity=edge_capacity,
+                    n_real=n_real)

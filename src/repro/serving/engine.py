@@ -5,12 +5,17 @@ molecular graphs in, per-molecule energies/forces out, with
 
 * **bucketing** (``repro.serving.bucketing``) bounding the number of
   compiled shapes regardless of traffic mix,
+* **two execution paths** (``repro.serving.forward``): the dense O(n^2)
+  oracle and the sparse O(E) edge-list path with its fused
+  segment-softmax kernel; ``ServeConfig.path`` selects, and ``"auto"``
+  dispatches each batch sparse whenever its cutoff graph fits the
+  bucket's edge capacity (falling back to dense when it doesn't),
 * **real quantized weights** (``repro.serving.qparams``) streamed through
   the fused W8A8/W4A8 Pallas kernels — ``interpret=True`` is selected
   automatically when no TPU is present so the identical code path runs on
   CPU,
-* **masked batching** (``repro.serving.forward``): padded atoms are
-  excluded from results and diagnostics exactly, not approximately.
+* **masked batching**: padded atoms are excluded from results and
+  diagnostics exactly, not approximately.
 
 Quickstart (see docs/serving.md):
 
@@ -38,9 +43,10 @@ import numpy as np
 from repro.core import make_codebook
 from repro.core.lee import random_rotations
 from repro.models import so3krates as so3
-from repro.serving.bucketing import (BucketSpec, Graph, pad_graphs,
-                                     plan_batches)
-from repro.serving.forward import batched_energy_and_forces
+from repro.serving.bucketing import (BucketSpec, Graph, build_edge_list,
+                                     count_edges, pad_graphs, plan_batches)
+from repro.serving.forward import (batched_energy_and_forces,
+                                   sparse_energy_and_forces)
 from repro.serving.qparams import (fp32_bytes, quantize_so3_params,
                                    serving_bytes)
 
@@ -57,6 +63,28 @@ class ServeConfig:
     # (on for quantized modes, off for fp32 so fp32 is a true reference)
     quant_vectors: Optional[bool] = None
     pad_species: int = 0
+    # execution path: "dense" (O(n^2) oracle), "sparse" (always prefer the
+    # O(E) edge list), or "auto" (edge list only for buckets where it is
+    # profitable — see QuantizedEngine._sparse_profitable — so
+    # small-molecule traffic keeps the faster dense path). Both
+    # sparse-preferring modes run a batch dense when its cutoff graph
+    # overflows the bucket's edge capacity — counted in
+    # engine.dispatch_stats["sparse_fallback"] — so warmup() compiles
+    # dense shapes for every path.
+    path: str = "auto"
+    # per-molecule edge slots; None = bucketing.default_edge_capacity(cap)
+    edge_capacity: Optional[int] = None
+    # fused segment-softmax Pallas kernel; None = auto (kernel on TPU,
+    # XLA segment ops on CPU — see kernels.ops.edge_softmax)
+    edge_kernel: Optional[bool] = None
+    # route serve-time vector quantization through the MDDQ Pallas encode
+    # kernel (kernels.ops.mddq_qdq_kernel) instead of the pure-jnp
+    # fake-quant reference
+    mddq_kernel: bool = False
+
+    def __post_init__(self):
+        if self.path not in ("dense", "sparse", "auto"):
+            raise ValueError(f"unknown path {self.path!r}")
 
     @property
     def vectors_quantized(self) -> bool:
@@ -65,7 +93,8 @@ class ServeConfig:
         return self.quant_vectors
 
     def buckets(self) -> List[BucketSpec]:
-        return [BucketSpec(capacity=c, max_batch=self.max_batch)
+        return [BucketSpec(capacity=c, max_batch=self.max_batch,
+                           edge_capacity=self.edge_capacity)
                 for c in self.bucket_sizes]
 
 
@@ -77,6 +106,7 @@ class MoleculeResult:
     n_atoms: int
     bucket_capacity: int     # shape class the molecule rode in
     batch_size: int
+    path: str = "dense"      # execution path the molecule's batch took
 
 
 class QuantizedEngine:
@@ -94,14 +124,27 @@ class QuantizedEngine:
         self._buckets = serve.buckets()
         use_kernels = serve.mode != "fp32"
 
-        def _fwd(species, coords, mask):
+        def _fwd_dense(species, coords, mask):
             return batched_energy_and_forces(
                 self.qparams, self.model_cfg, species, coords, mask,
                 self._codebook, quant_vectors=quant_vec,
-                use_kernels=use_kernels)
+                use_kernels=use_kernels, mddq_kernel=serve.mddq_kernel)
 
-        self._forward = jax.jit(_fwd)
+        def _fwd_sparse(species, coords, mask, senders, receivers,
+                        edge_mask):
+            return sparse_energy_and_forces(
+                self.qparams, self.model_cfg, species, coords, mask,
+                senders, receivers, edge_mask, self._codebook,
+                quant_vectors=quant_vec, use_kernels=use_kernels,
+                edge_kernel=serve.edge_kernel,
+                mddq_kernel=serve.mddq_kernel)
+
+        self._forward_dense = jax.jit(_fwd_dense)
+        self._forward_sparse = jax.jit(_fwd_sparse)
         self.compiled_shapes = set()
+        # batches dispatched per path; "sparse_fallback" counts batches a
+        # sparse-preferring config had to run dense (edge-capacity overflow)
+        self.dispatch_stats = {"dense": 0, "sparse": 0, "sparse_fallback": 0}
 
     # -- construction -------------------------------------------------------
 
@@ -139,10 +182,13 @@ class QuantizedEngine:
         """Pre-compile the forward pass for the given shape classes.
 
         By default every admissible batch class of every bucket is
-        compiled — the complete (finite) set of shapes ``infer_batch``
-        can ever dispatch, so a warmed engine never compiles under
-        traffic. Pass ``buckets`` and/or ``batch_sizes`` to restrict.
-        Returns wall-clock seconds spent compiling.
+        compiled, for every path this config can dispatch — sparse paths
+        also warm their dense shapes, because edge-capacity overflow
+        falls back to dense at dispatch time. That is the complete
+        (finite) set of shapes ``infer_batch`` can ever hit, so a warmed
+        engine never compiles under traffic. Pass ``buckets`` and/or
+        ``batch_sizes`` to restrict. Returns wall-clock seconds spent
+        compiling.
         """
         t0 = time.time()
         caps = list(buckets) if buckets else [b.capacity
@@ -156,31 +202,80 @@ class QuantizedEngine:
                 sizes = sorted({spec.batch_class(n)
                                 for n in range(1, spec.max_batch + 1)})
             for bsz in sizes:
-                self._run_padded(
-                    np.zeros((bsz, cap), np.int32),
-                    np.zeros((bsz, cap, 3), np.float32),
-                    np.zeros((bsz, cap), bool))
+                species = np.zeros((bsz, cap), np.int32)
+                coords = np.zeros((bsz, cap, 3), np.float32)
+                mask = np.zeros((bsz, cap), bool)
+                # dense is always warmed: it is the overflow fallback of
+                # every sparse-preferring config, so even path="sparse"
+                # can dispatch it under traffic
+                self._run_dense(species, coords, mask)
+                if self._wants_sparse(spec):
+                    el = build_edge_list(coords, mask, self.model_cfg.cutoff,
+                                         spec.edges)
+                    self._run_sparse(species, coords, mask, el)
         return time.time() - t0
 
-    def _run_padded(self, species, coords, mask):
+    def _run_dense(self, species, coords, mask):
         self.compiled_shapes.add(species.shape)
-        e, f = self._forward(jnp.asarray(species), jnp.asarray(coords),
-                             jnp.asarray(mask))
-        return e, f
+        return self._forward_dense(jnp.asarray(species), jnp.asarray(coords),
+                                   jnp.asarray(mask))
+
+    def _run_sparse(self, species, coords, mask, el):
+        self.compiled_shapes.add(("sparse",) + species.shape
+                                 + (el.edge_capacity,))
+        return self._forward_sparse(
+            jnp.asarray(species), jnp.asarray(coords), jnp.asarray(mask),
+            jnp.asarray(el.senders), jnp.asarray(el.receivers),
+            jnp.asarray(el.edge_mask))
+
+    # "auto" dispatches sparse only when the dense pairwise work is at
+    # least this many times the padded edge-slot count — the gather /
+    # segment-reduction overhead means break-even needs headroom, and 4x
+    # matches the measured CPU crossover (dense wins at 16/32 atoms,
+    # sparse from 64 up; see BENCH_serving.json)
+    _SPARSE_PROFIT_FACTOR = 4
+
+    def _sparse_profitable(self, spec: BucketSpec) -> bool:
+        """Whether the edge-list path is expected to beat dense for this
+        bucket: n^2 pairwise work >= 4x the padded edge slots."""
+        return spec.capacity ** 2 >= self._SPARSE_PROFIT_FACTOR * spec.edges
+
+    def _wants_sparse(self, spec: BucketSpec) -> bool:
+        if self.serve.path == "sparse":
+            return True              # explicit override, even if slower
+        return self.serve.path == "auto" and self._sparse_profitable(spec)
+
+    def _dispatch(self, species, coords, mask, spec: BucketSpec):
+        """Run one padded batch down the configured path. Returns
+        (energies, forces, path_taken)."""
+        if self._wants_sparse(spec):
+            el = build_edge_list(coords, mask, self.model_cfg.cutoff,
+                                 spec.edges)
+            if el is not None:
+                self.dispatch_stats["sparse"] += 1
+                e, f = self._run_sparse(species, coords, mask, el)
+                return e, f, "sparse"
+            # cutoff graph denser than the bucket's edge capacity
+            self.dispatch_stats["sparse_fallback"] += 1
+        self.dispatch_stats["dense"] += 1
+        e, f = self._run_dense(species, coords, mask)
+        return e, f, "dense"
 
     def infer_batch(self, graphs: Sequence[Graph]) -> List[MoleculeResult]:
         """Energies and forces for a heterogeneous list of molecules.
 
         Graphs are bucketed, padded, batched, and dispatched through the
-        quantized forward; results come back in input order with padding
-        (and dummy alignment molecules) stripped.
+        quantized forward (sparse edge-list path when configured and the
+        batch's cutoff graph fits the edge capacity); results come back
+        in input order with padding (and dummy alignment molecules)
+        stripped.
         """
         plans = plan_batches(graphs, self._buckets)
         results: List[Optional[MoleculeResult]] = [None] * len(graphs)
         for plan in plans:
             species, coords, mask = pad_graphs(
                 graphs, plan, pad_species=self.serve.pad_species)
-            e, f = self._run_padded(species, coords, mask)
+            e, f, path = self._dispatch(species, coords, mask, plan.bucket)
             e = np.asarray(e)
             f = np.asarray(f)
             for row, gi in enumerate(plan.graph_indices):
@@ -188,10 +283,27 @@ class QuantizedEngine:
                 results[gi] = MoleculeResult(
                     energy=float(e[row]), forces=f[row, :n],
                     n_atoms=n, bucket_capacity=plan.bucket.capacity,
-                    batch_size=plan.batch_size)
+                    batch_size=plan.batch_size, path=path)
         return results  # type: ignore[return-value]
 
     # -- diagnostics --------------------------------------------------------
+
+    def edge_occupancy(self, graphs: Sequence[Graph]) -> Dict[str, float]:
+        """How full the sparse path's edge slots would be for this traffic:
+        per-plan real-edge counts vs capacity. Useful for sizing
+        ``ServeConfig.edge_capacity``."""
+        plans = plan_batches(graphs, self._buckets)
+        occ, overflow = [], 0
+        for plan in plans:
+            _, coords, mask = pad_graphs(graphs, plan,
+                                         pad_species=self.serve.pad_species)
+            counts = count_edges(coords, mask, self.model_cfg.cutoff)
+            cap_e = plan.bucket.edges
+            occ.append(float(counts.max()) / cap_e)
+            overflow += int((counts > cap_e).sum())
+        return {"max_occupancy": max(occ) if occ else 0.0,
+                "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+                "molecules_overflowing": overflow}
 
     def lee_diagnostic(self, graphs: Sequence[Graph], key: jax.Array,
                        n_rotations: int = 4) -> Dict[str, float]:

@@ -1,28 +1,29 @@
-"""Batched, masked, quantized SO3krates forward pass.
+"""Batched, masked, quantized SO3krates forward passes: dense and sparse.
 
-This is the serving counterpart of ``repro.models.so3krates.energy``: the
-same architecture (two-branch equivariant transformer, robust cosine
-attention, MDDQ on l=1 features) generalized to a *batch* of padded
-molecules and rewired so every per-atom matmul runs through the fused
-W8A8/W4A8 Pallas kernels via ``qparams.qmatmul``.
+Two executions of the same architecture (see ``repro.models.so3krates``,
+whose geometry/attention helpers both paths share):
 
-Batching strategy: activations of shape (B, n_pad, F) are flattened to a
-single (B * n_pad, F) matrix per matmul — one kernel launch amortized over
-the whole batch, with B * n_pad a multiple of 128 by the bucketing
-contract (see ``repro.serving.bucketing``). Everything pairwise
-(attention, radial basis, vector messages) keeps the batch dimension and
-is masked so that
+* **Dense** (``batched_energy``) — the original O(B * n^2) path: pairwise
+  (B, n, n, .) radial-basis and coefficient tensors, masked softmax over
+  full rows. Exact and simple; kept as the correctness oracle and as the
+  fallback for molecules denser than a bucket's edge capacity.
+* **Sparse** (``sparse_energy``) — the O(E) edge-list path: the cutoff
+  graph arrives as padded ``(senders, receivers, edge_mask)`` arrays from
+  ``bucketing.build_edge_list``; attention, rbf gating, and both
+  equivariant message terms are computed on *gathered edge features* and
+  reduced with a segment softmax / segment sum — one fused
+  ``edge_softmax`` launch per layer carrying the scalar message AND both
+  equivariant message terms in a single value matrix. Memory and FLOPs
+  scale with the number of edges, not atoms squared, which is what lets
+  molecules far beyond the ~64-atom dense regime fit.
 
-* padded atoms never appear in any neighbour pair (``pair_mask`` carries
-  the per-atom validity mask on both sides),
-* padded atoms contribute exactly zero energy (masked readout sum), and
-* forces on padded atoms are exactly zero (the energy is independent of
-  their coordinates, so ``jax.grad`` returns 0 there).
-
-The same function body serves as its own oracle: ``use_kernels=False``
-swaps ``qmatmul`` for a pure-jnp integer-accumulation reference with
-identical quantization semantics, which is what ``tests/test_serving.py``
-compares against (batched kernels vs per-molecule reference, <= 1e-5).
+Both paths run every per-atom matmul through ``qparams.qmatmul`` (fused
+W8A8/W4A8 Pallas kernels; ``use_kernels=False`` swaps in the pure-jnp
+integer-accumulation reference) and share identical padding guarantees:
+padded atoms never enter any edge or pair, contribute exactly zero
+energy, and receive exactly zero force. ``tests/test_serving.py`` and
+``tests/test_sparse_serving.py`` pin sparse == dense <= 1e-5 on energies
+and forces.
 """
 from __future__ import annotations
 
@@ -33,10 +34,13 @@ import jax.numpy as jnp
 
 from repro.core import make_codebook, mddq_fake_quant
 from repro.core.attention_norm import l2_normalize
-from repro.models.so3krates import So3kratesConfig, _layernorm, _rbf
+from repro.kernels import ops
+from repro.models.so3krates import (So3kratesConfig, _layernorm, _rbf,
+                                    _vnorm, cosine_logits, pair_geometry)
 from repro.serving.qparams import QuantizedParams, qmatmul, ref_qmatmul
 
-__all__ = ["batched_energy", "batched_energy_and_forces"]
+__all__ = ["batched_energy", "batched_energy_and_forces",
+           "sparse_energy", "sparse_energy_and_forces"]
 
 
 def _dense(x: jnp.ndarray, qt, use_kernels: bool) -> jnp.ndarray:
@@ -47,13 +51,27 @@ def _dense(x: jnp.ndarray, qt, use_kernels: bool) -> jnp.ndarray:
     return y.reshape(B, n, -1)
 
 
+def _quant_vectors(v: jnp.ndarray, cfg: So3kratesConfig,
+                   codebook: jnp.ndarray, mddq_kernel: bool) -> jnp.ndarray:
+    """Serve-time MDDQ on l=1 features: the pure-jnp fake-quant reference,
+    or the Pallas encode kernel (``ServeConfig.mddq_kernel``) whose
+    backward runs the same Geometric-STE gradients. Padded atoms keep
+    v == 0 forever; both implementations map zero vectors to exactly zero
+    and are NaN-safe there (core/mddq._split).
+    """
+    if mddq_kernel:
+        return ops.mddq_qdq_kernel(v, cfg.mddq(), codebook)
+    return mddq_fake_quant(v, cfg.mddq(), codebook)
+
+
 def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
                    species: jnp.ndarray, coords: jnp.ndarray,
                    mask: jnp.ndarray,
                    codebook: Optional[jnp.ndarray] = None,
                    *, quant_vectors: bool = True,
-                   use_kernels: bool = True) -> jnp.ndarray:
-    """Per-molecule energies for a padded batch.
+                   use_kernels: bool = True,
+                   mddq_kernel: bool = False) -> jnp.ndarray:
+    """Per-molecule energies for a padded batch — dense O(n^2) path.
 
     species: (B, n) int32, coords: (B, n, 3) f32, mask: (B, n) bool
     (True = real atom). Returns (B,) f32 — padded rows yield the energy of
@@ -64,13 +82,7 @@ def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
     if codebook is None and quant_vectors:
         codebook = make_codebook(cfg.dir_bits)
 
-    rij = coords[:, None, :, :] - coords[:, :, None, :]      # [b,i,j]=r_j-r_i
-    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
-    eye = jnp.eye(n, dtype=bool)[None]
-    pair_mask = ((d < cfg.cutoff) & ~eye
-                 & mask[:, :, None] & mask[:, None, :])      # (B, n, n)
-    u = rij / d[..., None]
-    rbf = _rbf(d, cfg) * pair_mask[..., None]                # (B, n, n, K)
+    _, u, rbf, pair_mask = pair_geometry(coords, cfg, mask)  # (B, n, n, .)
 
     x = qparams["embed"][species] * mask[..., None]          # (B, n, F)
     v = jnp.zeros((B, n, cfg.vec_feat, 3))
@@ -82,12 +94,7 @@ def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
         q = _dense(xn, qparams[f"{L}/wq"], use_kernels)
         k = _dense(xn, qparams[f"{L}/wk"], use_kernels)
         bias = (rbf @ qparams[f"{L}/rbf_bias"])[..., 0]      # (B, n, n)
-        if cfg.robust_attention:
-            logits = cfg.tau * jnp.einsum(
-                "bif,bjf->bij", l2_normalize(q), l2_normalize(k)) + bias
-        else:
-            logits = jnp.einsum("bif,bjf->bij", q, k) \
-                / jnp.sqrt(q.shape[-1]) + bias
+        logits = cosine_logits(q, k, bias, cfg, cfg.robust_attention)
         logits = jnp.where(pair_mask, logits, -1e9)
         alpha = jax.nn.softmax(logits, axis=-1)              # (B, n, n)
 
@@ -108,16 +115,12 @@ def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
             + jnp.einsum("bij,bijc,bjcd->bicd", alpha, cb, v)
         v = v + dv
         if quant_vectors:
-            # padded atoms keep v == 0 forever; MDDQ maps zero vectors to
-            # zero and its norm gradient is NaN-safe there (core/mddq._split)
-            v = mddq_fake_quant(v, cfg.mddq(), codebook)
+            v = _quant_vectors(v, cfg, codebook, mddq_kernel)
 
-        vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)        # (B, n, Fv)
-        x = x + _dense(jax.nn.silu(vnorm), qparams[f"{L}/w_vnorm"],
+        x = x + _dense(jax.nn.silu(_vnorm(v)), qparams[f"{L}/w_vnorm"],
                        use_kernels)
 
-    vnorm = jnp.sqrt(jnp.sum(v ** 2, -1) + 1e-12)
-    feats = jnp.concatenate([x, vnorm], axis=-1)
+    feats = jnp.concatenate([x, _vnorm(v)], axis=-1)
     e_hid = jax.nn.silu(_dense(feats, qparams["ro_w1"], use_kernels))
     e_atom = _dense(e_hid, qparams["ro_w2"], use_kernels)[..., 0]  # (B, n)
     return jnp.sum(e_atom * mask, axis=-1)                   # (B,)
@@ -125,7 +128,7 @@ def batched_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
 
 def batched_energy_and_forces(qparams, cfg, species, coords, mask,
                               codebook=None, *, quant_vectors=True,
-                              use_kernels=True):
+                              use_kernels=True, mddq_kernel=False):
     """Energies (B,) and conservative forces (B, n, 3) = -dE/dr.
 
     Differentiates through the quantized kernels via the straight-through
@@ -134,7 +137,116 @@ def batched_energy_and_forces(qparams, cfg, species, coords, mask,
     def total_energy(c):
         e = batched_energy(qparams, cfg, species, c, mask, codebook,
                            quant_vectors=quant_vectors,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels, mddq_kernel=mddq_kernel)
+        return jnp.sum(e), e
+
+    (_, energies), neg_f = jax.value_and_grad(total_energy,
+                                              has_aux=True)(coords)
+    return energies, -neg_f
+
+
+# ---------------------------------------------------------------------------
+# sparse edge-list path
+# ---------------------------------------------------------------------------
+
+def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
+                  species: jnp.ndarray, coords: jnp.ndarray,
+                  mask: jnp.ndarray, senders: jnp.ndarray,
+                  receivers: jnp.ndarray, edge_mask: jnp.ndarray,
+                  codebook: Optional[jnp.ndarray] = None,
+                  *, quant_vectors: bool = True, use_kernels: bool = True,
+                  edge_kernel: Optional[bool] = None,
+                  mddq_kernel: bool = False) -> jnp.ndarray:
+    """Per-molecule energies over a padded edge list — the O(E) path.
+
+    species/coords/mask as in ``batched_energy``; senders/receivers are
+    flat int32 indices into the ``(B * n,)`` node axis and edge_mask the
+    per-slot validity bit, all laid out per the ``bucketing.EdgeList``
+    contract (per-molecule slot ranges, receiver-sorted). ``edge_kernel``
+    selects the fused Pallas segment-softmax (None = auto: kernel on TPU,
+    XLA segment ops on CPU). Returns (B,) f32.
+    """
+    B, n = species.shape
+    N = B * n
+    Fv = cfg.vec_feat
+    if codebook is None and quant_vectors:
+        codebook = make_codebook(cfg.dir_bits)
+    mm = qmatmul if use_kernels else ref_qmatmul
+
+    # edge geometry from gathered coordinates: the energy stays a function
+    # of coords, so forces flow through the gathers; masked slots are
+    # self-loops -> d ~ 0, and every use below is edge_mask-gated
+    coords_f = coords.reshape(N, 3)
+    rij = coords_f[senders] - coords_f[receivers]            # (E, 3) r_j-r_i
+    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
+    u = rij / d[..., None]                                   # (E, 3)
+    rbf_e = _rbf(d, cfg) * edge_mask[..., None]              # (E, K)
+
+    mask_f = mask.reshape(N)
+    x = qparams["embed"][species.reshape(N)] * mask_f[:, None]   # (N, F)
+    v = jnp.zeros((N, Fv, 3))
+
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        xn = _layernorm(x, qparams[f"{L}/ln_g"], qparams[f"{L}/ln_b"])
+
+        q = mm(xn, qparams[f"{L}/wq"])
+        k = mm(xn, qparams[f"{L}/wk"])
+        bias_e = (rbf_e @ qparams[f"{L}/rbf_bias"])[:, 0]    # (E,)
+        if cfg.robust_attention:
+            q_s = cfg.tau * l2_normalize(q)
+            k_s = l2_normalize(k)
+        else:
+            q_s = q / jnp.sqrt(q.shape[-1])
+            k_s = k
+
+        # per-edge values for ONE fused softmax-scatter: scalar messages
+        # and both equivariant message terms share the same alpha
+        msg = mm(xn, qparams[f"{L}/wm"])                     # (N, F)
+        gate_e = rbf_e @ qparams[f"{L}/rbf_m"]               # (E, F)
+        ca_e = mm(xn, qparams[f"{L}/wa"])[senders] \
+            * (rbf_e @ qparams[f"{L}/rbf_a"])                # (E, Fv)
+        cb_e = mm(xn, qparams[f"{L}/wb"])[senders] \
+            * (rbf_e @ qparams[f"{L}/rbf_b"])
+        vec_e = ca_e[..., None] * u[:, None, :] \
+            + cb_e[..., None] * v[senders]                   # (E, Fv, 3)
+        vals = jnp.concatenate(
+            [gate_e * msg[senders], vec_e.reshape(-1, Fv * 3)], axis=1)
+
+        out = ops.edge_softmax(q_s, k_s, bias_e, vals, senders, receivers,
+                               edge_mask, cap=n, use_kernel=edge_kernel)
+        x = x + out[:, :cfg.feat]
+        h = jax.nn.silu(mm(x, qparams[f"{L}/w_upd1"]))
+        x = x + mm(h, qparams[f"{L}/w_upd2"])
+
+        v = v + out[:, cfg.feat:].reshape(N, Fv, 3)
+        if quant_vectors:
+            v = _quant_vectors(v, cfg, codebook, mddq_kernel)
+
+        x = x + mm(jax.nn.silu(_vnorm(v)), qparams[f"{L}/w_vnorm"])
+
+    feats = jnp.concatenate([x, _vnorm(v)], axis=-1)
+    e_hid = jax.nn.silu(mm(feats, qparams["ro_w1"]))
+    e_atom = mm(e_hid, qparams["ro_w2"])[:, 0]               # (N,)
+    return jnp.sum(e_atom.reshape(B, n) * mask, axis=-1)     # (B,)
+
+
+def sparse_energy_and_forces(qparams, cfg, species, coords, mask,
+                             senders, receivers, edge_mask, codebook=None,
+                             *, quant_vectors=True, use_kernels=True,
+                             edge_kernel=None, mddq_kernel=False):
+    """Sparse-path energies (B,) and conservative forces (B, n, 3).
+
+    The edge list is treated as data (indices carry no gradient); the
+    energy differentiates through the gathered coordinates, so padded
+    atoms — which appear in no real edge — get exactly zero force.
+    """
+    def total_energy(c):
+        e = sparse_energy(qparams, cfg, species, c, mask, senders,
+                          receivers, edge_mask, codebook,
+                          quant_vectors=quant_vectors,
+                          use_kernels=use_kernels, edge_kernel=edge_kernel,
+                          mddq_kernel=mddq_kernel)
         return jnp.sum(e), e
 
     (_, energies), neg_f = jax.value_and_grad(total_energy,

@@ -83,6 +83,66 @@ class TestQuantMatmul:
         assert rel < 0.15
 
 
+def _edge_problem(seed, B, cap, ec, F, W, cutoff=3.0):
+    """Random padded batch + edge list + features for edge_softmax tests."""
+    from repro.serving.bucketing import build_edge_list
+    rng = np.random.default_rng(seed)
+    side = (cap / 0.05) ** (1.0 / 3.0)   # constant density ~ degree 6
+    coords = rng.uniform(0, side, size=(B, cap, 3)).astype(np.float32)
+    mask = np.ones((B, cap), bool)
+    mask[0, cap // 2:] = False
+    el = build_edge_list(coords, mask, cutoff, ec)
+    assert el is not None, "edge capacity too small for test problem"
+    N, E = B * cap, B * ec
+    q = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(N, F)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(E,)).astype(np.float32))
+    vals = jnp.asarray(rng.normal(size=(E, W)).astype(np.float32))
+    return (q, k, bias, vals, jnp.asarray(el.senders),
+            jnp.asarray(el.receivers), jnp.asarray(el.edge_mask))
+
+
+class TestEdgeSoftmaxKernel:
+    @pytest.mark.parametrize("B,cap,ec,F,W", [(2, 16, 256, 32, 56),
+                                              (4, 32, 128, 64, 128),
+                                              (1, 128, 512, 16, 80)])
+    def test_matches_ref(self, B, cap, ec, F, W):
+        q, k, bias, vals, s, r, m = _edge_problem(B, B, cap, ec, F, W)
+        out = ops.edge_softmax(q, k, bias, vals, s, r, m, cap=cap,
+                               use_kernel=True)
+        want = ref.edge_softmax_ref(q, k, bias, s, r, m, vals, B * cap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_gradients_match_ref(self):
+        """The fused kernel's custom VJP reproduces the oracle's
+        gradients (forces differentiate through this path)."""
+        q, k, bias, vals, s, r, m = _edge_problem(7, 2, 16, 256, 32, 40)
+
+        def loss(fn):
+            def f(q_, k_, b_, v_):
+                return jnp.sum(fn(q_, k_, b_, v_) ** 2)
+            return jax.grad(f, argnums=(0, 1, 2, 3))(q, k, bias, vals)
+
+        g_ker = loss(lambda q_, k_, b_, v_: ops.edge_softmax(
+            q_, k_, b_, v_, s, r, m, cap=16, use_kernel=True))
+        g_ref = loss(lambda q_, k_, b_, v_: ref.edge_softmax_ref(
+            q_, k_, b_, s, r, m, v_, 32))
+        for a, b in zip(g_ker, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_no_edge_receivers_are_exact_zero(self):
+        """Nodes no real edge points at (incl. all-masked molecules)
+        produce exactly zero output, not softmax-of-mask noise."""
+        q, k, bias, vals, s, r, m = _edge_problem(3, 2, 16, 128, 32, 24)
+        out = np.asarray(ops.edge_softmax(q, k, bias, vals, s, r, m,
+                                          cap=16, use_kernel=True))
+        has_edge = np.zeros(32, bool)
+        has_edge[np.asarray(r)[np.asarray(m)]] = True
+        np.testing.assert_array_equal(out[~has_edge], 0.0)
+
+
 class TestMDDQKernel:
     @pytest.mark.parametrize("n,bits", [(1024, 8), (2048, 6), (4096, 4)])
     def test_matches_ref(self, n, bits):
@@ -106,6 +166,66 @@ class TestMDDQKernel:
         idx_ref, _ = ref.mddq_encode_ref(v.reshape(-1, 3), jnp.asarray(cb_t.T))
         np.testing.assert_array_equal(np.asarray(idx).ravel(),
                                       np.asarray(idx_ref))
+
+    def test_padded_codebook_never_wins_argmax(self):
+        """``pad_codebook`` 128-aligns with COPIES OF CODEWORD 0, so a
+        padded column can at most tie codeword 0's score; argmax takes
+        the first maximizing index — the real index 0 — and no encoded
+        index ever points at a padding slot. Includes the exact-tie case
+        (inputs colinear with codeword 0)."""
+        cb = make_codebook(6)                    # 64 entries -> padded to 128
+        cb_t = ops.pad_codebook(cb)
+        assert cb_t.shape == (3, 128)
+        v = jax.random.normal(jax.random.PRNGKey(9), (1024, 3)) * 2.0
+        v = v.at[:64].set(jnp.tile(cb[:1] * 3.0, (64, 1)))  # ties with cw 0
+        idx, _ = mddq_encode_kernel(v[:, 0].copy(), v[:, 1].copy(),
+                                    v[:, 2].copy(), cb_t, bn=1024,
+                                    interpret=True)
+        idx = np.asarray(idx)
+        assert idx.max() < 64, "argmax selected a padding slot"
+        np.testing.assert_array_equal(idx[:64], 0)
+
+    def test_qdq_kernel_matches_fake_quant(self):
+        """Serve-time quantize-dequantize through the Pallas encode kernel
+        (ops.mddq_qdq_kernel): identical values to the fake-quant
+        reference, exact zero for zero vectors, identical Geometric-STE
+        gradients."""
+        from repro.core.mddq import MDDQConfig, mddq_fake_quant
+        cfg = MDDQConfig(direction_bits=6, magnitude_bits=8)
+        cb = make_codebook(6)
+        v = jax.random.normal(jax.random.PRNGKey(11), (64, 8, 3)) * 2.0
+        v = v.at[0, 0].set(0.0)
+        out = ops.mddq_qdq_kernel(v, cfg, cb)
+        want = mddq_fake_quant(v, cfg, cb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out)[0, 0], 0.0)
+        g_ker = jax.grad(lambda v_: jnp.sum(
+            ops.mddq_qdq_kernel(v_, cfg, cb) ** 2))(v)
+        g_ref = jax.grad(lambda v_: jnp.sum(
+            mddq_fake_quant(v_, cfg, cb) ** 2))(v)
+        np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_qdq_kernel_respects_magnitude_config(self):
+        """Regression: the encode kernel must use the config's magnitude
+        grid (bits, m_min, m_max), not its 8-bit defaults — a 4-bit
+        config decoded on the wrong grid overflows exp()."""
+        from repro.core.mddq import MDDQConfig, mddq_fake_quant
+        cfg = MDDQConfig(direction_bits=6, magnitude_bits=4,
+                         m_min=1e-3, m_max=10.0)
+        cb = make_codebook(6)
+        v = jax.random.normal(jax.random.PRNGKey(12), (32, 4, 3))
+        out = ops.mddq_qdq_kernel(v, cfg, cb)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(mddq_fake_quant(v, cfg, cb)),
+                                   atol=1e-6)
+        # linear-domain magnitudes are not kernel-supported: explicit error
+        with pytest.raises(NotImplementedError):
+            ops.mddq_qdq_kernel(
+                v, MDDQConfig(direction_bits=6,
+                              magnitude_domain="linear"), cb)
 
 
 class TestInt8KVDecode:

@@ -216,6 +216,8 @@ class TestEngine:
         engine.warmup()
         # max_batch=8, capacity 16: every admissible batch class is the
         # single aligned class (8, 16) -> exactly one compiled shape
+        # (default path="auto" keeps 16-atom buckets dense — the edge
+        # list is not profitable there — so no sparse shape is warmed)
         assert engine.compiled_shapes == {(8, 16)}
         # a warmed engine never compiles a new shape under traffic
         engine.infer_batch(_graphs([5, 9, 11], seed=13))

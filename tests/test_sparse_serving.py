@@ -1,0 +1,267 @@
+"""Tests for the sparse edge-list serving path.
+
+Covers the bucketing edge-capacity contract (ISSUE 2): neighbour-list
+layout, sparse == dense agreement on energies AND forces, exact-zero
+padding, rotation equivariance of the served model on padded
+multi-molecule batches, engine path dispatch with dense fallback, and
+the serve-time MDDQ kernel flag.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import so3krates as so3
+from repro.serving import (BucketSpec, Graph, QuantizedEngine, ServeConfig,
+                           build_edge_list, count_edges,
+                           default_edge_capacity, quantize_so3_params,
+                           random_graphs)
+from repro.serving.forward import (batched_energy_and_forces,
+                                   sparse_energy_and_forces)
+
+CFG = so3.So3kratesConfig(feat=32, vec_feat=8, n_layers=2, n_rbf=8,
+                          dir_bits=6, cutoff=3.0)
+
+
+def _padded_batch(ns, cap, seed=0, spread=2.5):
+    rng = np.random.default_rng(seed)
+    B = len(ns)
+    species = np.zeros((B, cap), np.int32)
+    coords = np.zeros((B, cap, 3), np.float32)
+    mask = np.zeros((B, cap), bool)
+    for b, n in enumerate(ns):
+        species[b, :n] = rng.integers(0, CFG.n_species, n)
+        coords[b, :n] = rng.normal(size=(n, 3)) * spread
+        mask[b, :n] = True
+    return species, coords, mask
+
+
+@pytest.fixture(scope="module")
+def qparams_w8():
+    params = so3.init_params(jax.random.PRNGKey(0), CFG)
+    return quantize_so3_params(params, "w8a8")
+
+
+class TestEdgeListBuilder:
+    def test_layout_contract(self):
+        """Per-molecule slot ranges, receiver-sorted real edges first,
+        masked padding self-loops inside the molecule's node range."""
+        _, coords, mask = _padded_batch([5, 12, 1], cap=16, seed=1)
+        ec = 256
+        el = build_edge_list(coords, mask, CFG.cutoff, ec)
+        assert el is not None and el.edge_capacity == ec
+        counts = count_edges(coords, mask, CFG.cutoff)
+        assert el.n_real == int(counts.sum())
+        for b in range(3):
+            lo = b * ec
+            sl = slice(lo, lo + ec)
+            # every slot's endpoints live in molecule b's node range
+            assert np.all(el.receivers[sl] // 16 == b)
+            assert np.all(el.senders[sl] // 16 == b)
+            e = int(counts[b])
+            assert el.edge_mask[sl].sum() == e
+            # real edges first, receiver-sorted; padding is self-loops
+            assert np.all(np.diff(el.receivers[lo:lo + e]) >= 0)
+            assert np.all(el.receivers[lo + e:lo + ec] == b * 16)
+            assert np.all(el.senders[lo + e:lo + ec] == b * 16)
+            # real edges are the dense pair set: no self-pairs, both real
+            real_s, real_r = el.senders[lo:lo + e], el.receivers[lo:lo + e]
+            assert np.all(real_s != real_r)
+            assert mask.reshape(-1)[real_s].all()
+            assert mask.reshape(-1)[real_r].all()
+
+    def test_overflow_returns_none(self):
+        _, coords, mask = _padded_batch([16, 16], cap=16, seed=2, spread=0.5)
+        # spread 0.5 under cutoff 3.0 -> complete graph, 240 edges/molecule
+        assert build_edge_list(coords, mask, CFG.cutoff, 128) is None
+        assert build_edge_list(coords, mask, CFG.cutoff, 256) is not None
+
+    def test_default_edge_capacity_alignment(self):
+        for cap in (16, 32, 64, 128):
+            ec = default_edge_capacity(cap)
+            assert ec % 128 == 0
+            assert ec >= min(cap * (cap - 1), 128)
+        # small buckets hold the complete graph
+        assert default_edge_capacity(16) >= 16 * 15
+
+    def test_bucketspec_rejects_misaligned_capacity(self):
+        with pytest.raises(ValueError, match="multiple of 128"):
+            _ = BucketSpec(16, edge_capacity=200).edges
+
+
+class TestSparseMatchesDense:
+    @pytest.mark.parametrize("mode", ["w8a8", "w4a8"])
+    @pytest.mark.parametrize("edge_kernel", [False, True])
+    def test_energies_and_forces(self, mode, edge_kernel):
+        """Sparse path == dense oracle <= 1e-5 on randomized padded
+        batches, for both the XLA segment ops and the fused Pallas
+        kernel, including exact zeros on padded atoms."""
+        params = so3.init_params(jax.random.PRNGKey(1), CFG)
+        qp = quantize_so3_params(params, mode)
+        species, coords, mask = _padded_batch([5, 16, 9, 12], cap=16, seed=3)
+        el = build_edge_list(coords, mask, CFG.cutoff, 256)
+        e_d, f_d = batched_energy_and_forces(
+            qp, CFG, jnp.asarray(species), jnp.asarray(coords),
+            jnp.asarray(mask))
+        e_s, f_s = sparse_energy_and_forces(
+            qp, CFG, jnp.asarray(species), jnp.asarray(coords),
+            jnp.asarray(mask), jnp.asarray(el.senders),
+            jnp.asarray(el.receivers), jnp.asarray(el.edge_mask),
+            edge_kernel=edge_kernel)
+        np.testing.assert_allclose(np.asarray(e_s), np.asarray(e_d),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(f_s), np.asarray(f_d),
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(f_s)[~mask], 0.0)
+
+    def test_isolated_and_empty_molecules(self, qparams_w8):
+        """Zero-edge molecules (single atoms, far pairs) and all-padding
+        rows are finite and zero-force on the sparse path."""
+        species = np.zeros((2, 16), np.int32)
+        coords = np.zeros((2, 16, 3), np.float32)
+        mask = np.zeros((2, 16), bool)
+        species[0, :2] = 1
+        coords[0, 1] = [50.0, 0, 0]   # far pair: no edges
+        mask[0, :2] = True            # row 1: all padding
+        el = build_edge_list(coords, mask, CFG.cutoff, 256)
+        assert el.n_real == 0
+        e, f = sparse_energy_and_forces(
+            qparams_w8, CFG, jnp.asarray(species), jnp.asarray(coords),
+            jnp.asarray(mask), jnp.asarray(el.senders),
+            jnp.asarray(el.receivers), jnp.asarray(el.edge_mask))
+        assert np.isfinite(np.asarray(e)).all()
+        assert np.isfinite(np.asarray(f)).all()
+        np.testing.assert_array_equal(np.asarray(f)[~mask], 0.0)
+
+
+class TestSparseEquivariance:
+    @pytest.mark.parametrize("edge_kernel", [False, True])
+    def test_energy_invariant_forces_covariant(self, edge_kernel):
+        """Rotating a padded multi-molecule batch leaves sparse-path
+        energies invariant and rotates forces: F(R.G) == R F(G).
+
+        quant_vectors=False isolates the architecture's exact SO(3)
+        equivariance (the invariant branch is bitwise unaffected by
+        rotation, so even the integer kernels commute); MDDQ's bounded
+        LEE is covered separately by engine.lee_diagnostic tests.
+        """
+        params = so3.init_params(jax.random.PRNGKey(2), CFG)
+        qp = quantize_so3_params(params, "w8a8")
+        species, coords, mask = _padded_batch([7, 16, 11], cap=16, seed=5)
+        from repro.core.lee import random_rotations
+        R = np.asarray(random_rotations(jax.random.PRNGKey(4), 1)[0],
+                       np.float32)
+
+        def run(c):
+            el = build_edge_list(c, mask, CFG.cutoff, 256)
+            return sparse_energy_and_forces(
+                qp, CFG, jnp.asarray(species), jnp.asarray(c),
+                jnp.asarray(mask), jnp.asarray(el.senders),
+                jnp.asarray(el.receivers), jnp.asarray(el.edge_mask),
+                quant_vectors=False, edge_kernel=edge_kernel)
+
+        e0, f0 = run(coords)
+        e1, f1 = run(coords @ R.T)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(f1),
+                                   np.asarray(f0) @ R.T, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(f1)[~mask], 0.0)
+
+
+class TestEnginePaths:
+    def test_sparse_engine_matches_dense_engine(self):
+        serve_s = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                              path="sparse")
+        serve_d = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                              path="dense")
+        params = so3.init_params(jax.random.PRNGKey(0), CFG)
+        eng_s = QuantizedEngine(CFG, params, serve_s)
+        eng_d = QuantizedEngine(CFG, params, serve_d)
+        graphs = random_graphs(6, 4, 16, CFG.n_species, seed=7, density=0.1)
+        rs = eng_s.infer_batch(graphs)
+        rd = eng_d.infer_batch(graphs)
+        assert all(r.path == "sparse" for r in rs)
+        assert all(r.path == "dense" for r in rd)
+        assert eng_s.dispatch_stats["sparse"] > 0
+        assert eng_s.dispatch_stats["dense"] == 0
+        for a, b in zip(rs, rd):
+            assert abs(a.energy - b.energy) <= 1e-5
+            np.testing.assert_allclose(a.forces, b.forces, atol=1e-5)
+
+    def test_auto_profitability_heuristic(self):
+        """"auto" keeps small buckets dense (edge slots ~ pair count, so
+        the gather overhead cannot pay off) and goes sparse where n^2
+        dwarfs the edge capacity — matching the measured crossover."""
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16, 32, 64, 128),
+                            max_batch=8, path="auto")
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        verdicts = {b.capacity: engine._sparse_profitable(b)
+                    for b in engine._buckets}
+        assert verdicts == {16: False, 32: False, 64: True, 128: True}
+        # forced "sparse" overrides profitability
+        eng_forced = QuantizedEngine.from_config(
+            CFG, serve=ServeConfig(mode="w8a8", bucket_sizes=(16,),
+                                   max_batch=8, path="sparse"), seed=0)
+        assert eng_forced._wants_sparse(eng_forced._buckets[0])
+
+    def test_dense_fallback_on_edge_overflow(self):
+        """A batch whose cutoff graph exceeds the edge capacity runs
+        dense — same results, counted in dispatch_stats."""
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                            path="sparse", edge_capacity=128)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        dense_g = [Graph(species=np.ones(16, np.int32),
+                         coords=(np.random.default_rng(8).normal(
+                             size=(16, 3)) * 0.5).astype(np.float32))]
+        (r,) = engine.infer_batch(dense_g)
+        assert r.path == "dense"
+        assert engine.dispatch_stats["sparse_fallback"] == 1
+        occ = engine.edge_occupancy(dense_g)
+        assert occ["molecules_overflowing"] >= 1
+
+    def test_warmup_covers_sparse_shapes(self):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                            path="sparse")
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        engine.warmup()
+        assert ("sparse", 8, 16, 256) in engine.compiled_shapes
+        before = set(engine.compiled_shapes)
+        engine.infer_batch(random_graphs(3, 4, 16, CFG.n_species, seed=9,
+                                         density=0.1))
+        assert engine.compiled_shapes == before
+
+    def test_lee_diagnostic_on_sparse_path(self):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                            path="sparse")
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        graphs = random_graphs(4, 4, 12, CFG.n_species, seed=11, density=0.1)
+        diag = engine.lee_diagnostic(graphs, jax.random.PRNGKey(0),
+                                     n_rotations=2)
+        assert np.isfinite(diag["lee_mean"]) and diag["lee_mean"] >= 0.0
+
+
+class TestMddqKernelFlag:
+    def test_mddq_kernel_matches_reference(self, qparams_w8):
+        """ServeConfig.mddq_kernel routes vector quantization through the
+        Pallas encode kernel; values and forces match the fake-quant
+        reference (identical codes, identical STE backward)."""
+        species, coords, mask = _padded_batch([5, 10], cap=16, seed=13)
+        el = build_edge_list(coords, mask, CFG.cutoff, 256)
+        args = (qparams_w8, CFG, jnp.asarray(species), jnp.asarray(coords),
+                jnp.asarray(mask), jnp.asarray(el.senders),
+                jnp.asarray(el.receivers), jnp.asarray(el.edge_mask))
+        e_ref, f_ref = sparse_energy_and_forces(*args, mddq_kernel=False)
+        e_ker, f_ker = sparse_energy_and_forces(*args, mddq_kernel=True)
+        np.testing.assert_allclose(np.asarray(e_ker), np.asarray(e_ref),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(f_ker), np.asarray(f_ref),
+                                   atol=1e-5)
+
+    def test_engine_end_to_end_with_mddq_kernel(self):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=8,
+                            path="sparse", mddq_kernel=True)
+        engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+        results = engine.infer_batch(
+            random_graphs(3, 4, 12, CFG.n_species, seed=15, density=0.1))
+        for r in results:
+            assert np.isfinite(r.energy) and np.isfinite(r.forces).all()
