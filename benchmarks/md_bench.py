@@ -1,0 +1,285 @@
+"""MD throughput benchmark: legacy per-step host loop vs device-resident
+scan (ISSUE 3).
+
+The claim under test: at MD step counts, per-step host work — neighbour
+lists rebuilt in numpy, energies/forces round-tripped through host
+arrays, dispatch and padding glue on every force call — multiplies into
+the wall clock, and a velocity-Verlet loop that stays on device (skin
+neighbour lists rebuilt under ``lax.cond``, forces from the quantized
+sparse forward inside ``lax.scan``) buys that overhead back without
+touching the physics.
+
+Two lanes per mode (fp32 and w8a8), same molecule, same initial state,
+same dt:
+
+* **legacy** — the pre-PR way to drive MD with the quantized model: a
+  python velocity-Verlet loop calling ``QuantizedEngine.infer_batch``
+  every step (host edge-list build, padding, numpy round-trips
+  included).
+* **device** — ``repro.md.MDEngine``: the same physics inside
+  ``lax.scan`` with Verlet-skin lists, host contact only at record
+  checkpoints.
+
+Speed never at the cost of conservation: both lanes record total energy
+on the same trajectory and the bench reports the drift rate of each
+(the fast path must stay within 2x of legacy) plus the skin-rebuild
+frequency, so the neighbour-list reuse is visibly not skipping physics.
+
+Run:  PYTHONPATH=src python benchmarks/md_bench.py [--bucket 64]
+          [--modes fp32 w8a8] [--steps 300] [--repeats 3]
+          [--replicas 8] [--json BENCH_md.json] [--smoke]
+
+Writes a machine-readable JSON record (per-mode steps/sec both lanes,
+speedup, drift rates, rebuild stats, replica-batch throughput) so the
+perf trajectory is tracked across PRs. ``--smoke`` shrinks everything
+for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.md import MDConfig, MDEngine, energy_drift_rate, pad_replicas
+from repro.md.nve import _FS
+from repro.models import so3krates as so3
+from repro.serving import Graph, QuantizedEngine, ServeConfig
+
+
+def make_molecule(n_atoms, n_species, density, seed):
+    rng = np.random.default_rng(seed)
+    side = (n_atoms / density) ** (1.0 / 3.0)
+    return (rng.integers(0, n_species, n_atoms).astype(np.int32),
+            rng.uniform(0, side, size=(n_atoms, 3)).astype(np.float32))
+
+
+def legacy_host_loop(engine, species, coords, veloc, masses, dt_fs,
+                     n_steps, record_every):
+    """Pre-PR MD: velocity-Verlet on the host, one ``infer_batch`` per
+    step (neighbour list rebuilt host-side every step inside the
+    engine's dispatch). Returns (coords, veloc, energy records)."""
+    dt = dt_fs * _FS
+    inv_m = (1.0 / masses)[:, None]
+    r, v = coords.copy(), veloc.copy()
+    res = engine.infer_batch([Graph(species, r)])[0]
+    f = res.forces
+    energies = []
+    for step in range(1, n_steps + 1):
+        v_half = v + 0.5 * dt * f * inv_m
+        r = r + dt * v_half
+        res = engine.infer_batch([Graph(species, r)])[0]
+        f = res.forces
+        v = v_half + 0.5 * dt * f * inv_m
+        if step % record_every == 0 or step == n_steps:
+            e_kin = 0.5 * float(np.sum(masses[:, None] * v ** 2))
+            energies.append(res.energy + e_kin)
+    return r, v, np.asarray(energies)
+
+
+def bench_mode(mode, model_cfg, params, n, args):
+    species, coords = make_molecule(n, model_cfg.n_species, args.density,
+                                    seed=n)
+    masses = np.full(n, 12.011, np.float32)
+    dt, rec_every = args.dt_fs, args.record_every
+
+    # legacy rides the standard bucket ladder: smallest standard cap
+    # that holds the molecule (a 24-atom smoke molecule gets the 32
+    # bucket, not a pathological 24-cap shape class)
+    cap = next((c for c in (16, 32, 64, 128) if n <= c), n)
+    serve = ServeConfig(mode=mode, bucket_sizes=(cap,), max_batch=8,
+                        path="sparse")
+    legacy_engine = QuantizedEngine(model_cfg, params, serve)
+    md_engine = MDEngine(model_cfg, params,
+                         md=MDConfig(mode=mode, dt_fs=dt,
+                                     record_every=rec_every))
+
+    spec_b, co_b, mask_b = pad_replicas(species, coords, 1)
+    state0 = md_engine.init_state(jax.random.PRNGKey(7), spec_b, co_b,
+                                  mask_b, masses, args.temperature_K)
+    veloc0 = np.asarray(state0.veloc[0])
+
+    # warm both lanes (compile + first dispatch)
+    legacy_host_loop(legacy_engine, species, coords, veloc0, masses, dt,
+                     2, rec_every)
+    state = state0
+    state, _ = md_engine.run(state, spec_b, mask_b, masses,
+                             n_steps=args.steps, record_every=rec_every)
+
+    # interleaved timing so machine drift hits both lanes equally
+    t_leg, t_dev = [], []
+    rebuilds = steps_counted = 0
+    for _ in range(args.repeats):
+        t0 = time.time()
+        _, _, e_leg = legacy_host_loop(legacy_engine, species, coords,
+                                       veloc0, masses, dt, args.steps,
+                                       rec_every)
+        t_leg.append((time.time() - t0) / args.steps)
+        # n_rebuilds in records is cumulative since init_state; the
+        # per-run delta is what the rebuild-frequency stat needs
+        n_before = int(state.nlist.n_rebuilds)
+        t0 = time.time()
+        state, rec_dev = md_engine.run(state, spec_b, mask_b, masses,
+                                       n_steps=args.steps,
+                                       record_every=rec_every)
+        t_dev.append((time.time() - t0) / args.steps)
+        rebuilds += rec_dev["n_rebuilds"] - n_before
+        steps_counted += args.steps
+    # drift fit wants uniformly spaced samples: drop any tail record
+    # (the legacy trajectory is deterministic, so the last repeat's
+    # energy record stands for all of them)
+    n_uniform = args.steps // rec_every
+    drift_leg = energy_drift_rate(e_leg[:n_uniform], dt, rec_every, n)
+
+    # drift of the device lane on the *same* trajectory as legacy: fresh
+    # state from the same initial conditions
+    state_d = md_engine.init_state(jax.random.PRNGKey(7), spec_b, co_b,
+                                   mask_b, masses, args.temperature_K)
+    _, rec_same = md_engine.run(state_d, spec_b, mask_b, masses,
+                                n_steps=args.steps, record_every=rec_every)
+    drift_dev = energy_drift_rate(rec_same["e_tot"][:n_uniform, 0], dt,
+                                  rec_every, n)
+
+    # replica batching: amortized steps/sec for a padded replica bucket
+    R = args.replicas
+    spec_r, co_r, mask_r = pad_replicas(species, coords, R)
+    masses_r = np.broadcast_to(masses, (R, n))
+    st_r = md_engine.init_state(jax.random.PRNGKey(8), spec_r, co_r,
+                                mask_r, masses_r, args.temperature_K)
+    st_r, _ = md_engine.run(st_r, spec_r, mask_r, masses_r,
+                            n_steps=args.steps, record_every=rec_every)
+    t0 = time.time()
+    st_r, _ = md_engine.run(st_r, spec_r, mask_r, masses_r,
+                            n_steps=args.steps, record_every=rec_every)
+    t_rep = (time.time() - t0) / args.steps
+
+    tl, td = min(t_leg), min(t_dev)
+    out = {
+        "mode": mode,
+        "n_atoms": n,
+        "bucket": cap,
+        "legacy_steps_per_s": 1.0 / tl,
+        "device_steps_per_s": 1.0 / td,
+        "speedup_device_vs_legacy": tl / td,
+        "legacy_ms_per_step": tl * 1e3,
+        "device_ms_per_step": td * 1e3,
+        "legacy_drift_ev_per_atom_ps": drift_leg,
+        "device_drift_ev_per_atom_ps": drift_dev,
+        "drift_ratio_device_vs_legacy": (
+            abs(drift_dev) / max(abs(drift_leg), 1e-12)),
+        "edge_capacity": state0.nlist.edge_capacity,
+        "n_rebuilds": int(rebuilds),
+        "rebuild_interval_steps": steps_counted / max(int(rebuilds), 1),
+        "replicas": R,
+        "replica_batch_steps_per_s": 1.0 / t_rep,
+        "replica_steps_per_s": R / t_rep,
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[24, 48, 64],
+                    help="molecule sizes to sweep (each rides the "
+                         "smallest standard bucket that holds it)")
+    ap.add_argument("--modes", nargs="+", default=["fp32", "w8a8"],
+                    choices=["fp32", "w8a8", "w4a8"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--dt-fs", type=float, default=0.25)
+    ap.add_argument("--record-every", type=int, default=50)
+    ap.add_argument("--density", type=float, default=0.1)
+    ap.add_argument("--temperature-K", type=float, default=300.0)
+    ap.add_argument("--feat", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--json", default="BENCH_md.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny molecule, few steps")
+    args = ap.parse_args()
+    if args.smoke:
+        args.sizes = [24]
+        args.steps, args.repeats, args.replicas = 40, 1, 2
+        args.record_every = 20
+
+    model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=8,
+                                    n_layers=args.layers, n_rbf=8,
+                                    dir_bits=6, cutoff=3.0)
+    params = so3.init_params(jax.random.PRNGKey(0), model_cfg)
+
+    print(f"sizes={args.sizes} steps={args.steps} dt={args.dt_fs}fs "
+          f"repeats={args.repeats} backend={jax.default_backend()}")
+    print(f"{'atoms':>6} {'bucket':>6} {'mode':>6} {'legacy st/s':>12} "
+          f"{'device st/s':>12} {'speedup':>8} {'drift ratio':>12} "
+          f"{'rebuild every':>14}")
+    rows = []
+    for n in args.sizes:
+        for mode in args.modes:
+            row = bench_mode(mode, model_cfg, params, n, args)
+            rows.append(row)
+            print(f"{n:>6} {row['bucket']:>6} {mode:>6} "
+                  f"{row['legacy_steps_per_s']:>12.1f} "
+                  f"{row['device_steps_per_s']:>12.1f} "
+                  f"{row['speedup_device_vs_legacy']:>7.2f}x "
+                  f"{row['drift_ratio_device_vs_legacy']:>11.2f}x "
+                  f"{row['rebuild_interval_steps']:>11.1f} st")
+
+    record = {
+        "benchmark": "md_device_scan_vs_host_loop",
+        "backend": jax.default_backend(),
+        "sizes": args.sizes,
+        "density": args.density,
+        "dt_fs": args.dt_fs,
+        "n_steps": args.steps,
+        "record_every": args.record_every,
+        "repeats": args.repeats,
+        "feat": args.feat,
+        "n_layers": args.layers,
+        "temperature_K": args.temperature_K,
+        "smoke": args.smoke,
+        "rows": rows,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\nwrote {args.json}")
+
+    if args.smoke:
+        print("NOTE: smoke-sized run; speed/drift claims not exercised")
+        return
+    worst_speed = min(r["speedup_device_vs_legacy"] for r in rows)
+    worst_drift = max(r["drift_ratio_device_vs_legacy"] for r in rows)
+    if worst_drift > 2.0:
+        raise SystemExit(
+            f"FAIL: device-lane drift {worst_drift:.2f}x legacy (> 2x) — "
+            "the skin list is changing the physics")
+    print(f"drift check PASS: device drift within {worst_drift:.2f}x of "
+          "legacy on the same trajectory (every size/mode)")
+    full64 = [r for r in rows if r["n_atoms"] >= 64]
+    small = [r for r in rows if r["n_atoms"] < 64]
+    if small:
+        s = min(r["speedup_device_vs_legacy"] for r in small)
+        print(f"host-overhead regime (< 64 atoms): device >= {s:.1f}x")
+    if full64:
+        s = min(r["speedup_device_vs_legacy"] for r in full64)
+        if s >= 5.0:
+            print(f"PASS: device-resident scan >= 5x at the 64-atom "
+                  f"bucket ({s:.1f}x)")
+        else:
+            print(f"NOTE: device scan {s:.1f}x at a full 64-atom bucket "
+                  "(the 5x target assumes host overhead dominates the "
+                  "force call; with the bucket full, the forward itself "
+                  "is ~3/4 of a legacy step on this 2-core CPU — the "
+                  "ratio widens as the bucket empties, the forward gets "
+                  "faster, or on TPU)")
+    if worst_speed < 1.5:
+        raise SystemExit(
+            f"FAIL: device path only {worst_speed:.2f}x the legacy loop "
+            "(< 1.5x) — the scan path has regressed")
+
+
+if __name__ == "__main__":
+    main()

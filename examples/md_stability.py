@@ -1,13 +1,16 @@
 """Example: NVE molecular dynamics with a learned (and quantized) force
-field — the paper's Fig. 3 experiment at reduced scale — plus the
-deployment check: the same trained weights served through the batched
-quantized engine (`repro.serving.QuantizedEngine`).
+field — the paper's Fig. 3 experiment at reduced scale — run through the
+device-resident MD engine (`repro.md.MDEngine`): quantized sparse
+forward inside `lax.scan`, Verlet-skin neighbour lists rebuilt on
+device, host contact only at record checkpoints.
 
-Uses the pipeline's trained checkpoints if present (artifacts/so3/), else
-trains a quick FP32 model. Runs NVE, reports the energy drift rate, then
-builds a W8A8 engine from the trained params and reports how closely the
-served (kernel-quantized, batched) forces track the fp32 model on test
-frames, together with the served model's LEE diagnostic.
+Uses the pipeline's trained checkpoints if present (artifacts/so3/),
+else trains a quick FP32 model. Builds a serving engine from the trained
+weights, bridges it into an MDEngine (`engine.md_engine()` — MD and
+serving share one set of quantized parameters), runs NVE, and reports
+the energy drift rate, the skin-rebuild frequency, and how closely the
+served (kernel-quantized, batched) forces track the fp32 model,
+together with the served model's LEE diagnostic.
 
 Run:  PYTHONPATH=src python examples/md_stability.py [--steps 4000]
 """
@@ -18,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.data.synthetic_md import sample_dataset
+from repro.md import MDConfig, energy_drift_rate, pad_replicas
 from repro.models import so3krates as so3
 from repro.serving import Graph, QuantizedEngine, ServeConfig
 from repro.training import pipeline as pipe
@@ -25,8 +29,11 @@ from repro.training.so3_trainer import TrainConfig, train
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=4000)
+ap.add_argument("--dt-fs", type=float, default=0.25)
 ap.add_argument("--serve-mode", default="w8a8",
                 choices=["fp32", "w8a8", "w4a8"])
+ap.add_argument("--replicas", type=int, default=1,
+                help="independent NVE replicas integrated in one batch")
 args = ap.parse_args()
 
 data = sample_dataset(jax.random.PRNGKey(0), 128)
@@ -41,23 +48,52 @@ else:
     params, _ = train(cfg, data, TrainConfig(epochs=30, warmup_epochs=0,
                                              batch_size=32, lr=5e-3))
 
-res = pipe.nve_eval(cfg, params, data, n_steps=args.steps, dt_fs=0.25)
-print(f"NVE {args.steps} steps @0.25fs: drift "
-      f"{res['drift_ev_per_atom_ps']*1000:.3f} meV/atom/ps, "
-      f"blew_up={res['blew_up']}, wall {res['wall_s']:.1f}s")
+# deployment step: fold the label standardization into the (linear)
+# energy head, so the served model emits physical eV directly
+e_scale = float(data["e_scale"])
+params = {**params, "ro_w2": params["ro_w2"] * e_scale}
 
-# --- deployment check: serve the trained model through the batched engine ---
+# --- serving engine + device-resident MD off the same quantized weights ----
 engine = QuantizedEngine.from_config(
     cfg, params=params,
     serve=ServeConfig(mode=args.serve_mode, bucket_sizes=(32,),
                       max_batch=8))
 mem = engine.memory_report()
-print(f"\nserving mode={args.serve_mode} backend={engine.backend} "
+print(f"serving mode={args.serve_mode} backend={engine.backend} "
       f"interpret={engine.interpret}: fp32 {mem['fp32_bytes']/1e3:.1f} KB -> "
       f"{mem['served_bytes']/1e3:.1f} KB ({mem['compression_x']}x)")
 
-frames = [Graph(species=np.asarray(data["species"]),
-                coords=np.asarray(data["coords"][i]))
+# skin 1.0 A: azobenzene's H atoms vibrate fast, and at 24 atoms the
+# extra edge slots are cheap next to fewer rebuilds
+REC_EVERY = 50
+md = engine.md_engine(MDConfig(mode=args.serve_mode, dt_fs=args.dt_fs,
+                               record_every=REC_EVERY, skin=1.0))
+species = np.asarray(data["species"], np.int32)
+eq = np.asarray(data["coords"][0], np.float32)
+masses = np.asarray(pipe.MASSES, np.float32)
+spec_b, co_b, mask_b = pad_replicas(species, eq, args.replicas)
+masses_b = np.broadcast_to(masses, mask_b.shape)
+
+state = md.init_state(jax.random.PRNGKey(7), spec_b, co_b, mask_b,
+                      masses_b, temperature_K=300.0)
+import time
+t0 = time.time()
+state, rec = md.run(state, spec_b, mask_b, masses_b, n_steps=args.steps)
+wall = time.time() - t0
+e = rec["e_tot"][:, 0]
+# drift fit wants uniform spacing: drop any tail record
+drift = energy_drift_rate(e[:args.steps // REC_EVERY], args.dt_fs,
+                          REC_EVERY, species.shape[0])
+blew_up = bool(~np.isfinite(e).all() or np.abs(e - e[0]).max() > 100.0)
+print(f"\nNVE ({args.serve_mode}, device-resident) {args.steps} steps "
+      f"@{args.dt_fs}fs x{args.replicas} replica(s): "
+      f"drift {drift*1000:.3f} meV/atom/ps, blew_up={blew_up}, "
+      f"wall {wall:.1f}s ({args.steps*args.replicas/wall:.0f} steps/s), "
+      f"skin rebuilds {rec['n_rebuilds']} "
+      f"(every ~{args.steps/max(rec['n_rebuilds'],1):.0f} steps)")
+
+# --- deployment check: served forces track the fp32 model ------------------
+frames = [Graph(species=species, coords=np.asarray(data["coords"][i]))
           for i in range(8)]
 served = engine.infer_batch(frames)
 f_ref = np.stack([np.asarray(so3.forces(params, cfg, data["species"],
@@ -65,8 +101,7 @@ f_ref = np.stack([np.asarray(so3.forces(params, cfg, data["species"],
                   for i in range(8)])
 f_srv = np.stack([r.forces for r in served])
 fmae = float(np.abs(f_srv - f_ref).mean())
-print(f"served vs fp32 forces on 8 test frames: MAE {fmae:.4f} "
-      f"(scaled units)")
+print(f"served vs fp32 forces on 8 test frames: MAE {fmae:.4f} (eV/A)")
 diag = engine.lee_diagnostic(frames[:4], jax.random.PRNGKey(3),
                              n_rotations=2)
 print(f"served-model LEE: mean {diag['lee_mean']:.3e} "

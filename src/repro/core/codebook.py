@@ -91,6 +91,10 @@ def make_codebook(bits: int = 8, kind: str = "fibonacci") -> jnp.ndarray:
     and gets called per forward by serving/engine code — a 16-bit
     codebook is 65536 numpy trig evaluations we only want once. The
     returned jax array is immutable, so sharing one instance is safe.
+    The conversion is forced to evaluate eagerly: the first call may
+    happen inside a jit trace (e.g. ``sparse_energy(codebook=None)``
+    under jit), and staging it there would cache a tracer that escapes
+    into every later trace.
     """
     n = 2 ** bits
     if kind == "fibonacci":
@@ -99,7 +103,8 @@ def make_codebook(bits: int = 8, kind: str = "fibonacci") -> jnp.ndarray:
         pts = octahedral_sphere(n)
     else:
         raise ValueError(f"unknown codebook kind {kind!r}")
-    return jnp.asarray(pts)
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(pts)
 
 
 _NEAREST_CHUNK = 4096

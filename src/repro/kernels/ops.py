@@ -176,6 +176,121 @@ mddq_qdq_kernel.defvjp(_mddq_qdq_fwd, _mddq_qdq_bwd)
 _NEG_BIAS = -1e9  # masked-edge logit; matches the dense forward's pair mask
 
 
+def _edge_onehot(idx: jnp.ndarray, cap: int, n_edges: int, n_nodes: int,
+                 dtype) -> jnp.ndarray:
+    """(B, cap, ec) one-hot of local node index per edge slot — the
+    segment-reduction operand of the blocked CPU path: a segment sum over
+    receivers (or a gather backward over senders) becomes one batched
+    matmul against this, which XLA lowers to gemm instead of the
+    serialized scatters ``jax.ops.segment_*`` produce on CPU. Valid only
+    under the ``bucketing.EdgeList`` layout (every slot's node index
+    inside its molecule's range)."""
+    B = n_nodes // cap
+    ec = n_edges // B
+    local = (idx % cap).reshape(B, 1, ec)
+    return (local == jnp.arange(cap, dtype=idx.dtype)[None, :, None]) \
+        .astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _edge_gather_blocked(x, idx, cap):
+    return x[idx]
+
+
+def _edge_gather_fwd(x, idx, cap):
+    return x[idx], (idx, x.shape[0])
+
+
+def _edge_gather_bwd(cap, res, g):
+    idx, n_nodes = res
+    onehot = _edge_onehot(idx, cap, idx.shape[0], n_nodes, g.dtype)
+    gx = jnp.matmul(onehot, g.reshape(onehot.shape[0], onehot.shape[2], -1))
+    return gx.reshape(n_nodes, *g.shape[1:]), np.zeros(idx.shape,
+                                                       jax.dtypes.float0)
+
+
+_edge_gather_blocked.defvjp(_edge_gather_fwd, _edge_gather_bwd)
+
+
+def edge_gather(x, idx, cap):
+    """``x[idx]`` for edge lists in the ``bucketing.EdgeList`` layout.
+
+    On CPU the gather carries a blocked backward: its VJP is a segment
+    sum of the cotangent over ``idx``, implemented as a per-molecule
+    one-hot matmul (gemm, B·cap·ec·W MACs) instead of the scatter-add
+    XLA emits — CPU backends serialize scatters, so the arithmetic
+    inflation wins there; same sums, different (still deterministic)
+    summation order. Other backends (TPU/GPU compile scatters natively)
+    keep the plain gather and its native scatter-add VJP. x: (N, W)
+    node features, idx: (E,) int32 slot indices respecting per-molecule
+    ranges; cap static. The sparse forward routes its sender/receiver
+    gathers through this.
+    """
+    if jax.default_backend() == "cpu":
+        return _edge_gather_blocked(x, idx, cap)
+    return x[idx]
+
+
+def _edge_softmax_blocked(q_scaled, k, bias, values, senders, receivers,
+                          edge_mask, cap):
+    """CPU implementation of ``edge_softmax`` under the EdgeList
+    layout contract: the W-wide segment reductions (numerator and
+    denominator) run blocked per molecule as one batched matmul against
+    the (B, cap, ec) one-hot, carrying the value matrix and the
+    denominator column together; only the scalar stabilizing max stays a
+    scatter. Matches ``ref.edge_softmax_ref`` to ~1e-6 (summation order
+    differs; the max subtraction is stop-gradiented, which cancels
+    analytically).
+    """
+    N = q_scaled.shape[0]
+    E, w = values.shape
+    B = N // cap
+    ec = E // B
+
+    logits = jnp.sum(edge_gather(q_scaled, receivers, cap)
+                     * edge_gather(k, senders, cap), axis=-1) + bias
+    logits = jnp.where(edge_mask, logits, _NEG_BIAS)
+    onehot = _edge_onehot(receivers, cap, E, N, values.dtype)
+    # the max stays a scatter (one scalar per edge, and stop-gradiented
+    # so it has no backward); only the W-wide sums go through the matmul
+    seg_max = jax.ops.segment_max(jax.lax.stop_gradient(logits),
+                                  receivers, N)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    p = jnp.exp(logits - seg_max[receivers])               # (E,)
+    pv = jnp.concatenate([p[:, None] * (values * edge_mask[:, None]),
+                          p[:, None]], axis=1)             # (E, w + 1)
+    out = jnp.matmul(onehot, pv.reshape(B, ec, w + 1))     # (B, cap, w+1)
+    num = out[..., :w].reshape(N, w)
+    denom = out[..., w].reshape(N)
+    # double-where: receivers with no edges (denom == 0) must yield 0
+    # without 1/denom^2 ever being evaluated in the backward (the
+    # oracle's maximum(denom, 1e-20) overflows f32 there: 1e40 * 0 = nan)
+    safe = jnp.where(denom > 0, denom, 1.0)[:, None]
+    return jnp.where(denom[:, None] > 0, num / safe, 0.0)
+
+
+def refine_edge_mask(coords_flat: jnp.ndarray, senders: jnp.ndarray,
+                     receivers: jnp.ndarray, edge_mask: jnp.ndarray,
+                     cutoff: float) -> jnp.ndarray:
+    """Dynamic cutoff refinement for Verlet-skin neighbour lists.
+
+    A skin list is built once with an enlarged ``cutoff + skin`` radius
+    and reused across MD steps; before each force evaluation the mask is
+    tightened to the *true* cutoff at the current coordinates, so the
+    edge set entering ``edge_softmax`` is exactly the fresh-rebuild set
+    (the predicate ``d^2 < cutoff^2`` matches ``device_edge_list``).
+    Lives here because it is mask-layout prep on the kernel input path —
+    the same masking ``_edge_softmax_pallas`` folds into the key matrix.
+    Boolean output: carries no gradient, like the dense path's pair mask.
+
+    coords_flat: (N, 3) flat node coordinates; senders/receivers:
+    (E,) int32; edge_mask: (E,) bool (the skin list's validity bits).
+    """
+    rij = coords_flat[senders] - coords_flat[receivers]
+    d2 = jnp.sum(rij * rij, axis=-1)
+    return edge_mask & (d2 < cutoff * cutoff)
+
+
 def _edge_softmax_pallas(q_scaled, k, bias, values, senders, receivers,
                          edge_mask, cap):
     """Layout prep + kernel launch. Folds the bias into the key's last
@@ -233,21 +348,29 @@ def edge_softmax(q_scaled, k, bias, values, senders, receivers, edge_mask,
     """out[i] = sum_{e: recv(e)=i} alpha_e * values[e], alpha the segment
     softmax of q_scaled[recv] . k[send] + bias over each receiver.
 
-    ``use_kernel=None`` auto-selects: the fused Pallas kernel only on a
-    TPU backend (its block specs and VMEM scratch are TPU-specific), XLA
-    segment ops (``ref.edge_softmax_ref``) everywhere else — on CPU the
-    interpreter has nothing to fuse *for*, and on GPU the segment ops
-    compile natively while the TPU kernel would not lower; pass
-    True/False to force either (tests force True to exercise the kernel
-    under interpret). Both paths agree to ~1e-6 and both are
-    differentiable (the kernel via a custom VJP whose backward runs the
-    oracle's gradients).
+    ``use_kernel=None`` auto-selects by backend: the fused Pallas kernel
+    only on TPU (its block specs and VMEM scratch are TPU-specific); on
+    CPU the blocked XLA path (``_edge_softmax_blocked``: per-molecule
+    one-hot matmuls instead of the scatters CPU backends serialize —
+    the interpreter has nothing to fuse *for* there); on GPU the
+    scatter-based oracle (``ref.edge_softmax_ref``), whose segment ops
+    compile natively — the blocked path's ~cap-fold arithmetic
+    inflation only pays off where scatters are serialized. Pass
+    True/False to force the kernel on/off (tests force True to exercise
+    it under interpret). Inputs must follow the ``bucketing.EdgeList``
+    layout (per-molecule slot ranges — the kernel and blocked paths
+    localize indices with ``% cap``). All paths agree to ~1e-6 and all
+    are differentiable (the kernel via a custom VJP whose backward runs
+    the oracle's gradients).
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:
         return _edge_softmax_fused(q_scaled, k, bias, values, senders,
                                    receivers, edge_mask, cap)
+    if jax.default_backend() == "cpu":
+        return _edge_softmax_blocked(q_scaled, k, bias, values, senders,
+                                     receivers, edge_mask, cap)
     return _ref.edge_softmax_ref(q_scaled, k, bias, senders, receivers,
                                  edge_mask, values, q_scaled.shape[0])
 

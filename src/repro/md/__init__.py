@@ -1,0 +1,24 @@
+"""repro.md — molecular dynamics on the quantized force field.
+
+Two layers (see docs/md.md):
+
+* :mod:`repro.md.nve` — the minimal velocity-Verlet integrator used by
+  the training pipeline's stability evaluation (single molecule, caller
+  supplies ``force_fn``/``energy_fn``).
+* :mod:`repro.md.engine` — the device-resident :class:`MDEngine`:
+  batched replica NVE inside one ``lax.scan`` over the quantized sparse
+  forward, with Verlet-skin neighbour lists (:mod:`repro.md.neighbor`)
+  rebuilt on device under ``lax.cond`` and zero host sync per step.
+"""
+from repro.md.engine import MDConfig, MDEngine, ReplicaState, pad_replicas
+from repro.md.neighbor import (NeighborList, build_neighbor_list,
+                               maybe_rebuild, needs_rebuild)
+from repro.md.nve import (MDState, energy_drift_rate, init_state,
+                          kinetic_energy, nve_trajectory)
+
+__all__ = [
+    "MDConfig", "MDEngine", "ReplicaState", "pad_replicas",
+    "NeighborList", "build_neighbor_list", "maybe_rebuild", "needs_rebuild",
+    "MDState", "energy_drift_rate", "init_state", "kinetic_energy",
+    "nve_trajectory",
+]

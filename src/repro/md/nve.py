@@ -41,7 +41,12 @@ def nve_trajectory(state: MDState, masses: jnp.ndarray,
                    dt_fs: float, n_steps: int, record_every: int = 10):
     """Run velocity-Verlet; returns (final_state, recorded total energies).
 
-    Uses lax.scan; total-energy record has length n_steps // record_every.
+    Uses lax.scan. All ``n_steps`` are integrated: when ``record_every``
+    does not divide ``n_steps`` the remainder is run as a final shorter
+    segment with one extra energy sample at its end, so the record has
+    length ``ceil(n_steps / record_every)`` and the last interval may be
+    shorter than the others (callers fitting a drift slope on uniform
+    spacing should pass a divisible ``record_every``).
     """
     dt = dt_fs * _FS
     inv_m = (1.0 / masses)[:, None]
@@ -53,19 +58,29 @@ def nve_trajectory(state: MDState, masses: jnp.ndarray,
         v_new = v_half + 0.5 * dt * f_new * inv_m
         return MDState(r_new, v_new, f_new), None
 
-    def outer(s: MDState, _):
-        s, _ = jax.lax.scan(step, s, None, length=record_every)
+    def segment(s: MDState, length: int):
+        s, _ = jax.lax.scan(step, s, None, length=length)
         e_tot = energy_fn(s.coords) + kinetic_energy(s, masses)
         return s, e_tot
 
-    state, energies = jax.lax.scan(outer, state, None,
+    state, energies = jax.lax.scan(lambda s, _: segment(s, record_every),
+                                   state, None,
                                    length=n_steps // record_every)
+    rem = n_steps % record_every
+    if rem:
+        state, e_tail = segment(state, rem)
+        energies = jnp.concatenate([energies, e_tail[None]])
     return state, energies
 
 
 def energy_drift_rate(energies: jnp.ndarray, dt_fs: float,
                       record_every: int, n_atoms: int) -> float:
-    """Least-squares slope of total energy, in eV/atom/ps."""
+    """Least-squares slope of total energy, in eV/atom/ps.
+
+    Assumes uniform ``record_every`` spacing between samples — when a
+    trajectory ran a shorter remainder segment (``n_steps`` not a
+    multiple of ``record_every``), drop its final sample before fitting.
+    """
     t_ps = jnp.arange(energies.shape[0]) * dt_fs * record_every * 1e-3
     t = t_ps - t_ps.mean()
     slope = jnp.sum(t * (energies - energies.mean())) / jnp.sum(t * t)

@@ -286,6 +286,25 @@ class QuantizedEngine:
                     batch_size=plan.batch_size, path=path)
         return results  # type: ignore[return-value]
 
+    # -- MD bridge ----------------------------------------------------------
+
+    def md_engine(self, md=None):
+        """A device-resident :class:`repro.md.engine.MDEngine` sharing
+        this engine's quantized weights and codebook — serve traffic and
+        run MD off one set of serving-format parameters. ``md`` is an
+        ``MDConfig`` whose ``mode`` must match (default: one is built
+        from this engine's mode). See docs/md.md.
+        """
+        from repro.md.engine import MDConfig, MDEngine
+        if md is None:
+            md = MDConfig(mode=self.serve.mode)
+        if md.mode != self.serve.mode:
+            raise ValueError(
+                f"MDConfig.mode {md.mode!r} != ServeConfig.mode "
+                f"{self.serve.mode!r}: the quantized weights are shared")
+        return MDEngine(self.model_cfg, md=md, qparams=self.qparams,
+                        codebook=self._codebook)
+
     # -- diagnostics --------------------------------------------------------
 
     def edge_occupancy(self, graphs: Sequence[Graph]) -> Dict[str, float]:

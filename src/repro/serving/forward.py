@@ -37,10 +37,37 @@ from repro.core.attention_norm import l2_normalize
 from repro.kernels import ops
 from repro.models.so3krates import (So3kratesConfig, _layernorm, _rbf,
                                     _vnorm, cosine_logits, pair_geometry)
-from repro.serving.qparams import QuantizedParams, qmatmul, ref_qmatmul
+from repro.serving.qparams import (QuantizedParams, concat_qtensors, qmatmul,
+                                   ref_qmatmul)
 
 __all__ = ["batched_energy", "batched_energy_and_forces",
            "sparse_energy", "sparse_energy_and_forces"]
+
+# the per-layer "trunk": every projection taken from the same layernormed
+# activations. The sparse path fuses them into as few matmuls as the
+# weight kinds allow (w8a8/fp32: one; w4a8: one w8 + one w4 group) — an
+# exact rewrite (see qparams.concat_qtensors), so sparse == dense stays
+# pinned at 1e-5 while each layer runs one activation-quantization pass
+# and one (kernel or integer-jnp) matmul instead of five. The MD engine
+# hits this every step, so the op count is the CPU steps/sec lever.
+_TRUNK = ("wq", "wk", "wm", "wa", "wb")
+
+
+def _trunk_matmul(qparams, layer: str, xn: jnp.ndarray, mm) -> jnp.ndarray:
+    """One fused projection pass: returns (N, 3F + 2Fv) columns ordered
+    q | k | msg | a-coeff | b-coeff. Consecutive same-kind weights share
+    a matmul; output column order is the `_TRUNK` order regardless of
+    how the kinds group."""
+    qts = [qparams[f"{layer}/{n}"] for n in _TRUNK]
+    outs = []
+    lo = 0
+    for hi in range(1, len(qts) + 1):
+        if hi == len(qts) or qts[hi].kind != qts[lo].kind:
+            group = qts[lo:hi]
+            qt = group[0] if len(group) == 1 else concat_qtensors(group)
+            outs.append(mm(xn, qt))
+            lo = hi
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
 
 
 def _dense(x: jnp.ndarray, qt, use_kernels: bool) -> jnp.ndarray:
@@ -156,7 +183,8 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
                   codebook: Optional[jnp.ndarray] = None,
                   *, quant_vectors: bool = True, use_kernels: bool = True,
                   edge_kernel: Optional[bool] = None,
-                  mddq_kernel: bool = False) -> jnp.ndarray:
+                  mddq_kernel: bool = False,
+                  refine_cutoff: bool = False) -> jnp.ndarray:
     """Per-molecule energies over a padded edge list — the O(E) path.
 
     species/coords/mask as in ``batched_energy``; senders/receivers are
@@ -164,11 +192,16 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
     per-slot validity bit, all laid out per the ``bucketing.EdgeList``
     contract (per-molecule slot ranges, receiver-sorted). ``edge_kernel``
     selects the fused Pallas segment-softmax (None = auto: kernel on TPU,
-    XLA segment ops on CPU). Returns (B,) f32.
+    the blocked XLA path elsewhere). ``refine_cutoff=True`` treats
+    ``edge_mask`` as a Verlet-skin list built at an enlarged radius and
+    tightens it to ``d < cfg.cutoff`` at the current coordinates using
+    the internally computed distances (the MD engine's per-step
+    refinement, fused here so it shares the geometry pass — same
+    predicate as ``kernels.ops.refine_edge_mask``). Returns (B,) f32.
     """
     B, n = species.shape
     N = B * n
-    Fv = cfg.vec_feat
+    F, Fv = cfg.feat, cfg.vec_feat
     if codebook is None and quant_vectors:
         codebook = make_codebook(cfg.dir_bits)
     mm = qmatmul if use_kernels else ref_qmatmul
@@ -177,8 +210,12 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
     # of coords, so forces flow through the gathers; masked slots are
     # self-loops -> d ~ 0, and every use below is edge_mask-gated
     coords_f = coords.reshape(N, 3)
-    rij = coords_f[senders] - coords_f[receivers]            # (E, 3) r_j-r_i
-    d = jnp.sqrt(jnp.sum(rij ** 2, -1) + 1e-12)
+    rij = ops.edge_gather(coords_f, senders, n) \
+        - ops.edge_gather(coords_f, receivers, n)            # (E, 3) r_j-r_i
+    d2 = jnp.sum(rij ** 2, -1)
+    if refine_cutoff:
+        edge_mask = edge_mask & (d2 < cfg.cutoff * cfg.cutoff)
+    d = jnp.sqrt(d2 + 1e-12)
     u = rij / d[..., None]                                   # (E, 3)
     rbf_e = _rbf(d, cfg) * edge_mask[..., None]              # (E, K)
 
@@ -190,9 +227,9 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
         L = f"layer{i}"
         xn = _layernorm(x, qparams[f"{L}/ln_g"], qparams[f"{L}/ln_b"])
 
-        q = mm(xn, qparams[f"{L}/wq"])
-        k = mm(xn, qparams[f"{L}/wk"])
-        bias_e = (rbf_e @ qparams[f"{L}/rbf_bias"])[:, 0]    # (E,)
+        # fused trunk projection (q | k | msg | a | b, see _trunk_matmul)
+        trunk = _trunk_matmul(qparams, L, xn, mm)            # (N, 3F+2Fv)
+        q, k = trunk[:, :F], trunk[:, F:2 * F]
         if cfg.robust_attention:
             q_s = cfg.tau * l2_normalize(q)
             k_s = l2_normalize(k)
@@ -200,26 +237,37 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
             q_s = q / jnp.sqrt(q.shape[-1])
             k_s = k
 
+        # fused radial gemm: bias | scalar gate | a-gate | b-gate ride
+        # one (E, K) @ (K, 1+F+2Fv) product (exact column split)
+        rg = rbf_e @ jnp.concatenate(
+            [qparams[f"{L}/rbf_bias"], qparams[f"{L}/rbf_m"],
+             qparams[f"{L}/rbf_a"], qparams[f"{L}/rbf_b"]], axis=1)
+        bias_e = rg[:, 0]                                    # (E,)
+        gate_e = rg[:, 1:1 + F]                              # (E, F)
+
+        # fused sender gather: scalar messages, both coefficient
+        # projections, and the vector features come off one (E, .) gather
+        # (ops.edge_gather: its VJP is a blocked matmul, not a scatter)
+        sf = ops.edge_gather(
+            jnp.concatenate([trunk[:, 2 * F:], v.reshape(N, Fv * 3)],
+                            axis=1), senders, n)
+        msg_e = sf[:, :F]                                    # (E, F)
+        ca_e = sf[:, F:F + Fv] * rg[:, 1 + F:1 + F + Fv]     # (E, Fv)
+        cb_e = sf[:, F + Fv:F + 2 * Fv] * rg[:, 1 + F + Fv:]
         # per-edge values for ONE fused softmax-scatter: scalar messages
         # and both equivariant message terms share the same alpha
-        msg = mm(xn, qparams[f"{L}/wm"])                     # (N, F)
-        gate_e = rbf_e @ qparams[f"{L}/rbf_m"]               # (E, F)
-        ca_e = mm(xn, qparams[f"{L}/wa"])[senders] \
-            * (rbf_e @ qparams[f"{L}/rbf_a"])                # (E, Fv)
-        cb_e = mm(xn, qparams[f"{L}/wb"])[senders] \
-            * (rbf_e @ qparams[f"{L}/rbf_b"])
         vec_e = ca_e[..., None] * u[:, None, :] \
-            + cb_e[..., None] * v[senders]                   # (E, Fv, 3)
+            + cb_e[..., None] * sf[:, F + 2 * Fv:].reshape(-1, Fv, 3)
         vals = jnp.concatenate(
-            [gate_e * msg[senders], vec_e.reshape(-1, Fv * 3)], axis=1)
+            [gate_e * msg_e, vec_e.reshape(-1, Fv * 3)], axis=1)
 
         out = ops.edge_softmax(q_s, k_s, bias_e, vals, senders, receivers,
                                edge_mask, cap=n, use_kernel=edge_kernel)
-        x = x + out[:, :cfg.feat]
+        x = x + out[:, :F]
         h = jax.nn.silu(mm(x, qparams[f"{L}/w_upd1"]))
         x = x + mm(h, qparams[f"{L}/w_upd2"])
 
-        v = v + out[:, cfg.feat:].reshape(N, Fv, 3)
+        v = v + out[:, F:].reshape(N, Fv, 3)
         if quant_vectors:
             v = _quant_vectors(v, cfg, codebook, mddq_kernel)
 
@@ -234,7 +282,8 @@ def sparse_energy(qparams: QuantizedParams, cfg: So3kratesConfig,
 def sparse_energy_and_forces(qparams, cfg, species, coords, mask,
                              senders, receivers, edge_mask, codebook=None,
                              *, quant_vectors=True, use_kernels=True,
-                             edge_kernel=None, mddq_kernel=False):
+                             edge_kernel=None, mddq_kernel=False,
+                             refine_cutoff=False):
     """Sparse-path energies (B,) and conservative forces (B, n, 3).
 
     The edge list is treated as data (indices carry no gradient); the
@@ -246,7 +295,8 @@ def sparse_energy_and_forces(qparams, cfg, species, coords, mask,
                           receivers, edge_mask, codebook,
                           quant_vectors=quant_vectors,
                           use_kernels=use_kernels, edge_kernel=edge_kernel,
-                          mddq_kernel=mddq_kernel)
+                          mddq_kernel=mddq_kernel,
+                          refine_cutoff=refine_cutoff)
         return jnp.sum(e), e
 
     (_, energies), neg_f = jax.value_and_grad(total_energy,

@@ -39,8 +39,8 @@ import numpy as np
 from repro.core.quantizers import unpack_int4
 from repro.kernels import ops
 
-__all__ = ["QTensor", "QuantPolicy", "qmatmul", "quantize_so3_params",
-           "serving_bytes", "fp32_bytes"]
+__all__ = ["QTensor", "QuantPolicy", "qmatmul", "concat_qtensors",
+           "quantize_so3_params", "serving_bytes", "fp32_bytes"]
 
 # names of the equivariant-branch coefficient matrices (paper: W4 in w4a8)
 _EQV_SUFFIXES = ("/wa", "/wb")
@@ -147,21 +147,62 @@ def qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
     return _qmm(qt.kind, x, qt.data, qt.scale)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ref_qmm(kind, x, data, scale):
+    return _ref_qmm_impl(kind, x, data, scale)
+
+
+def _ref_qmm_impl(kind, x, data, scale):
+    if kind == "fp":
+        return x @ data
+    a_q, a_s = ops.quantize_activations(x)
+    w_q = data if kind == "w8" else unpack_int4(data)
+    acc = jnp.matmul(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * a_s * scale
+
+
+def _ref_qmm_fwd(kind, x, data, scale):
+    return _ref_qmm_impl(kind, x, data, scale), (data, scale)
+
+
+_ref_qmm.defvjp(_ref_qmm_fwd, _qmm_bwd)  # same STE backward as the kernels
+
+
 def ref_qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
     """Pure-jnp oracle with the same semantics as ``qmatmul`` — identical
     forward value (per-row A8 activations, integer accumulation) and the
     identical straight-through backward (gradients flow as if the matmul
-    were against the dequantized weights). Used by the per-molecule
-    reference path in tests: both energies AND forces must match the
-    kernel-batched engine."""
-    if qt.kind == "fp":
-        return x @ qt.data
-    a_q, a_s = ops.quantize_activations(jax.lax.stop_gradient(x))
-    w_q = qt.data if qt.kind == "w8" else unpack_int4(qt.data)
-    acc = jnp.matmul(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
-    y_int = acc.astype(jnp.float32) * a_s * qt.scale
-    y_lin = x @ qt.dequantize()           # differentiable surrogate
-    return y_lin + jax.lax.stop_gradient(y_int - y_lin)
+    were against the dequantized weights — a custom VJP, so the forward
+    runs the integer path alone with no surrogate fp matmul riding
+    along). Used by the per-molecule reference path in tests (both
+    energies AND forces must match the kernel-batched engine) and as the
+    CPU serving/MD matmul where the Pallas interpreter has nothing to
+    fuse for."""
+    return _ref_qmm(qt.kind, x, qt.data, qt.scale)
+
+
+def concat_qtensors(qts) -> QTensor:
+    """Fuse weights along the output axis: ``x @ [W1|W2|...]`` equals the
+    per-weight matmuls column-for-column, because activation scales are
+    per-row (independent of the weight) and weight scales per-column
+    (independent of the split) — for fp, w8, and nibble-packed w4 alike
+    (each packed width is a whole number of bytes). The serving forward
+    fuses each layer's trunk projections through this: one quantized
+    matmul (and one activation-quantization pass) instead of five.
+
+    All inputs must share kind and input dimension; w4 widths must be
+    even. Output columns are ordered as the inputs are given.
+    """
+    kind = qts[0].kind
+    if any(q.kind != kind for q in qts):
+        raise ValueError(f"mixed kinds {[q.kind for q in qts]}")
+    if any(q.data.shape[0] != qts[0].data.shape[0] for q in qts):
+        raise ValueError("mismatched input dims")
+    data = jnp.concatenate([q.data for q in qts], axis=1)
+    if kind == "fp":
+        return QTensor("fp", data)
+    return QTensor(kind, data,
+                   jnp.concatenate([q.scale for q in qts], axis=1))
 
 
 # ---------------------------------------------------------------------------
