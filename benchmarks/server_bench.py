@@ -1,0 +1,264 @@
+"""Online-serving benchmark: dynamic micro-batching vs per-request
+dispatch, plus packed-artifact cold start (ISSUE 4).
+
+The claim under test: under load, forming micro-batches behind a small
+deadline beats serving each request as it arrives — per-request
+dispatch saturates at ``1 / service_time`` while the batched engine
+amortizes one compiled dispatch over up to ``max_batch`` molecules —
+and the latency cost of waiting for peers is bounded by the batching
+deadline. Both strategies are the *same* scheduler
+(``repro.server.MicroBatchScheduler``) over the *same* engine on
+identical seeded Poisson traffic; the baseline is simply
+``max_batch=1, deadline_ms=0`` (flush every request immediately), so
+the comparison isolates batch formation — not engine, queueing, or
+measurement differences.
+
+Method:
+
+1. **Calibrate** — measure the per-request service time, giving the
+   sequential capacity ``C = 1/t`` (req/s) a per-request server can
+   sustain.
+2. **Offered-load sweep** — replay Poisson traffic at multiples of C
+   (default 0.6x and 3.0x: below and far above sequential capacity)
+   through both strategies, recording p50/p95/p99 latency, throughput,
+   queue depth, and achieved batch occupancy. Latency is measured from
+   each request's *scheduled* arrival (no coordinated omission).
+3. **Artifact cold start** — at deploy scale (weight-dominated model),
+   time engine construction from fp32 (quantization pass) vs from the
+   packed artifact (``repro.server.artifact``), and compare on-disk
+   bytes vs fp32 param bytes. The W4A8 artifact must be >= 3x smaller.
+
+Run:  PYTHONPATH=src python benchmarks/server_bench.py [--mode w8a8]
+          [--requests 150] [--loads 0.6 3.0] [--deadline-ms 25]
+          [--json BENCH_server.json] [--smoke]
+
+Writes a machine-readable JSON record so the perf trajectory is tracked
+across PRs; ``--smoke`` shrinks everything for CI and skips the
+acceptance assertions (tracked via the committed BENCH_server.json from
+the reference machine).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.models import so3krates as so3
+from repro.serving import QuantizedEngine, ServeConfig, random_graph
+from repro.serving.qparams import fp32_bytes as fp32_nbytes_of
+from repro.server import (MicroBatchScheduler, SchedulerConfig, SizeClass,
+                          TrafficConfig, load_engine, make_traffic,
+                          run_open_loop, save_artifact)
+
+
+def calibrate_service_time(engine, repeats=7, seed=17) -> float:
+    """Expected seconds for one single-molecule request under the bench's
+    size mix (the per-request server's unit of work): the mean over one
+    representative molecule per bucket of the ladder — calibrating on
+    the small bucket alone would overstate sequential capacity and make
+    every offered-load multiple secretly an overload."""
+    rng = np.random.default_rng(seed)
+    per_bucket = []
+    for cap in engine.serve.bucket_sizes:
+        n = max(6, (3 * cap) // 4)
+        g = random_graph(rng, n, engine.model_cfg.n_species, density=0.1)
+        engine.infer_batch([g])     # ensure warm
+        times = []
+        for _ in range(repeats):
+            t0 = time.monotonic()
+            engine.infer_batch([g])
+            times.append(time.monotonic() - t0)
+        per_bucket.append(statistics.median(times))
+    return statistics.mean(per_bucket)
+
+
+def run_strategy(engine, sched_cfg, traffic, rate):
+    """One open-loop replay; returns the latency/throughput summary +
+    batching + dispatch telemetry for the phase alone."""
+    engine.reset_stats()            # phase-local dispatch counters
+    with MicroBatchScheduler(engine, sched_cfg) as sched:
+        res = run_open_loop(sched, traffic, rate_rps=rate)
+        stats = sched.stats()
+    out = res.summary()
+    out["submit_lag_p99_ms"] = res.submit_lag_p99_ms
+    out["mean_batch"] = stats.get("mean_batch", 0.0)
+    out["max_queue_depth"] = stats.get("max_queue_depth", 0)
+    out["n_flushes"] = stats.get("n_flushes", 0)
+    out["flush_reasons"] = stats.get("flush_reasons", {})
+    out["dispatch"] = stats["engine_dispatch"]
+    return out
+
+
+def bench_artifact(mode, feat, vec_feat, n_layers, path):
+    """Deploy-scale cold-start + size comparison for one mode."""
+    model_cfg = so3.So3kratesConfig(feat=feat, vec_feat=vec_feat,
+                                    n_layers=n_layers)
+    serve = ServeConfig(mode=mode, bucket_sizes=(32, 64), max_batch=16)
+    params = so3.init_params(jax.random.PRNGKey(0), model_cfg)
+    fp32_b = fp32_nbytes_of(params)
+
+    # fp32 route: what every process start paid before artifacts —
+    # build the engine from the fp32 tree (full quantization pass)
+    t0 = time.monotonic()
+    src = QuantizedEngine(model_cfg, params, serve)
+    cold_fp32 = time.monotonic() - t0
+
+    file_bytes = save_artifact(path, src)
+
+    t0 = time.monotonic()
+    load_engine(path)
+    cold_art = time.monotonic() - t0
+    mem = src.memory_report()
+    return {
+        "mode": mode,
+        "feat": feat, "vec_feat": vec_feat, "n_layers": n_layers,
+        "fp32_bytes": fp32_b,
+        "serving_bytes": mem["served_bytes"],
+        "artifact_file_bytes": file_bytes,
+        "artifact_compression_x": fp32_b / file_bytes,
+        "cold_start_fp32_s": cold_fp32,
+        "cold_start_artifact_s": cold_art,
+        "cold_start_speedup": cold_fp32 / max(cold_art, 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="w8a8",
+                    choices=["fp32", "w8a8", "w4a8"])
+    ap.add_argument("--requests", type=int, default=150)
+    ap.add_argument("--loads", type=float, nargs="+", default=[0.6, 3.0],
+                    help="offered load as multiples of the calibrated "
+                         "sequential (per-request) capacity")
+    ap.add_argument("--deadline-ms", type=float, default=25.0)
+    ap.add_argument("--sched-batch", type=int, default=8)
+    ap.add_argument("--buckets", type=int, nargs="+", default=[16, 32])
+    ap.add_argument("--feat", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--deploy-feat", type=int, default=128,
+                    help="feat of the weight-dominated model for the "
+                         "artifact size/cold-start section")
+    ap.add_argument("--json", default="BENCH_server.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--artifact-path", default="/tmp/server_bench_model.npz")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: few requests, tiny deploy model, "
+                         "no acceptance assertions")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = 24
+        args.loads = [1.0, 2.5]
+        args.deploy_feat = 64
+
+    model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=8,
+                                    n_layers=args.layers, n_rbf=8,
+                                    dir_bits=6, cutoff=3.0)
+    serve = ServeConfig(mode=args.mode, bucket_sizes=tuple(args.buckets),
+                        max_batch=max(args.sched_batch, 8))
+    engine = QuantizedEngine.from_config(model_cfg, serve=serve, seed=0)
+    t_warm = engine.warmup()
+    engine.reset_stats()            # warmup dispatches don't belong to phases
+    t_req = calibrate_service_time(engine)
+    cap_rps = 1.0 / t_req
+    print(f"mode={args.mode} backend={engine.backend} "
+          f"buckets={args.buckets} warmup={t_warm:.1f}s")
+    print(f"calibration: per-request service {t_req * 1e3:.1f} ms -> "
+          f"sequential capacity {cap_rps:.1f} req/s")
+
+    if args.buckets[0] + 1 > args.buckets[-1]:   # single-bucket ladder
+        size_mix = (SizeClass(6, args.buckets[0], 1.0),)
+    else:
+        size_mix = (SizeClass(6, args.buckets[0], 0.5),
+                    SizeClass(args.buckets[0] + 1, args.buckets[-1], 0.5))
+    per_request_cfg = SchedulerConfig(max_batch=1, deadline_ms=0.0,
+                                      warmup=False)
+    dynamic_cfg = SchedulerConfig(max_batch=args.sched_batch,
+                                  deadline_ms=args.deadline_ms,
+                                  warmup=False)
+
+    print(f"{'load':>6} {'offered':>9} {'strategy':>12} {'p50':>8} "
+          f"{'p95':>8} {'p99':>8} {'thruput':>9} {'batch':>6} {'queue':>6}")
+    loads = []
+    for load in args.loads:
+        rate = load * cap_rps
+        traffic = make_traffic(TrafficConfig(
+            rate_rps=rate, n_requests=args.requests, size_mix=size_mix,
+            n_species=model_cfg.n_species, seed=int(load * 1000)))
+        row = {"load_factor": load, "offered_rps": rate}
+        for name, cfg in (("per_request", per_request_cfg),
+                          ("dynamic", dynamic_cfg)):
+            r = run_strategy(engine, cfg, traffic, rate)
+            row[name] = r
+            print(f"{load:>5.1f}x {rate:>7.1f}/s {name:>12} "
+                  f"{r['p50_ms']:>7.1f}m {r['p95_ms']:>7.1f}m "
+                  f"{r['p99_ms']:>7.1f}m {r['throughput_rps']:>7.1f}/s "
+                  f"{r['mean_batch']:>6.2f} {r['max_queue_depth']:>6}")
+        row["throughput_gain_dynamic"] = (
+            row["dynamic"]["throughput_rps"]
+            / row["per_request"]["throughput_rps"])
+        row["p99_gain_dynamic"] = (row["per_request"]["p99_ms"]
+                                   / row["dynamic"]["p99_ms"])
+        loads.append(row)
+
+    print("\nartifact (deploy-scale, weight-dominated model):")
+    artifacts = []
+    for mode in ("w8a8", "w4a8"):
+        a = bench_artifact(mode, args.deploy_feat, args.deploy_feat // 4,
+                           3, args.artifact_path)
+        artifacts.append(a)
+        print(f"  {mode}: fp32 {a['fp32_bytes'] / 1e6:.2f} MB -> artifact "
+              f"{a['artifact_file_bytes'] / 1e6:.2f} MB "
+              f"({a['artifact_compression_x']:.2f}x smaller); cold start "
+              f"{a['cold_start_fp32_s']:.2f}s (quantize) -> "
+              f"{a['cold_start_artifact_s']:.2f}s (packed, "
+              f"{a['cold_start_speedup']:.1f}x)")
+
+    record = {
+        "benchmark": "server_dynamic_microbatching",
+        "backend": engine.backend,
+        "mode": args.mode,
+        "feat": args.feat,
+        "n_layers": args.layers,
+        "buckets": list(args.buckets),
+        "n_requests": args.requests,
+        "deadline_ms": args.deadline_ms,
+        "sched_batch": args.sched_batch,
+        "per_request_service_ms": t_req * 1e3,
+        "sequential_capacity_rps": cap_rps,
+        "loads": loads,
+        "artifacts": artifacts,
+        "smoke": args.smoke,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\nwrote {args.json}")
+
+    if args.smoke:
+        print("NOTE: smoke-sized run; acceptance claims not exercised")
+        return
+    high = max(loads, key=lambda r: r["load_factor"])
+    gain = high["throughput_gain_dynamic"]
+    if gain <= 1.0:
+        raise SystemExit(
+            f"FAIL: dynamic batching throughput gain {gain:.2f}x <= 1 at "
+            f"{high['load_factor']}x offered load — micro-batching is not "
+            "paying for its batching delay")
+    print(f"PASS: dynamic batching {gain:.2f}x per-request throughput at "
+          f"{high['load_factor']}x sequential capacity "
+          f"(p99 {high['p99_gain_dynamic']:.1f}x lower)")
+    w4 = next(a for a in artifacts if a["mode"] == "w4a8")
+    if w4["artifact_compression_x"] < 3.0:
+        raise SystemExit(
+            f"FAIL: w4a8 artifact only {w4['artifact_compression_x']:.2f}x "
+            "smaller than fp32 (< 3x)")
+    print(f"PASS: w4a8 packed artifact {w4['artifact_compression_x']:.2f}x "
+          "smaller than the fp32 params")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,17 @@ The so3 workload builds an engine, warms up its shape classes, pushes a
 stream of variable-size molecules through `infer_batch`, and reports
 molecules/s, the weight-memory compression, and the served model's LEE
 diagnostic (padding masked out).
+
+Online serving demo (`repro.server`, docs/server.md) — Poisson traffic
+through the dynamic micro-batching scheduler, latency percentiles and
+dispatch stats instead of one-shot batch timing:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload so3 --server \
+      --rate 20 --requests 200 --deadline-ms 25 \
+      [--artifact model.npz]        # cold-start from a packed artifact
+
+`--save-artifact path.npz` packs the engine's quantized weights to disk;
+`--artifact path.npz` boots from one (skipping fp32 + quantization).
 """
 from __future__ import annotations
 
@@ -83,26 +94,57 @@ def run_lm(args) -> None:
 # SO(3) force-field workload (QuantizedEngine)
 # ---------------------------------------------------------------------------
 
+def _artifact_mode(path: str) -> str:
+    """The serving mode a packed artifact was quantized for."""
+    from repro.server import load_artifact
+    return load_artifact(path).serve.mode
+
+
 def run_so3(args) -> None:
     from repro.models import so3krates as so3
     from repro.serving import QuantizedEngine, ServeConfig, random_graphs
+    from repro.server import load_engine, save_artifact
 
-    model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=args.vec_feat,
-                                    n_layers=args.layers, n_rbf=8,
-                                    dir_bits=args.dir_bits)
-    serve = ServeConfig(mode=args.mode,
-                        bucket_sizes=tuple(args.buckets),
-                        max_batch=args.max_batch,
-                        path=args.path)
-    engine = QuantizedEngine.from_config(model_cfg, serve=serve)
-    graphs = random_graphs(args.graphs, args.min_atoms, args.max_atoms,
-                           model_cfg.n_species, density=args.density)
+    if args.artifact:
+        # packed-artifact cold start: no fp32 tree, no quantization
+        # pass. The mode is baked into the packed weights, so it comes
+        # from the artifact unless the user explicitly asks (and an
+        # explicit mismatch is an error, not a silent override).
+        t0 = time.time()
+        mode = args.mode or _artifact_mode(args.artifact)
+        serve = ServeConfig(mode=mode, bucket_sizes=tuple(args.buckets),
+                            max_batch=args.max_batch, path=args.path)
+        engine = load_engine(args.artifact, serve=serve)
+        model_cfg = engine.model_cfg
+        print(f"cold start from {args.artifact} in {time.time() - t0:.2f}s "
+              "(packed weights, no quantization pass)")
+    else:
+        serve = ServeConfig(mode=args.mode or "w8a8",
+                            bucket_sizes=tuple(args.buckets),
+                            max_batch=args.max_batch,
+                            path=args.path)
+        model_cfg = so3.So3kratesConfig(feat=args.feat,
+                                        vec_feat=args.vec_feat,
+                                        n_layers=args.layers, n_rbf=8,
+                                        dir_bits=args.dir_bits)
+        engine = QuantizedEngine.from_config(model_cfg, serve=serve)
+    if args.save_artifact:
+        nbytes = save_artifact(args.save_artifact, engine)
+        print(f"packed artifact -> {args.save_artifact} "
+              f"({nbytes / 1e3:.1f} KB)")
 
     mem = engine.memory_report()
-    print(f"workload=so3 mode={args.mode} backend={engine.backend} "
+    print(f"workload=so3 mode={engine.serve.mode} backend={engine.backend} "
           f"interpret={engine.interpret}")
     print(f"weights: fp32 {mem['fp32_bytes']/1e3:.1f} KB -> served "
           f"{mem['served_bytes']/1e3:.1f} KB ({mem['compression_x']}x)")
+
+    if args.server:
+        run_so3_server(engine, args)
+        return
+
+    graphs = random_graphs(args.graphs, args.min_atoms, args.max_atoms,
+                           model_cfg.n_species, density=args.density)
 
     # warm the exact shape classes this traffic will use, so the timed
     # pass below measures steady-state throughput, not compilation
@@ -128,6 +170,50 @@ def run_so3(args) -> None:
               f"max {diag['lee_max']:.2e} (padding masked)")
 
 
+def run_so3_server(engine, args) -> None:
+    """Online-serving demo: Poisson traffic through the dynamic
+    micro-batching scheduler (`repro.server`), latency percentiles and
+    dispatch stats — what `infer_batch` one-shot timing cannot show."""
+    from repro.server import (MicroBatchScheduler, SchedulerConfig,
+                              SizeClass, TrafficConfig, make_traffic,
+                              run_open_loop)
+
+    mid = (args.min_atoms + args.max_atoms) // 2
+    if mid + 1 > args.max_atoms:      # degenerate range: one size class
+        size_mix = (SizeClass(args.min_atoms, args.max_atoms, 1.0),)
+    else:
+        size_mix = (SizeClass(args.min_atoms, mid, 0.5),
+                    SizeClass(mid + 1, args.max_atoms, 0.5))
+    cfg = TrafficConfig(
+        rate_rps=args.rate, n_requests=args.requests,
+        size_mix=size_mix,
+        n_species=engine.model_cfg.n_species, density=args.density,
+        seed=args.seed)
+    traffic = make_traffic(cfg)
+    sched_cfg = SchedulerConfig(
+        max_batch=min(args.sched_batch, args.max_batch),
+        deadline_ms=args.deadline_ms)
+    with MicroBatchScheduler(engine, sched_cfg) as sched:
+        print(f"warmup: {sched.warmup_s:.2f}s "
+              f"({len(engine.compiled_shapes)} shape classes)")
+        engine.reset_stats()    # keep the streaming phase unpolluted
+        res = run_open_loop(sched, traffic, rate_rps=args.rate)
+        stats = sched.stats()
+    s = res.summary()
+    print(f"open loop: {args.requests} requests at {args.rate:.1f} req/s "
+          f"offered ({args.min_atoms}-{args.max_atoms} atoms, "
+          f"deadline {args.deadline_ms:.0f} ms, "
+          f"micro-batch <= {sched_cfg.max_batch})")
+    print(f"latency: p50 {s['p50_ms']:.1f} ms  p95 {s['p95_ms']:.1f} ms  "
+          f"p99 {s['p99_ms']:.1f} ms  max {s['max_ms']:.1f} ms")
+    print(f"throughput: {s['throughput_rps']:.1f} req/s over "
+          f"{s['span_s']:.1f}s span")
+    print(f"batching: {stats['n_flushes']} flushes, mean batch "
+          f"{stats['mean_batch']:.2f}, reasons {stats['flush_reasons']}, "
+          f"max queue depth {stats['max_queue_depth']}")
+    print(f"dispatch: {stats['engine_dispatch']}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default="lm", choices=["lm", "so3"])
@@ -141,8 +227,10 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--tokens", type=int, default=32)
     # so3 options
-    ap.add_argument("--mode", default="w8a8",
-                    choices=["fp32", "w8a8", "w4a8"])
+    ap.add_argument("--mode", default=None,
+                    choices=["fp32", "w8a8", "w4a8"],
+                    help="serving mode (default: w8a8, or the artifact's "
+                         "own mode when --artifact is given)")
     ap.add_argument("--graphs", type=int, default=16)
     ap.add_argument("--min-atoms", type=int, default=6)
     ap.add_argument("--max-atoms", type=int, default=32)
@@ -164,6 +252,26 @@ def main():
                          "(None = legacy dense cloud)")
     ap.add_argument("--lee", action="store_true",
                     help="also report the served model's LEE diagnostic")
+    # so3 online-serving mode (repro.server, docs/server.md)
+    ap.add_argument("--server", action="store_true",
+                    help="stream Poisson traffic through the dynamic "
+                         "micro-batching scheduler and report latency "
+                         "percentiles + dispatch stats")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="offered load in requests/s (--server)")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="number of requests to stream (--server)")
+    ap.add_argument("--deadline-ms", type=float, default=25.0,
+                    help="micro-batching deadline (--server)")
+    ap.add_argument("--sched-batch", type=int, default=8,
+                    help="scheduler micro-batch flush size (--server)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--artifact",
+                    help="cold-start the engine from a packed quantized "
+                         "artifact (.npz) instead of quantizing fp32")
+    ap.add_argument("--save-artifact",
+                    help="pack the engine's quantized weights to this "
+                         ".npz and continue")
     args = ap.parse_args()
 
     if args.workload == "lm":

@@ -1,0 +1,45 @@
+"""repro.server — the online serving layer over ``repro.serving``.
+
+Where ``repro.serving`` answers "given a batch of molecules, run them
+fast", this package answers the production questions above it: requests
+arriving one at a time over the wall clock, latency deadlines, batch
+formation under load, and a packed on-disk artifact so cold start never
+touches fp32 weights.
+
+* :class:`MicroBatchScheduler` / :class:`SchedulerConfig` — dynamic
+  micro-batching over the engine's bucket ladder: per-shape-class
+  admission queues, flushed on ``max_batch`` or a ``deadline_ms``
+  batching deadline, request->result identity preserved under
+  out-of-order flushes (``scheduler.py``);
+* :func:`save_artifact` / :func:`load_artifact` / :func:`load_engine` —
+  versioned single-``.npz`` packed-weight artifacts (nibble-packed w4,
+  int8 w8, scales, configs) with checksum/version validation; bit-exact
+  reload, cold start skips quantization entirely (``artifact.py``);
+* :func:`make_traffic` / :func:`run_open_loop` / :func:`run_closed_loop`
+  — seeded Poisson traffic over mixed molecule sizes and the drivers
+  that replay it (``traffic.py``);
+* :func:`latency_summary` / :func:`flush_summary` — p50/p95/p99,
+  throughput, queue-depth/occupancy accounting (``stats.py``).
+
+See docs/server.md for semantics and knobs; ``benchmarks/
+server_bench.py`` measures dynamic batching against per-request serving
+and writes ``BENCH_server.json``.
+"""
+from repro.server.artifact import (ARTIFACT_MAGIC, ARTIFACT_VERSION,
+                                   ArtifactError, LoadedArtifact,
+                                   load_artifact, load_engine, save_artifact)
+from repro.server.scheduler import (MicroBatchScheduler, RequestHandle,
+                                    SchedulerConfig)
+from repro.server.stats import FlushRecord, flush_summary, latency_summary
+from repro.server.traffic import (SizeClass, TrafficConfig, TrafficResult,
+                                  make_traffic, run_closed_loop,
+                                  run_open_loop)
+
+__all__ = [
+    "ARTIFACT_MAGIC", "ARTIFACT_VERSION", "ArtifactError", "LoadedArtifact",
+    "load_artifact", "load_engine", "save_artifact",
+    "MicroBatchScheduler", "RequestHandle", "SchedulerConfig",
+    "FlushRecord", "flush_summary", "latency_summary",
+    "SizeClass", "TrafficConfig", "TrafficResult", "make_traffic",
+    "run_closed_loop", "run_open_loop",
+]

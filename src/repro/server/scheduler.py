@@ -1,0 +1,271 @@
+"""Dynamic micro-batching scheduler: online requests -> engine batches.
+
+``QuantizedEngine.infer_batch`` is synchronous: the caller supplies a
+whole batch and waits. Online traffic doesn't look like that — requests
+arrive one at a time, and the serving system must *form* batches under a
+latency budget. ``MicroBatchScheduler`` does exactly that, on top of the
+engine's existing bucket ladder:
+
+* **per-shape-class admission queues** — each arriving molecule is
+  assigned its bucket (same ``assign_bucket`` as ``infer_batch``) and
+  queued with peers of the same shape class, so every flush is a single
+  compiled dispatch (one bucket, one batch class);
+* **two flush triggers** — a queue flushes when it holds ``max_batch``
+  requests ("full": the batch cannot grow further) or when its oldest
+  request has waited ``deadline_ms`` ("deadline": latency budget spent
+  on batching; ship what we have). ``max_batch=1, deadline_ms=0``
+  degenerates to per-request serving — the benchmark baseline (with
+  ``max_batch > 1`` a zero deadline still flushes whatever queued
+  during the previous dispatch as one batch);
+* **request -> result identity** — ``submit`` returns a
+  :class:`RequestHandle`; flushes from different buckets complete out of
+  submission order, but each handle resolves to exactly its own
+  molecule's result (pinned to <= 1e-6 against a direct
+  ``infer_batch([g])`` in ``tests/test_server.py``);
+* **no steady-state compilation** — the scheduler calls
+  ``engine.warmup()`` at start by default; every shape a flush can
+  produce is in the engine's admissible set, so traffic never waits on
+  XLA.
+
+One worker thread owns the engine (JAX dispatch is serialized anyway on
+a single device; batching, not thread parallelism, is where the
+throughput comes from). ``submit`` is thread-safe and cheap: it appends
+to a queue and signals the worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.serving.bucketing import Graph, assign_bucket
+from repro.serving.engine import QuantizedEngine, MoleculeResult
+from repro.server.stats import FlushRecord, flush_summary
+
+__all__ = ["SchedulerConfig", "RequestHandle", "MicroBatchScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Batch-formation knobs (the engine's ServeConfig stays in charge of
+    shapes, paths, and kernels)."""
+    max_batch: int = 8        # flush a queue at this many requests
+    deadline_ms: float = 20.0  # max batching wait for the oldest request
+    warmup: bool = True       # pre-compile all shapes before serving
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.deadline_ms < 0:
+            raise ValueError("deadline_ms must be >= 0")
+
+
+class RequestHandle:
+    """A pending request's future. ``result()`` blocks until the flush
+    containing this molecule completes, then returns its
+    :class:`MoleculeResult` (or re-raises the engine's exception)."""
+
+    __slots__ = ("graph", "t_submit", "t_done", "_event", "_result", "_error")
+
+    def __init__(self, graph: Graph, t_submit: float):
+        self.graph = graph
+        self.t_submit = t_submit
+        self.t_done: Optional[float] = None
+        self._event = threading.Event()
+        self._result: Optional[MoleculeResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> MoleculeResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not completed within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._result  # type: ignore[return-value]
+
+    @property
+    def latency_s(self) -> float:
+        """Submit -> completion wall clock (queue wait + batching wait +
+        service). Only valid once ``done()``."""
+        if self.t_done is None:
+            raise RuntimeError("request not completed")
+        return self.t_done - self.t_submit
+
+    def _resolve(self, result=None, error=None):
+        self._result, self._error = result, error
+        self.t_done = time.monotonic()
+        self._event.set()
+
+
+class MicroBatchScheduler:
+    """Online request scheduler over a :class:`QuantizedEngine`.
+
+    Use as a context manager (or call ``close()``), so the worker thread
+    drains and exits::
+
+        with MicroBatchScheduler(engine, SchedulerConfig()) as sched:
+            handles = [sched.submit(g) for g in graphs]
+            results = [h.result() for h in handles]
+    """
+
+    def __init__(self, engine: QuantizedEngine,
+                 config: SchedulerConfig = SchedulerConfig()):
+        self.engine = engine
+        self.config = config
+        if config.max_batch > engine.serve.max_batch:
+            raise ValueError(
+                f"SchedulerConfig.max_batch {config.max_batch} exceeds "
+                f"ServeConfig.max_batch {engine.serve.max_batch}: flushes "
+                "must fit one engine batch")
+        self._buckets = engine.serve.buckets()
+        self._queues: Dict[int, Deque[RequestHandle]] = {
+            b.capacity: deque() for b in self._buckets}
+        self._lock = threading.Condition()
+        self._open = True
+        self._flushes: List[FlushRecord] = []
+        self._n_submitted = 0
+        self._n_completed = 0
+        self.warmup_s = engine.warmup() if config.warmup else 0.0
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="microbatch-scheduler", daemon=True)
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, graph: Graph) -> RequestHandle:
+        """Admit one molecule. Raises like ``infer_batch`` for molecules
+        larger than the bucket ladder; raises RuntimeError after
+        ``close()``."""
+        spec = assign_bucket(graph.n_atoms, self._buckets)
+        handle = RequestHandle(graph, time.monotonic())
+        with self._lock:
+            if not self._open:
+                raise RuntimeError("scheduler is closed")
+            self._queues[spec.capacity].append(handle)
+            self._n_submitted += 1
+            self._lock.notify()
+        return handle
+
+    def close(self):
+        """Stop admitting, drain every queue, join the worker."""
+        with self._lock:
+            if not self._open:
+                return
+            self._open = False
+            self._lock.notify()
+        self._worker.join()
+
+    def __enter__(self) -> "MicroBatchScheduler":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- telemetry ----------------------------------------------------------
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    def stats(self) -> Dict[str, object]:
+        """Flush telemetry (batch-size distribution = achieved bucket
+        occupancy, flush reasons, queue depths) + request counters and
+        the engine's dispatch counters."""
+        with self._lock:
+            flushes = list(self._flushes)
+            out = {"n_submitted": self._n_submitted,
+                   "n_completed": self._n_completed,
+                   "warmup_s": self.warmup_s}
+        out.update(flush_summary(flushes))
+        out["engine_dispatch"] = self.engine.stats_snapshot()
+        return out
+
+    # -- worker side --------------------------------------------------------
+
+    def _oldest_deadline(self) -> Optional[float]:
+        """Monotonic time at which the oldest queued request's batching
+        budget expires (None when all queues are empty). Caller holds
+        the lock."""
+        t = None
+        for q in self._queues.values():
+            if q:
+                cand = q[0].t_submit + self.config.deadline_ms * 1e-3
+                t = cand if t is None else min(t, cand)
+        return t
+
+    def _pick_flush(self, now: float, drain: bool):
+        """Choose (capacity, handles, reason) for the next flush, or None
+        when no trigger has fired. Caller holds the lock. Among all
+        *triggered* queues (full, or head's deadline expired) the one
+        whose head request is oldest goes first — a bucket whose queue
+        refills to max_batch faster than flushes complete must not
+        starve deadline-expired requests in other buckets."""
+        best = None          # (head_t_submit, cap, reason)
+        oldest = None        # (head_t_submit, cap) over non-empty queues
+        deadline_s = self.config.deadline_ms * 1e-3
+        for cap, q in self._queues.items():
+            if not q:
+                continue
+            head_t = q[0].t_submit
+            if oldest is None or head_t < oldest[0]:
+                oldest = (head_t, cap)
+            if len(q) >= self.config.max_batch:
+                reason = "full"
+            elif now >= head_t + deadline_s:
+                reason = "deadline"
+            else:
+                continue
+            if best is None or head_t < best[0]:
+                best = (head_t, cap, reason)
+        if best is not None:
+            _, cap, reason = best
+            return cap, self._pop(cap), reason
+        if drain and oldest is not None:
+            return oldest[1], self._pop(oldest[1]), "drain"
+        return None
+
+    def _pop(self, cap: int) -> List[RequestHandle]:
+        q = self._queues[cap]
+        return [q.popleft() for _ in range(min(len(q),
+                                               self.config.max_batch))]
+
+    def _serve_loop(self):
+        while True:
+            with self._lock:
+                while True:
+                    now = time.monotonic()
+                    depth = sum(len(q) for q in self._queues.values())
+                    picked = self._pick_flush(now, drain=not self._open)
+                    if picked is not None:
+                        break
+                    if not self._open and depth == 0:
+                        return
+                    deadline = self._oldest_deadline()
+                    self._lock.wait(
+                        None if deadline is None else max(deadline - now, 0))
+                cap, handles, reason = picked
+            # engine work runs outside the lock: submit stays non-blocking
+            wait_s = time.monotonic() - handles[0].t_submit
+            t0 = time.monotonic()
+            try:
+                results = self.engine.infer_batch(
+                    [h.graph for h in handles])
+            except BaseException as e:  # propagate to every waiting client
+                for h in handles:
+                    h._resolve(error=e)
+                continue
+            service_s = time.monotonic() - t0
+            # bookkeeping strictly before resolving: a client returning
+            # from result() must already see this flush in stats()
+            with self._lock:
+                self._n_completed += len(handles)
+                self._flushes.append(FlushRecord(
+                    capacity=cap, n_requests=len(handles), reason=reason,
+                    queue_depth=depth, wait_s=wait_s, service_s=service_s,
+                    path=results[0].path))
+            for h, r in zip(handles, results):
+                h._resolve(result=r)

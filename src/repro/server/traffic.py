@@ -1,0 +1,150 @@
+"""Open/closed-loop traffic generation and replay for the online server.
+
+Traffic model: **Poisson arrivals** (exponential inter-arrival gaps at a
+configured rate) over a **mixed molecule-size distribution** — weighted
+size classes, each a uniform ``[min_atoms, max_atoms]`` range — so a run
+exercises several buckets of the ladder at once, exactly the regime
+dynamic micro-batching exists for. Generation is pure and seeded: the
+same ``TrafficConfig`` yields the identical request sequence for every
+serving strategy under comparison.
+
+Two drivers:
+
+* :func:`run_open_loop` — arrivals fire on the wall clock regardless of
+  completions (load *offered*, not admitted). Latency is measured from
+  each request's **scheduled** arrival, so a driver lagging under
+  overload cannot hide queueing delay (no coordinated omission). This is
+  the headline mode of ``benchmarks/server_bench.py``.
+* :func:`run_closed_loop` — ``concurrency`` clients each keep exactly
+  one request in flight (submit, wait, repeat): the sustainable-
+  throughput probe, load adapts to the server.
+
+Both return a :class:`TrafficResult` carrying per-request latencies and
+the scheduler's flush/queue telemetry, summarized via
+``repro.server.stats.latency_summary``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.bucketing import Graph, random_graph
+from repro.server.scheduler import MicroBatchScheduler
+from repro.server.stats import latency_summary
+
+__all__ = ["SizeClass", "TrafficConfig", "TrafficResult", "make_traffic",
+           "run_open_loop", "run_closed_loop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeClass:
+    """One component of the molecule-size mixture."""
+    min_atoms: int
+    max_atoms: int
+    weight: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """A reproducible request stream."""
+    rate_rps: float                     # offered load (open loop)
+    n_requests: int
+    size_mix: Tuple[SizeClass, ...] = (SizeClass(6, 16, 0.5),
+                                       SizeClass(17, 32, 0.5))
+    n_species: int = 20
+    density: Optional[float] = 0.1      # atoms/A^3 (None = dense cloud)
+    seed: int = 0
+
+
+def make_traffic(cfg: TrafficConfig) -> List[Tuple[float, Graph]]:
+    """Seeded (arrival_time_s, Graph) list: Poisson arrivals at
+    ``rate_rps`` starting at t=0, sizes drawn from the weighted mixture,
+    molecules from the same ``random_graph`` recipe the serving benches
+    use."""
+    rng = np.random.default_rng(cfg.seed)
+    gaps = rng.exponential(1.0 / cfg.rate_rps, size=cfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    weights = np.asarray([c.weight for c in cfg.size_mix], np.float64)
+    classes = rng.choice(len(cfg.size_mix), size=cfg.n_requests,
+                         p=weights / weights.sum())
+    out = []
+    for t, ci in zip(arrivals, classes):
+        c = cfg.size_mix[ci]
+        n = int(rng.integers(c.min_atoms, c.max_atoms + 1))
+        out.append((float(t),
+                    random_graph(rng, n, cfg.n_species, cfg.density)))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficResult:
+    """One driver run: per-request timings + scheduler telemetry."""
+    latencies_s: np.ndarray       # per request, in submission order
+    span_s: float                 # first arrival -> last completion
+    offered_rps: Optional[float]  # open loop: the configured rate
+    submit_lag_p99_ms: float      # driver lateness (diagnostic, open loop)
+    scheduler_stats: Dict[str, object]
+
+    def summary(self) -> Dict[str, float]:
+        return latency_summary(self.latencies_s, self.span_s)
+
+
+def run_open_loop(scheduler: MicroBatchScheduler,
+                  traffic: Sequence[Tuple[float, Graph]],
+                  rate_rps: Optional[float] = None) -> TrafficResult:
+    """Replay ``traffic`` against the wall clock: each request is
+    submitted at its scheduled arrival time (sleeping in between),
+    completions are awaited afterwards. Latency for request i is
+    ``t_complete_i - t_scheduled_arrival_i``."""
+    handles = []
+    lags = []
+    t0 = time.monotonic()
+    for t_arr, g in traffic:
+        delay = t0 + t_arr - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        lags.append(time.monotonic() - (t0 + t_arr))
+        handles.append(scheduler.submit(g))
+    for h in handles:
+        h.result()
+    t_end = max(h.t_done for h in handles)
+    lat = np.asarray([h.t_done - (t0 + t_arr)
+                      for h, (t_arr, _) in zip(handles, traffic)])
+    return TrafficResult(
+        latencies_s=lat, span_s=t_end - (t0 + traffic[0][0]),
+        offered_rps=rate_rps,
+        submit_lag_p99_ms=float(np.percentile(lags, 99) * 1e3),
+        scheduler_stats=scheduler.stats())
+
+
+def run_closed_loop(scheduler: MicroBatchScheduler,
+                    graphs: Sequence[Graph],
+                    concurrency: int = 4) -> TrafficResult:
+    """``concurrency`` synchronous clients round-robin the request list,
+    each keeping one request in flight. Latency is submit -> completion."""
+    chunks = [list(graphs[i::concurrency]) for i in range(concurrency)]
+    lat_chunks: List[List[float]] = [[] for _ in range(concurrency)]
+    done_t = [0.0] * concurrency
+
+    def client(ci: int):
+        for g in chunks[ci]:
+            h = scheduler.submit(g)
+            h.result()
+            lat_chunks[ci].append(h.latency_s)
+        done_t[ci] = time.monotonic()
+
+    t0 = time.monotonic()
+    threads = [threading.Thread(target=client, args=(ci,), daemon=True)
+               for ci in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    lat = np.asarray([x for c in lat_chunks for x in c])
+    return TrafficResult(
+        latencies_s=lat, span_s=max(done_t) - t0, offered_rps=None,
+        submit_lag_p99_ms=0.0, scheduler_stats=scheduler.stats())

@@ -30,7 +30,8 @@ from repro.serving.bucketing import (BatchPlan, BucketSpec, EDGE_LANE,
                                      assign_bucket, build_edge_list,
                                      count_edges, default_edge_capacity,
                                      device_edge_list, pad_graphs,
-                                     plan_batches, random_graphs)
+                                     plan_batches, random_graph,
+                                     random_graphs)
 from repro.serving.engine import MoleculeResult, QuantizedEngine, ServeConfig
 from repro.serving.forward import (batched_energy, batched_energy_and_forces,
                                    sparse_energy, sparse_energy_and_forces)
@@ -41,7 +42,7 @@ __all__ = [
     "BatchPlan", "BucketSpec", "EDGE_LANE", "EdgeList", "Graph", "MXU_LANE",
     "assign_bucket", "build_edge_list", "count_edges",
     "default_edge_capacity", "device_edge_list", "pad_graphs",
-    "plan_batches", "random_graphs",
+    "plan_batches", "random_graph", "random_graphs",
     "MoleculeResult", "QuantizedEngine", "ServeConfig",
     "batched_energy", "batched_energy_and_forces",
     "sparse_energy", "sparse_energy_and_forces",

@@ -34,7 +34,7 @@ import numpy as np
 __all__ = ["Graph", "BucketSpec", "BatchPlan", "EdgeList", "assign_bucket",
            "plan_batches", "pad_graphs", "build_edge_list",
            "device_edge_list", "count_edges", "default_edge_capacity",
-           "random_graphs", "MXU_LANE", "EDGE_LANE"]
+           "random_graph", "random_graphs", "MXU_LANE", "EDGE_LANE"]
 
 MXU_LANE = 128  # minor-dim tile side of the TPU MXU; the 128-alignment contract
 EDGE_LANE = 128  # edge slots are padded to a multiple of this (kernel block)
@@ -123,31 +123,40 @@ def assign_bucket(n_atoms: int, buckets: Sequence[BucketSpec]) -> BucketSpec:
         f"({max(b.capacity for b in buckets)}); extend the bucket ladder")
 
 
+def random_graph(rng: np.random.Generator, n_atoms: int, n_species: int,
+                 density: Optional[float] = None) -> Graph:
+    """One random molecule — the single generation recipe shared by
+    :func:`random_graphs`, the server traffic harness
+    (``repro.server.traffic``), and bench calibration, so every layer
+    measures the same molecule distribution.
+
+    ``density`` (atoms per cubic Angstrom) places atoms uniformly in a
+    cube whose volume grows with n, so the cutoff graph has a
+    size-independent average degree — the physical regime where the
+    sparse path's O(E) beats the dense O(n^2). The default (None) is
+    the legacy normal(0, 2) cloud, nearly fully connected under typical
+    cutoffs.
+    """
+    if density is None:
+        coords = rng.normal(size=(n_atoms, 3)) * 2.0
+    else:
+        side = (n_atoms / density) ** (1.0 / 3.0)
+        coords = rng.uniform(0.0, side, size=(n_atoms, 3))
+    return Graph(
+        species=rng.integers(0, n_species, n_atoms).astype(np.int32),
+        coords=coords.astype(np.float32))
+
+
 def random_graphs(n_graphs: int, min_atoms: int, max_atoms: int,
                   n_species: int, seed: int = 0,
                   density: Optional[float] = None) -> List[Graph]:
-    """Uniform random molecules for benchmarks and smoke runs.
-
-    ``density`` (atoms per cubic Angstrom) switches to constant-density
-    placement: atoms uniform in a cube whose volume grows with n, so the
-    cutoff graph has a size-independent average degree — the physical
-    regime where the sparse path's O(E) beats the dense O(n^2). The
-    default (None) keeps the legacy normal(0, 2) cloud, which is nearly
-    fully connected under typical cutoffs.
-    """
+    """Uniform random molecules for benchmarks and smoke runs (sizes
+    uniform in [min_atoms, max_atoms]; see :func:`random_graph` for the
+    per-molecule recipe and the meaning of ``density``)."""
     rng = np.random.default_rng(seed)
-    out = []
-    for _ in range(n_graphs):
-        n = int(rng.integers(min_atoms, max_atoms + 1))
-        if density is None:
-            coords = rng.normal(size=(n, 3)) * 2.0
-        else:
-            side = (n / density) ** (1.0 / 3.0)
-            coords = rng.uniform(0.0, side, size=(n, 3))
-        out.append(Graph(
-            species=rng.integers(0, n_species, n).astype(np.int32),
-            coords=coords.astype(np.float32)))
-    return out
+    return [random_graph(rng, int(rng.integers(min_atoms, max_atoms + 1)),
+                         n_species, density)
+            for _ in range(n_graphs)]
 
 
 def plan_batches(graphs: Sequence[Graph],

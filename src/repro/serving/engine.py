@@ -48,7 +48,7 @@ from repro.serving.bucketing import (BucketSpec, Graph, build_edge_list,
 from repro.serving.forward import (batched_energy_and_forces,
                                    sparse_energy_and_forces)
 from repro.serving.qparams import (fp32_bytes, quantize_so3_params,
-                                   serving_bytes)
+                                   serving_bytes, serving_fp32_equiv)
 
 __all__ = ["ServeConfig", "MoleculeResult", "QuantizedEngine"]
 
@@ -113,11 +113,25 @@ class QuantizedEngine:
     """Batched quantized-inference engine for the SO3krates force field."""
 
     def __init__(self, model_cfg: so3.So3kratesConfig,
-                 params: Dict[str, jnp.ndarray], serve: ServeConfig):
+                 params: Optional[Dict[str, jnp.ndarray]], serve: ServeConfig,
+                 *, qparams=None, fp32_nbytes: Optional[int] = None):
+        """Build from fp32 ``params`` (quantized here, the training->serving
+        hand-off) or directly from serving-format ``qparams`` (the packed-
+        artifact cold-start path, ``repro.server.artifact`` — no fp32 tree
+        is ever materialized). Exactly one of the two must be given;
+        ``fp32_nbytes`` carries the fp32 footprint for ``memory_report``
+        when no fp32 tree exists."""
+        if (params is None) == (qparams is None):
+            raise ValueError("pass exactly one of params / qparams")
         self.model_cfg = model_cfg
         self.serve = serve
-        self._fp32_bytes = fp32_bytes(params)   # fp32 tree is not retained
-        self.qparams = quantize_so3_params(params, serve.mode)
+        if qparams is None:
+            self._fp32_bytes = fp32_bytes(params)  # fp32 tree is not retained
+            self.qparams = quantize_so3_params(params, serve.mode)
+        else:
+            self._fp32_bytes = (fp32_nbytes if fp32_nbytes is not None
+                                else serving_fp32_equiv(qparams))
+            self.qparams = qparams
         quant_vec = serve.vectors_quantized
         self._codebook = (make_codebook(model_cfg.dir_bits)
                           if quant_vec else None)
@@ -159,6 +173,18 @@ class QuantizedEngine:
             params = so3.init_params(jax.random.PRNGKey(seed), model_cfg)
         return cls(model_cfg, params, serve)
 
+    @classmethod
+    def from_quantized(cls, model_cfg: so3.So3kratesConfig, qparams,
+                       serve: ServeConfig,
+                       fp32_nbytes: Optional[int] = None) -> "QuantizedEngine":
+        """Build an engine from already-serving-format parameters — the
+        packed-artifact cold-start path (``repro.server.artifact``): no
+        fp32 materialization, no quantization pass. ``qparams`` must have
+        been produced by ``quantize_so3_params(params, serve.mode)`` (or
+        loaded from an artifact saved from such an engine)."""
+        return cls(model_cfg, None, serve, qparams=qparams,
+                   fp32_nbytes=fp32_nbytes)
+
     # -- introspection ------------------------------------------------------
 
     @property
@@ -174,6 +200,21 @@ class QuantizedEngine:
         served = serving_bytes(self.qparams)
         return {"fp32_bytes": self._fp32_bytes, "served_bytes": served,
                 "compression_x": round(self._fp32_bytes / max(served, 1), 2)}
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Immutable copy of the dispatch counters — take one before and
+        one after a phase and subtract to attribute batches to it."""
+        return dict(self.dispatch_stats)
+
+    def reset_stats(self) -> Dict[str, int]:
+        """Zero the dispatch counters, returning the pre-reset snapshot.
+        ``dispatch_stats`` otherwise accumulates for the engine's lifetime,
+        so benches/servers reset after warmup to keep steady-state phases
+        unpolluted."""
+        snap = self.stats_snapshot()
+        for k in self.dispatch_stats:
+            self.dispatch_stats[k] = 0
+        return snap
 
     # -- serving ------------------------------------------------------------
 

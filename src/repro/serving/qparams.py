@@ -40,7 +40,8 @@ from repro.core.quantizers import unpack_int4
 from repro.kernels import ops
 
 __all__ = ["QTensor", "QuantPolicy", "qmatmul", "concat_qtensors",
-           "quantize_so3_params", "serving_bytes", "fp32_bytes"]
+           "quantize_so3_params", "serving_bytes", "fp32_bytes",
+           "serving_fp32_equiv"]
 
 # names of the equivariant-branch coefficient matrices (paper: W4 in w4a8)
 _EQV_SUFFIXES = ("/wa", "/wb")
@@ -266,3 +267,18 @@ def serving_bytes(qparams: QuantizedParams) -> int:
 
 def fp32_bytes(params: Dict[str, jnp.ndarray]) -> int:
     return int(sum(np.asarray(v).size * 4 for v in params.values()))
+
+
+def serving_fp32_equiv(qparams: QuantizedParams) -> int:
+    """fp32 byte count the qparams tree *would* occupy: the logical
+    (unpacked, unscaled) element count at 4 bytes/element. Used when an
+    engine is built straight from a packed artifact and no fp32 tree ever
+    existed to measure."""
+    total = 0
+    for v in qparams.values():
+        if isinstance(v, QTensor):
+            total += int(v.data.shape[0]) * v.out_features * 4 \
+                if v.data.ndim == 2 else int(np.asarray(v.data).size) * 4
+        else:
+            total += int(np.asarray(v).size) * 4
+    return total
