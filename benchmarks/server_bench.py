@@ -41,39 +41,18 @@ from __future__ import annotations
 
 import argparse
 import json
-import statistics
 import time
 
 import jax
 import numpy as np
 
 from repro.models import so3krates as so3
-from repro.serving import QuantizedEngine, ServeConfig, random_graph
+from repro.serving import QuantizedEngine, ServeConfig
 from repro.serving.qparams import fp32_bytes as fp32_nbytes_of
-from repro.server import (MicroBatchScheduler, SchedulerConfig, SizeClass,
-                          TrafficConfig, load_engine, make_traffic,
-                          run_open_loop, save_artifact)
-
-
-def calibrate_service_time(engine, repeats=7, seed=17) -> float:
-    """Expected seconds for one single-molecule request under the bench's
-    size mix (the per-request server's unit of work): the mean over one
-    representative molecule per bucket of the ladder — calibrating on
-    the small bucket alone would overstate sequential capacity and make
-    every offered-load multiple secretly an overload."""
-    rng = np.random.default_rng(seed)
-    per_bucket = []
-    for cap in engine.serve.bucket_sizes:
-        n = max(6, (3 * cap) // 4)
-        g = random_graph(rng, n, engine.model_cfg.n_species, density=0.1)
-        engine.infer_batch([g])     # ensure warm
-        times = []
-        for _ in range(repeats):
-            t0 = time.monotonic()
-            engine.infer_batch([g])
-            times.append(time.monotonic() - t0)
-        per_bucket.append(statistics.median(times))
-    return statistics.mean(per_bucket)
+from repro.server import (MicroBatchScheduler, RateStage, SchedulerConfig,
+                          SizeClass, TrafficConfig, calibrate_service_time,
+                          load_engine, make_step_traffic, make_traffic,
+                          run_open_loop, save_artifact, stage_summaries)
 
 
 def run_strategy(engine, sched_cfg, traffic, rate):
@@ -204,6 +183,33 @@ def main():
                                    / row["dynamic"]["p99_ms"])
         loads.append(row)
 
+    # -- step-ramp overload/recovery scenario (shared generator with
+    # cluster_bench: repro.server.make_step_traffic) -----------------------
+    D = max(args.requests / (4.2 * cap_rps), 0.25)
+    stages = [RateStage(0.6 * cap_rps, D),    # cruise below capacity
+              RateStage(3.0 * cap_rps, D),    # overload burst
+              RateStage(0.6 * cap_rps, D)]    # recovery
+    ramp_traffic = make_step_traffic(stages, size_mix=size_mix,
+                                     n_species=model_cfg.n_species, seed=7)
+    ramp = None
+    if ramp_traffic:
+        engine.reset_stats()
+        with MicroBatchScheduler(engine, dynamic_cfg) as sched:
+            ramp_res = run_open_loop(sched, ramp_traffic)
+        per_stage = stage_summaries(ramp_res, stages)
+        print("\nstep ramp (dynamic batching; latency attributed to the "
+              "stage each request *arrived* in):")
+        for st, row in zip(stages, per_stage):
+            p99 = row.get("p99_ms", float("nan"))
+            print(f"  {st.rate_rps:>7.1f} req/s for {st.duration_s:.2f}s: "
+                  f"{row['n_offered']:>4} offered, p99 {p99:>8.1f} ms")
+        ramp = {
+            "stages": [{"rate_rps": st.rate_rps, "duration_s": st.duration_s}
+                       for st in stages],
+            "per_stage": per_stage,
+            "overall": ramp_res.summary(),
+        }
+
     print("\nartifact (deploy-scale, weight-dominated model):")
     artifacts = []
     for mode in ("w8a8", "w4a8"):
@@ -230,6 +236,7 @@ def main():
         "per_request_service_ms": t_req * 1e3,
         "sequential_capacity_rps": cap_rps,
         "loads": loads,
+        "ramp": ramp,
         "artifacts": artifacts,
         "smoke": args.smoke,
     }

@@ -1,0 +1,30 @@
+"""repro.cluster — multi-replica serving runtime over ``repro.server``.
+
+Where ``repro.server`` answers "one engine, online traffic",
+this package answers the next production question: N engines. W4A8
+artifacts are small and cold-start fast (see BENCH_server.json), so
+replicating engines across devices is cheap — this is the runtime that
+fans traffic out across them:
+
+* :class:`ClusterPool` / :class:`ClusterConfig` — a replica pool (one
+  device-pinned ``QuantizedEngine`` + worker thread + the *same*
+  ``BatchQueue`` flush policy as the single-engine scheduler, per
+  replica) behind a shape-class-aware join-shortest-queue router with
+  bounded admission (shed + ``retry_after_s``), rolling zero-downtime
+  artifact hot swap (``swap_artifact``), and failover
+  (``kill_replica`` → queued/in-flight requests requeue to survivors);
+* :class:`Replica` / :class:`ReplicaFailed` — the per-replica worker
+  and its failure error.
+
+On CPU, simulate N devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+process imports jax); on TPU the real device list is used. See
+docs/cluster.md for the router policy, the swap protocol, and the
+failure model; ``benchmarks/cluster_bench.py`` measures the scaling
+curve and writes ``BENCH_cluster.json``.
+"""
+from repro.cluster.pool import ClusterConfig, ClusterPool, pick_devices
+from repro.cluster.replica import Replica, ReplicaFailed
+
+__all__ = ["ClusterConfig", "ClusterPool", "Replica", "ReplicaFailed",
+           "pick_devices"]

@@ -1,0 +1,453 @@
+"""Replica pool + shape-class-aware router: the multi-engine runtime.
+
+``ClusterPool`` stands up N :class:`~repro.cluster.replica.Replica`\\ s —
+one :class:`~repro.serving.engine.QuantizedEngine` per JAX device (on
+CPU, simulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; on TPU the real
+device list is used) — behind one ``submit()`` that looks exactly like
+the single-engine ``MicroBatchScheduler``'s, so the traffic drivers in
+``repro.server.traffic`` run unchanged against either.
+
+**Routing** (``_route``) is join-shortest-queue with bucket affinity:
+
+1. replicas whose queue is at ``max_queue`` are ineligible; if none is
+   eligible the request is **shed** with ``SchedulerOverloaded`` and a
+   ``retry_after_s`` hint (bounded admission — under overload the pool
+   refuses loudly rather than queueing without bound);
+2. among eligible replicas, candidates are those within
+   ``affinity_slack`` of the shortest queue (the JSQ core: load
+   balance first);
+3. among candidates, prefer the replica already holding queued requests
+   of the *same shape class* (batches fill faster and flush "full"
+   instead of waiting out the deadline), then the shape class's static
+   home replica (so a lightly loaded cluster keeps each bucket's
+   compiled shapes hot on the same engine), then the shortest queue.
+
+**Rolling hot swap** (``swap_artifact``): load a packed artifact once
+(checksums verified), then for each replica — one at a time, the rest
+keep serving — build a new engine on that replica's device from the
+already-deserialized weights, *warm it up*, and exchange engines under
+the replica's flush lock. The in-flight flush finishes on the old
+weights; everything after runs the new ones; zero requests are dropped
+and the artifact's content tag is stamped into every subsequent
+result's ``artifact_version``.
+
+**Failover**: a replica that dies (injected ``kill_replica`` or a real
+engine exception) hands its queued and in-flight handles back to the
+pool, which requeues them onto surviving replicas — a request is only
+resolved with the replica's error after ``max_requeues`` failovers, or
+when no survivor remains. ``stats()`` merges per-replica heartbeat
+snapshots with router counters and the shared flush telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.models import so3krates as so3
+from repro.serving.bucketing import Graph, assign_bucket
+from repro.serving.engine import QuantizedEngine, MoleculeResult, ServeConfig
+from repro.server.artifact import (ArtifactError, ensure_mode_matches,
+                                   load_artifact)
+from repro.server.scheduler import (RequestHandle, SchedulerClosed,
+                                    SchedulerConfig, SchedulerOverloaded)
+from repro.server.stats import flush_summary
+from repro.cluster.replica import Replica, ReplicaFailed
+
+__all__ = ["ClusterConfig", "ClusterPool", "pick_devices"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Pool-level knobs. Batch formation inside each replica follows the
+    same ``max_batch``/``deadline_ms`` semantics as ``SchedulerConfig``
+    (it *is* the same ``BatchQueue`` policy)."""
+    n_replicas: int = 2
+    max_batch: int = 8
+    deadline_ms: float = 20.0
+    warmup: bool = True          # replicas pre-compile before serving
+    # bounded admission per replica; the pool sheds when every live
+    # replica is at the bound (None = unbounded)
+    max_queue: Optional[int] = None
+    # JSQ slack: a replica may be preferred for shape-class affinity as
+    # long as its queue is within this many requests of the shortest
+    affinity_slack: int = 2
+    # failovers a single request may survive before its error resolves
+    max_requeues: int = 2
+
+    def __post_init__(self):
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.affinity_slack < 0:
+            raise ValueError("affinity_slack must be >= 0")
+
+    def scheduler_config(self) -> SchedulerConfig:
+        # warmup/max_queue are pool-driven (parallel warmup, router-side
+        # shedding); the per-replica queue enforces the bound defensively
+        return SchedulerConfig(max_batch=self.max_batch,
+                               deadline_ms=self.deadline_ms,
+                               warmup=False, max_queue=self.max_queue)
+
+
+def pick_devices(n: int) -> List[Optional[jax.Device]]:
+    """First ``n`` JAX devices, reusing the ladder round-robin (with a
+    warning) when fewer exist — on CPU, start the process with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to simulate
+    N devices (see docs/cluster.md)."""
+    devs = jax.devices()
+    if len(devs) < n:
+        warnings.warn(
+            f"cluster wants {n} replicas but only {len(devs)} JAX "
+            f"device(s) exist — replicas will share devices. On CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax to simulate distinct devices.")
+    return [devs[i % len(devs)] for i in range(n)]
+
+
+class ClusterPool:
+    """N device-pinned engine replicas behind one shape-aware router."""
+
+    def __init__(self, engines: Sequence[QuantizedEngine],
+                 cluster: ClusterConfig = ClusterConfig(),
+                 wait_ready: bool = True):
+        """Build from pre-constructed (already device-pinned) engines —
+        one replica each; ``len(engines)`` overrides
+        ``cluster.n_replicas``. Prefer the ``from_config`` /
+        ``from_artifact`` constructors."""
+        if not engines:
+            raise ValueError("need at least one engine")
+        serves = {e.serve for e in engines}
+        if len(serves) != 1:
+            raise ValueError("all replica engines must share one ServeConfig")
+        self.serve = engines[0].serve
+        self.model_cfg = engines[0].model_cfg
+        self.cluster = dataclasses.replace(cluster, n_replicas=len(engines))
+        if cluster.max_batch > self.serve.max_batch:
+            raise ValueError(
+                f"ClusterConfig.max_batch {cluster.max_batch} exceeds "
+                f"ServeConfig.max_batch {self.serve.max_batch}")
+        self._buckets = self.serve.buckets()
+        self._lock = threading.Lock()
+        self._open = True
+        self._n_routed = 0
+        self._n_shed = 0
+        self._n_requeued = 0
+        self._n_failures = 0
+        self._routed_per_replica: Dict[int, int] = {}
+        self._retry_cache = (0.0, 0.0)   # (monotonic stamp, estimate)
+        # static bucket -> home replica map (affinity tie-break): spread
+        # the ladder round-robin so each replica "owns" some shape classes
+        caps = sorted(b.capacity for b in self._buckets)
+        self._home = {cap: i % len(engines) for i, cap in enumerate(caps)}
+        sched_cfg = self.cluster.scheduler_config()
+        self._replicas = [
+            Replica(i, eng, sched_cfg, on_failure=self._on_replica_failure,
+                    warmup=cluster.warmup)
+            for i, eng in enumerate(engines)]
+        if wait_ready:
+            self.wait_ready()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_quantized(cls, model_cfg: so3.So3kratesConfig, qparams,
+                       serve: ServeConfig,
+                       cluster: ClusterConfig = ClusterConfig(),
+                       fp32_nbytes: Optional[int] = None,
+                       devices: Optional[Sequence] = None,
+                       artifact_version: str = "") -> "ClusterPool":
+        """One engine per device from a single serving-format tree (each
+        replica gets its own committed copy via ``jax.device_put``)."""
+        if devices is None:
+            devices = pick_devices(cluster.n_replicas)
+        engines = [QuantizedEngine.from_quantized(
+            model_cfg, qparams, serve, fp32_nbytes=fp32_nbytes,
+            device=d, artifact_version=artifact_version) for d in devices]
+        return cls(engines, cluster)
+
+    @classmethod
+    def from_config(cls, model_cfg: so3.So3kratesConfig,
+                    params=None, serve: ServeConfig = ServeConfig(),
+                    cluster: ClusterConfig = ClusterConfig(),
+                    seed: int = 0,
+                    devices: Optional[Sequence] = None) -> "ClusterPool":
+        """Quantize fp32 params once (random init when None), replicate
+        the serving tree across devices."""
+        base = QuantizedEngine.from_config(model_cfg, params=params,
+                                           serve=serve, seed=seed)
+        return cls.from_quantized(
+            model_cfg, base.qparams, serve, cluster,
+            fp32_nbytes=base.memory_report()["fp32_bytes"], devices=devices)
+
+    @classmethod
+    def from_artifact(cls, path: str, serve: Optional[ServeConfig] = None,
+                      cluster: ClusterConfig = ClusterConfig(),
+                      devices: Optional[Sequence] = None) -> "ClusterPool":
+        """Cold-start a whole pool from one packed artifact: a single
+        deserialize + checksum pass, then per-device replication."""
+        art = load_artifact(path)
+        if serve is None:
+            serve = art.serve
+        else:
+            ensure_mode_matches(art.serve.mode, serve.mode)
+        return cls.from_quantized(
+            art.model_cfg, art.qparams, serve, cluster,
+            fp32_nbytes=art.fp32_bytes, devices=devices,
+            artifact_version=art.version_tag)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> None:
+        """Block until every replica finished (parallel) warmup."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for r in self._replicas:
+            left = None if deadline is None else max(deadline
+                                                     - time.monotonic(), 0)
+            if not r.ready.wait(left):
+                raise TimeoutError(
+                    f"replica {r.replica_id} not ready within {timeout}s")
+
+    # -- client side ---------------------------------------------------------
+
+    def submit(self, graph: Graph) -> RequestHandle:
+        """Route one molecule to a replica. Raises like ``infer_batch``
+        for off-ladder molecules, :class:`SchedulerClosed` when the pool
+        is closed or no replica survives, :class:`SchedulerOverloaded`
+        (with ``retry_after_s``) when bounded admission sheds."""
+        handle = RequestHandle(graph, time.monotonic())
+        handle.bucket_capacity = assign_bucket(graph.n_atoms,
+                                               self._buckets).capacity
+        # a replica can die between routing and admission: re-route, the
+        # alive set is re-read each attempt
+        for _ in range(2 * len(self._replicas)):
+            rep = self._route(handle.bucket_capacity)
+            if rep.try_submit(handle):
+                with self._lock:
+                    self._n_routed += 1
+                    self._routed_per_replica[rep.replica_id] = (
+                        self._routed_per_replica.get(rep.replica_id, 0) + 1)
+                return handle
+        with self._lock:
+            self._n_shed += 1
+        raise SchedulerOverloaded(
+            "no replica admitted the request (queues filled while "
+            "routing)", self._retry_after())
+
+    def infer(self, graphs: Sequence[Graph],
+              timeout: Optional[float] = None) -> List[MoleculeResult]:
+        """Convenience: submit all, wait for all (in input order)."""
+        handles = [self.submit(g) for g in graphs]
+        return [h.result(timeout=timeout) for h in handles]
+
+    def close(self) -> None:
+        """Stop admitting, drain every replica, join their workers."""
+        with self._lock:
+            if not self._open:
+                return
+            self._open = False
+        for r in self._replicas:
+            r.begin_close()
+        for r in self._replicas:
+            r.join()
+
+    def __enter__(self) -> "ClusterPool":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- routing -------------------------------------------------------------
+
+    def _live(self) -> List[Replica]:
+        return [r for r in self._replicas if r.accepting]
+
+    def _retry_after(self) -> float:
+        """Backoff hint for shed requests: about one flush's service
+        time from recent telemetry, floored at the batching deadline.
+        Cached for 0.5 s — sheds happen at the offered request rate
+        during overload, exactly when per-shed replica-lock sweeps
+        would contend with the serving workers."""
+        now = time.monotonic()
+        with self._lock:
+            stamp, est = self._retry_cache
+            if now - stamp < 0.5 and est > 0.0:
+                return est
+        recent = [s for r in self._replicas for s in r.recent_service_s()]
+        est = (sum(recent) / len(recent)) if recent else 0.0
+        est = max(est, self.cluster.deadline_ms * 1e-3, 0.01)
+        with self._lock:
+            self._retry_cache = (now, est)
+        return est
+
+    def _route(self, cap: int, ignore_bound: bool = False) -> Replica:
+        """JSQ + bucket affinity over live replicas (see module doc)."""
+        with self._lock:
+            if not self._open:
+                raise SchedulerClosed("cluster pool is closed")
+        live = self._live()
+        if not live:
+            raise SchedulerClosed("no live replicas")
+        depths = {r.replica_id: r.depth() for r in live}
+        mq = self.cluster.max_queue
+        if mq is not None and not ignore_bound:
+            ok = [r for r in live if depths[r.replica_id] < mq]
+            if not ok:
+                with self._lock:
+                    self._n_shed += 1
+                retry = self._retry_after()
+                raise SchedulerOverloaded(
+                    f"all {len(live)} live replica queues at max_queue="
+                    f"{mq}: request shed (retry in ~{retry:.3f}s)", retry)
+        else:
+            ok = live
+        d_min = min(depths[r.replica_id] for r in ok)
+        cands = [r for r in ok
+                 if depths[r.replica_id] <= d_min + self.cluster.affinity_slack]
+        home = self._home.get(cap, 0)
+
+        def preference(r: Replica):
+            return (-r.depth_of(cap),                  # fill same-shape batches
+                    0 if r.replica_id == home else 1,  # bucket's home replica
+                    depths[r.replica_id],              # then shortest queue
+                    r.replica_id)
+        return min(cands, key=preference)
+
+    # -- failover ------------------------------------------------------------
+
+    def _on_replica_failure(self, rep: Replica,
+                            orphans: List[RequestHandle],
+                            error: BaseException) -> None:
+        """Called from a dying replica's worker thread (no locks held):
+        requeue its queued + in-flight handles onto survivors."""
+        with self._lock:
+            self._n_failures += 1
+        for h in orphans:
+            h.n_requeues += 1
+            if h.n_requeues > self.cluster.max_requeues:
+                h._resolve(error=error, replica_id=rep.replica_id)
+                continue
+            placed = False
+            for _ in range(2 * len(self._replicas)):
+                try:
+                    # never shed an already-admitted request: failover
+                    # requeue bypasses the admission bound
+                    surv = self._route(h.bucket_capacity, ignore_bound=True)
+                except (SchedulerClosed, SchedulerOverloaded):
+                    break
+                if surv.try_submit(h, force=True):
+                    placed = True
+                    break
+            if placed:
+                with self._lock:
+                    self._n_requeued += 1
+            else:
+                h._resolve(error=error, replica_id=rep.replica_id)
+
+    def kill_replica(self, replica_id: int, mode: str = "drain") -> None:
+        """Injectable failure (tests, chaos drills, cluster_bench):
+        replica ``replica_id`` dies; its requests fail over to
+        survivors. ``mode="in_flight"`` also fails the flush being
+        formed — see :meth:`Replica.kill`."""
+        self._replicas[replica_id].kill(mode)
+
+    # -- rolling weight swap -------------------------------------------------
+
+    def swap_artifact(self, path: str,
+                      warmup: bool = True) -> Dict[str, object]:
+        """Zero-downtime rolling weight swap from a packed artifact.
+
+        The artifact is read and checksum-verified once; each live
+        replica then gets a fresh engine on its own device — warmed up
+        *before* the exchange, while the old engine (and every other
+        replica) keeps serving — and swaps under its flush lock. At any
+        instant at most one replica is briefly paused (bounded by one
+        flush), the rest serve; no request is dropped. Results carry the
+        new ``artifact_version`` from the first post-swap flush of each
+        replica onward.
+        """
+        art = load_artifact(path)
+        ensure_mode_matches(art.serve.mode, self.serve.mode)
+        if art.model_cfg != self.model_cfg:
+            raise ArtifactError(
+                "artifact model config does not match the pool's — a "
+                "rolling swap replaces weights, not architecture")
+        report = []
+        for rep in self._replicas:
+            if not rep.accepting:
+                continue             # dead replicas don't get new weights
+            t0 = time.monotonic()
+            eng = QuantizedEngine.from_quantized(
+                art.model_cfg, art.qparams, self.serve,
+                fp32_nbytes=art.fp32_bytes, device=rep.device,
+                artifact_version=art.version_tag)
+            warm_s = eng.warmup() if warmup else 0.0
+            pause_s = rep.swap_engine(eng)
+            report.append({"replica_id": rep.replica_id,
+                           "warmup_s": warm_s, "pause_s": pause_s,
+                           "total_s": time.monotonic() - t0})
+        return {"version_tag": art.version_tag, "replicas": report}
+
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self._replicas)
+
+    def queue_depth(self) -> int:
+        return sum(r.depth() for r in self._replicas)
+
+    def reset_stats(self) -> None:
+        """Zero per-phase telemetry (flush records, completion/error and
+        router counters, engine dispatch counters) — benches call this
+        between phases so rates reconcile within the phase. Liveness
+        state is untouched."""
+        for r in self._replicas:
+            r.reset_records()
+            r.engine.reset_stats()
+        with self._lock:
+            self._n_routed = 0
+            self._n_shed = 0
+            self._n_requeued = 0
+            self._n_failures = 0
+            self._routed_per_replica = {}
+            self._retry_cache = (0.0, 0.0)
+
+    def stats(self) -> Dict[str, object]:
+        """Cluster-wide snapshot: per-replica health/heartbeat, router
+        counters (routing balance, sheds, failovers), merged flush
+        telemetry (per-replica breakdown included), and the summed
+        engine dispatch counters — same headline keys as
+        ``MicroBatchScheduler.stats()`` so drivers and benches read
+        either."""
+        replicas = [r.snapshot() for r in self._replicas]
+        flushes = [f for r in self._replicas for f in r.records()]
+        with self._lock:
+            router = {
+                "n_routed": self._n_routed,
+                "n_shed": self._n_shed,
+                "n_requeued": self._n_requeued,
+                "n_failures": self._n_failures,
+                "routed_per_replica": {
+                    str(k): v for k, v in
+                    sorted(self._routed_per_replica.items())},
+            }
+        dispatch: Dict[str, int] = {}
+        for r in self._replicas:
+            for k, v in r.engine.stats_snapshot().items():
+                dispatch[k] = dispatch.get(k, 0) + v
+        out: Dict[str, object] = {
+            "n_replicas": len(self._replicas),
+            "n_live": len(self._live()),
+            "n_submitted": router["n_routed"],
+            "n_completed": sum(r["n_completed"] for r in replicas),
+            "n_shed": router["n_shed"],
+            "warmup_s": max((r["warmup_s"] for r in replicas), default=0.0),
+            "replicas": replicas,
+            "router": router,
+        }
+        out.update(flush_summary(flushes))
+        out["engine_dispatch"] = dispatch
+        return out

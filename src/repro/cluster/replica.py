@@ -1,0 +1,313 @@
+"""One cluster replica: a device-pinned engine + worker thread + queue.
+
+A :class:`Replica` is the ``n_replicas=1`` building block the pool
+(``repro.cluster.pool``) stands up N of: it owns
+
+* one :class:`~repro.serving.engine.QuantizedEngine` pinned to one JAX
+  device (weights committed there, jitted forwards compiled for it),
+* one :class:`~repro.server.scheduler.BatchQueue` — the *same*
+  queueing/flush policy object the single-engine
+  ``MicroBatchScheduler`` runs, so batch formation semantics are
+  identical at every replica count,
+* one worker thread that warms the engine up, then serves flushes.
+
+What a replica adds over the single-engine scheduler is the cluster's
+failure and upgrade surface:
+
+* **engine hot swap** — ``swap_engine(new_engine)`` exchanges the
+  serving engine under a lock that is held during each flush, so the
+  in-flight flush finishes on the old weights, everything after runs
+  the new ones, and no request is ever dropped (the pool drives this
+  one replica at a time for a zero-downtime rolling swap);
+* **failure** — ``kill()`` (the injectable abrupt failure used by
+  tests and ``benchmarks/cluster_bench.py``) takes the *failover
+  path*: the replica stops accepting, hands every unresolved handle —
+  queued and, for in-flight kills, the flush being attempted — to the
+  pool's ``on_failure`` callback for requeue onto survivors, and its
+  thread exits. A real **engine exception** during a flush resolves
+  the error to that flush's handles (exactly like the single-engine
+  scheduler — a poison request must not be requeued to cascade-kill
+  survivors); only ``MAX_CONSECUTIVE_ERRORS`` erroring flushes in a
+  row are treated as the replica itself being broken, taking the
+  failover path for the *queued* (never-attempted) requests. A replica
+  never silently eats requests;
+* **heartbeat telemetry** — ``snapshot()`` reports liveness, queue
+  depth, completions, the serving artifact version, and the age of the
+  last completed flush (the heartbeat the pool surfaces in
+  ``stats()``).
+
+Locking: the replica's condition variable guards its queue and flags
+(never held during engine work); ``_engine_lock`` is held for the
+duration of each flush and by ``swap_engine``. The pool may take
+replica locks while holding its own; replica worker threads call back
+into the pool only with no replica lock held — that ordering
+(pool -> replica, never the reverse) is what makes the whole thing
+deadlock-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.engine import QuantizedEngine
+from repro.server.scheduler import BatchQueue, RequestHandle, SchedulerConfig
+from repro.server.stats import FlushRecord
+
+__all__ = ["Replica", "ReplicaFailed"]
+
+
+class ReplicaFailed(RuntimeError):
+    """A replica died (injected kill or engine failure). Requests that
+    exhausted their failover requeue budget resolve with this error."""
+
+
+class Replica:
+    """One engine + queue + worker thread of a cluster pool."""
+
+    # erroring flushes in a row before the replica declares itself
+    # broken (a hard device failure errors every flush; a poison
+    # request only errors its own — see module doc)
+    MAX_CONSECUTIVE_ERRORS = 3
+
+    def __init__(self, replica_id: int, engine: QuantizedEngine,
+                 config: SchedulerConfig,
+                 on_failure: Callable[["Replica", List[RequestHandle],
+                                       BaseException], None],
+                 warmup: bool = True):
+        self.replica_id = replica_id
+        self.engine = engine
+        self.config = config
+        self.warmup_s = 0.0
+        self.ready = threading.Event()      # set once warmup finished (or failed)
+        self._queue = BatchQueue(engine.serve.buckets(), config)
+        self._lock = threading.Condition()
+        self._engine_lock = threading.Lock()  # held per flush and per swap
+        self._accepting = True
+        self._closing = False
+        self._fail_next_flush = False
+        self._fail_error: Optional[BaseException] = None
+        self._on_failure = on_failure
+        self._do_warmup = warmup
+        self._flushes: List[FlushRecord] = []
+        self._n_completed = 0
+        self._n_errors = 0              # flush errors resolved to handles
+        self._consecutive_errors = 0
+        self._last_beat = time.monotonic()
+        self._worker = threading.Thread(
+            target=self._run, name=f"cluster-replica-{replica_id}",
+            daemon=True)
+        self._worker.start()
+
+    # -- pool side -----------------------------------------------------------
+
+    @property
+    def device(self):
+        return self.engine.device
+
+    @property
+    def accepting(self) -> bool:
+        with self._lock:
+            return self._accepting and not self._closing
+
+    def depth(self) -> int:
+        with self._lock:
+            return self._queue.depth()
+
+    def depth_of(self, capacity: int) -> int:
+        with self._lock:
+            return self._queue.depth_of(capacity)
+
+    def try_submit(self, handle: RequestHandle, force: bool = False) -> bool:
+        """Admit one routed handle. Returns False — so the router picks
+        another replica — when this one has died, is closing, or (unless
+        ``force``, the failover-requeue path: already-admitted requests
+        are never shed) its queue is at the bound."""
+        with self._lock:
+            if not self._accepting or self._closing:
+                return False
+            if not force and self._queue.is_full():
+                return False
+            self._queue.append(handle)
+            self._lock.notify()
+            return True
+
+    def swap_engine(self, new_engine: QuantizedEngine) -> float:
+        """Exchange the serving engine. Blocks until the in-flight flush
+        (if any) completes on the old engine; queued and future requests
+        run the new one. Returns seconds spent waiting + swapping. The
+        caller (the pool's rolling swap) is responsible for warming
+        ``new_engine`` first so post-swap traffic never compiles."""
+        t0 = time.monotonic()
+        with self._engine_lock:
+            self.engine = new_engine
+        return time.monotonic() - t0
+
+    def kill(self, mode: str = "drain") -> None:
+        """Inject a replica failure. ``mode="drain"``: stop before the
+        next flush — queued requests become orphans for the pool to
+        requeue. ``mode="in_flight"``: additionally fail the flush being
+        formed, so requests that were already popped out of the queue
+        (in flight) exercise the requeue path too."""
+        if mode not in ("drain", "in_flight"):
+            raise ValueError(f"unknown kill mode {mode!r}")
+        with self._lock:
+            self._fail_error = ReplicaFailed(
+                f"replica {self.replica_id} killed ({mode})")
+            if mode == "in_flight":
+                self._fail_next_flush = True
+            else:
+                self._accepting = False
+            self._lock.notify()
+
+    def begin_close(self) -> None:
+        """Phase 1 of shutdown: stop admitting, let the worker drain."""
+        with self._lock:
+            self._closing = True
+            self._lock.notify()
+
+    def join(self) -> None:
+        self._worker.join()
+
+    def close(self) -> None:
+        self.begin_close()
+        self.join()
+
+    # -- telemetry -----------------------------------------------------------
+
+    def records(self) -> List[FlushRecord]:
+        with self._lock:
+            return list(self._flushes)
+
+    def recent_service_s(self, k: int = 4) -> List[float]:
+        """Last k flushes' service times (cheap slice under the lock —
+        the pool's retry_after estimate polls this per shed request)."""
+        with self._lock:
+            return [f.service_s for f in self._flushes[-k:]]
+
+    def reset_records(self) -> None:
+        """Zero phase-local telemetry: flush records and the
+        completion/error counters (liveness state is untouched)."""
+        with self._lock:
+            self._flushes.clear()
+            self._n_completed = 0
+            self._n_errors = 0
+
+    def snapshot(self) -> Dict[str, object]:
+        """Heartbeat/health snapshot (stats.py style) for pool.stats()."""
+        now = time.monotonic()
+        with self._lock:
+            sizes = [f.n_requests for f in self._flushes]
+            return {
+                "replica_id": self.replica_id,
+                "device": str(self.engine.device) if self.engine.device
+                          is not None else "default",
+                "alive": self._accepting,
+                "artifact_version": self.engine.artifact_version,
+                "queue_depth": self._queue.depth(),
+                "n_completed": self._n_completed,
+                "n_errors": self._n_errors,
+                "n_flushes": len(self._flushes),
+                "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
+                "warmup_s": self.warmup_s,
+                "heartbeat_age_s": now - self._last_beat,
+            }
+
+    # -- worker side ---------------------------------------------------------
+
+    def _die(self, in_flight: List[RequestHandle],
+             error: BaseException) -> None:
+        """Stop serving and hand every unresolved handle to the pool.
+        Called from the worker thread with no locks held."""
+        with self._lock:
+            self._accepting = False
+            orphans = in_flight + self._queue.drain_all()
+        self._on_failure(self, orphans, error)
+
+    def _run(self):
+        try:
+            if self._do_warmup:
+                self.warmup_s = self.engine.warmup()
+        except BaseException as e:
+            self.ready.set()
+            self._die([], e)
+            return
+        with self._lock:
+            self._last_beat = time.monotonic()
+        self.ready.set()
+
+        while True:
+            in_flight: List[RequestHandle] = []
+            with self._lock:
+                while True:
+                    now = time.monotonic()
+                    if not self._accepting:          # killed (drain mode)
+                        err = self._fail_error or ReplicaFailed(
+                            f"replica {self.replica_id} failed")
+                        picked = None
+                        break
+                    depth = self._queue.depth()     # pre-pop, FlushRecord
+                    picked = self._queue.pick_flush(now,
+                                                    drain=self._closing)
+                    if picked is not None:
+                        break
+                    if self._closing and depth == 0:
+                        return
+                    ddl = self._queue.oldest_deadline()
+                    self._lock.wait(
+                        None if ddl is None else max(ddl - now, 0))
+                if picked is not None and self._fail_next_flush:
+                    # injected in-flight failure: these handles were
+                    # popped (in flight) when the replica died
+                    err = self._fail_error or ReplicaFailed(
+                        f"replica {self.replica_id} failed in flight")
+                    in_flight = picked[1]
+                    picked = None
+                    self._accepting = False
+            if picked is None:
+                self._die(in_flight, err)
+                return
+            cap, handles, reason = picked
+            wait_s = time.monotonic() - handles[0].t_submit
+            t0 = time.monotonic()
+            flush_error = None
+            with self._engine_lock:   # swap waits for the flush, not v.v.
+                engine = self.engine
+                try:
+                    results = engine.infer_batch([h.graph for h in handles])
+                except BaseException as e:
+                    flush_error = e
+            if flush_error is not None:
+                # resolve the error to this flush's handles (same as the
+                # single-engine scheduler) — requeueing a poison request
+                # would cascade-kill survivors. Only a run of erroring
+                # flushes means the replica itself is broken: then fail
+                # over the queued (never-attempted) work. All of this
+                # runs with no locks held (_die's contract).
+                for h in handles:
+                    h._resolve(error=flush_error,
+                               replica_id=self.replica_id)
+                with self._lock:
+                    self._n_errors += 1
+                    self._consecutive_errors += 1
+                    broken = (self._consecutive_errors
+                              >= self.MAX_CONSECUTIVE_ERRORS)
+                if broken:
+                    self._die([], flush_error)
+                    return
+                continue
+            service_s = time.monotonic() - t0
+            results = [dataclasses.replace(r, replica_id=self.replica_id)
+                       for r in results]
+            with self._lock:
+                self._n_completed += len(handles)
+                self._consecutive_errors = 0
+                self._last_beat = time.monotonic()
+                self._flushes.append(FlushRecord(
+                    capacity=cap, n_requests=len(handles), reason=reason,
+                    queue_depth=depth, wait_s=wait_s, service_s=service_s,
+                    path=results[0].path, batch_size=results[0].batch_size,
+                    replica_id=self.replica_id))
+            for h, r in zip(handles, results):
+                h._resolve(result=r, replica_id=self.replica_id)

@@ -26,6 +26,15 @@ dispatch stats instead of one-shot batch timing:
 
 `--save-artifact path.npz` packs the engine's quantized weights to disk;
 `--artifact path.npz` boots from one (skipping fp32 + quantization).
+
+Multi-replica cluster demo (`repro.cluster`, docs/cluster.md) — the
+same traffic fanned across N device-pinned engine replicas behind the
+shape-aware router, with an optional zero-downtime rolling weight swap
+mid-replay:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --workload so3 --server \
+      --replicas 4 --rate 60 --requests 300 [--swap-artifact v2.npz]
 """
 from __future__ import annotations
 
@@ -172,8 +181,13 @@ def run_so3(args) -> None:
 
 def run_so3_server(engine, args) -> None:
     """Online-serving demo: Poisson traffic through the dynamic
-    micro-batching scheduler (`repro.server`), latency percentiles and
-    dispatch stats — what `infer_batch` one-shot timing cannot show."""
+    micro-batching scheduler (`repro.server`) — or, with `--replicas`,
+    through the multi-replica cluster pool (`repro.cluster`, one engine
+    per JAX device) — latency percentiles and dispatch stats. With
+    `--swap-artifact` a zero-downtime rolling weight swap fires halfway
+    through the replay (docs/cluster.md)."""
+    import threading
+
     from repro.server import (MicroBatchScheduler, SchedulerConfig,
                               SizeClass, TrafficConfig, make_traffic,
                               run_open_loop)
@@ -190,20 +204,85 @@ def run_so3_server(engine, args) -> None:
         n_species=engine.model_cfg.n_species, density=args.density,
         seed=args.seed)
     traffic = make_traffic(cfg)
-    sched_cfg = SchedulerConfig(
-        max_batch=min(args.sched_batch, args.max_batch),
-        deadline_ms=args.deadline_ms)
+    max_batch = min(args.sched_batch, args.max_batch)
+
+    if args.replicas > 1 or args.swap_artifact:
+        from repro.cluster import ClusterConfig, ClusterPool
+        cluster = ClusterConfig(n_replicas=args.replicas,
+                                max_batch=max_batch,
+                                deadline_ms=args.deadline_ms,
+                                max_queue=args.max_queue)
+        pool = ClusterPool.from_quantized(
+            engine.model_cfg, engine.qparams, engine.serve, cluster,
+            fp32_nbytes=engine.memory_report()["fp32_bytes"],
+            artifact_version=engine.artifact_version)
+        swap_report = {}
+        swap_thread = None
+        with pool:
+            s0 = pool.stats()
+            print(f"cluster: {pool.n_replicas} replicas on "
+                  f"{[r['device'] for r in s0['replicas']]}, parallel "
+                  f"warmup {s0['warmup_s']:.2f}s")
+            pool.reset_stats()
+            if args.swap_artifact:
+                # fire the rolling swap halfway through the replay; a
+                # failure must surface after the replay, not vanish into
+                # the timer thread's excepthook
+                half = traffic[len(traffic) // 2][0]
+
+                def do_swap():
+                    try:
+                        swap_report.update(
+                            pool.swap_artifact(args.swap_artifact))
+                    except BaseException as e:
+                        swap_report["error"] = e
+                swap_thread = threading.Timer(half, do_swap)
+                swap_thread.start()
+            res = run_open_loop(pool, traffic, rate_rps=args.rate)
+            if swap_thread is not None:
+                # a rolling swap warms each replacement engine before the
+                # exchange, which can outlast a short replay — wait so the
+                # report is real and the pool isn't torn down under a
+                # thread that is mid-compilation
+                if not swap_report:
+                    print("replay done; waiting for the rolling swap to "
+                          "finish...")
+                swap_thread.join()
+            stats = pool.stats()
+        _print_server_summary(res, stats, args, max_batch)
+        print(f"routing: {stats['router']['routed_per_replica']} "
+              f"(shed {stats['n_shed']}, requeued "
+              f"{stats['router']['n_requeued']})")
+        if swap_report.get("error") is not None:
+            raise SystemExit(
+                f"hot swap FAILED: {swap_report['error']} (traffic was "
+                "unaffected — surviving weights kept serving)")
+        if swap_report:
+            pauses = [f"{r['pause_s'] * 1e3:.2f}ms"
+                      for r in swap_report["replicas"]]
+            print(f"hot swap -> {swap_report['version_tag']}: "
+                  f"per-replica serve pauses {pauses} "
+                  "(warmed before swap; zero requests dropped)")
+        return
+
+    sched_cfg = SchedulerConfig(max_batch=max_batch,
+                                deadline_ms=args.deadline_ms,
+                                max_queue=args.max_queue)
     with MicroBatchScheduler(engine, sched_cfg) as sched:
         print(f"warmup: {sched.warmup_s:.2f}s "
               f"({len(engine.compiled_shapes)} shape classes)")
         engine.reset_stats()    # keep the streaming phase unpolluted
         res = run_open_loop(sched, traffic, rate_rps=args.rate)
         stats = sched.stats()
+    _print_server_summary(res, stats, args, max_batch)
+
+
+def _print_server_summary(res, stats, args, max_batch) -> None:
     s = res.summary()
     print(f"open loop: {args.requests} requests at {args.rate:.1f} req/s "
           f"offered ({args.min_atoms}-{args.max_atoms} atoms, "
           f"deadline {args.deadline_ms:.0f} ms, "
-          f"micro-batch <= {sched_cfg.max_batch})")
+          f"micro-batch <= {max_batch})")
     print(f"latency: p50 {s['p50_ms']:.1f} ms  p95 {s['p95_ms']:.1f} ms  "
           f"p99 {s['p99_ms']:.1f} ms  max {s['max_ms']:.1f} ms")
     print(f"throughput: {s['throughput_rps']:.1f} req/s over "
@@ -265,6 +344,18 @@ def main():
                     help="micro-batching deadline (--server)")
     ap.add_argument("--sched-batch", type=int, default=8,
                     help="scheduler micro-batch flush size (--server)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a repro.cluster pool of this many "
+                         "engine replicas, one per JAX device (--server; "
+                         "on CPU simulate devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: shed requests beyond this "
+                         "many queued per scheduler/replica (--server)")
+    ap.add_argument("--swap-artifact",
+                    help="rolling zero-downtime weight swap to this "
+                         "packed artifact halfway through the --server "
+                         "replay (implies the cluster path)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifact",
                     help="cold-start the engine from a packed quantized "

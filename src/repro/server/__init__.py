@@ -27,19 +27,25 @@ and writes ``BENCH_server.json``.
 """
 from repro.server.artifact import (ARTIFACT_MAGIC, ARTIFACT_VERSION,
                                    ArtifactError, LoadedArtifact,
-                                   load_artifact, load_engine, save_artifact)
-from repro.server.scheduler import (MicroBatchScheduler, RequestHandle,
-                                    SchedulerConfig)
+                                   ensure_mode_matches, load_artifact,
+                                   load_engine, save_artifact)
+from repro.server.scheduler import (BatchQueue, MicroBatchScheduler,
+                                    RequestHandle, SchedulerClosed,
+                                    SchedulerConfig, SchedulerOverloaded)
 from repro.server.stats import FlushRecord, flush_summary, latency_summary
-from repro.server.traffic import (SizeClass, TrafficConfig, TrafficResult,
+from repro.server.traffic import (RateStage, SizeClass, TrafficConfig,
+                                  TrafficResult, calibrate_service_time,
+                                  draw_graphs, make_step_traffic,
                                   make_traffic, run_closed_loop,
-                                  run_open_loop)
+                                  run_open_loop, stage_summaries)
 
 __all__ = [
     "ARTIFACT_MAGIC", "ARTIFACT_VERSION", "ArtifactError", "LoadedArtifact",
-    "load_artifact", "load_engine", "save_artifact",
-    "MicroBatchScheduler", "RequestHandle", "SchedulerConfig",
+    "ensure_mode_matches", "load_artifact", "load_engine", "save_artifact",
+    "BatchQueue", "MicroBatchScheduler", "RequestHandle", "SchedulerClosed",
+    "SchedulerConfig", "SchedulerOverloaded",
     "FlushRecord", "flush_summary", "latency_summary",
-    "SizeClass", "TrafficConfig", "TrafficResult", "make_traffic",
-    "run_closed_loop", "run_open_loop",
+    "RateStage", "SizeClass", "TrafficConfig", "TrafficResult",
+    "calibrate_service_time", "draw_graphs", "make_step_traffic",
+    "make_traffic", "run_closed_loop", "run_open_loop", "stage_summaries",
 ]

@@ -52,7 +52,8 @@ from repro.serving.engine import QuantizedEngine, ServeConfig
 from repro.serving.qparams import QTensor, QuantizedParams, serving_bytes
 
 __all__ = ["ArtifactError", "ARTIFACT_MAGIC", "ARTIFACT_VERSION",
-           "save_artifact", "load_artifact", "load_engine", "LoadedArtifact"]
+           "save_artifact", "load_artifact", "load_engine", "LoadedArtifact",
+           "ensure_mode_matches"]
 
 ARTIFACT_MAGIC = "repro-quantized-so3-artifact"
 ARTIFACT_VERSION = 1
@@ -61,6 +62,19 @@ ARTIFACT_VERSION = 1
 class ArtifactError(RuntimeError):
     """A packed artifact could not be read: truncated/corrupt file,
     checksum mismatch, or a format version this code does not speak."""
+
+
+def ensure_mode_matches(artifact_mode: str, serve_mode: str) -> None:
+    """The single mode-compatibility rule for packed weights: an
+    artifact's payloads *are* its quantization mode, so a serving
+    config may override any other knob but never ``mode``. Shared by
+    ``load_engine`` and the cluster's ``from_artifact``/``swap_artifact``
+    so the rule (and its error) cannot drift between entry points."""
+    if serve_mode != artifact_mode:
+        raise ArtifactError(
+            f"ServeConfig.mode {serve_mode!r} != artifact mode "
+            f"{artifact_mode!r}: packed weights cannot change mode — "
+            "re-export from the fp32 checkpoint instead")
 
 
 def _sha256(arr: np.ndarray) -> str:
@@ -75,10 +89,27 @@ class LoadedArtifact:
     serve: ServeConfig
     fp32_bytes: int          # footprint of the fp32 tree this came from
     file_bytes: int          # size of the artifact on disk
+    # short content tag over the per-leaf SHA-256s: two artifacts carry
+    # the same tag iff their weight payloads are byte-identical. The
+    # cluster stamps this into every result during rolling hot swaps
+    # (MoleculeResult.artifact_version), so clients can tell which
+    # weights answered.
+    version_tag: str = ""
 
     @property
     def compression_x(self) -> float:
         return self.fp32_bytes / max(self.file_bytes, 1)
+
+
+def _version_tag(leaves: Dict[str, dict]) -> str:
+    """Deterministic content tag: SHA-256 over the sorted per-leaf
+    digests (weights only — retagging does not depend on configs or
+    file layout), truncated for log-friendliness."""
+    h = hashlib.sha256()
+    for name in sorted(leaves):
+        h.update(name.encode("utf-8"))
+        h.update(leaves[name]["sha256"].encode("ascii"))
+    return h.hexdigest()[:12]
 
 
 def save_artifact(path: str, engine: QuantizedEngine) -> int:
@@ -200,23 +231,24 @@ def load_artifact(path: str) -> LoadedArtifact:
     serve = _dataclass_from(ServeConfig, manifest["serve_cfg"])
     return LoadedArtifact(qparams=qparams, model_cfg=model_cfg, serve=serve,
                           fp32_bytes=int(manifest["fp32_bytes"]),
-                          file_bytes=file_bytes)
+                          file_bytes=file_bytes,
+                          version_tag=_version_tag(manifest["leaves"]))
 
 
-def load_engine(path: str,
-                serve: Optional[ServeConfig] = None) -> QuantizedEngine:
+def load_engine(path: str, serve: Optional[ServeConfig] = None,
+                device=None) -> QuantizedEngine:
     """Cold-start an engine from a packed artifact: deserialize and build
     — no fp32 materialization, no quantization pass. ``serve`` overrides
     the artifact's serving knobs (bucket ladder, path, max_batch), but
     its ``mode`` must match the artifact's — the packed weights *are*
-    that mode."""
+    that mode. ``device`` pins the engine to one JAX device (the
+    cluster's per-replica path; see ``QuantizedEngine``)."""
     art = load_artifact(path)
     if serve is None:
         serve = art.serve
-    elif serve.mode != art.serve.mode:
-        raise ArtifactError(
-            f"ServeConfig.mode {serve.mode!r} != artifact mode "
-            f"{art.serve.mode!r}: packed weights cannot change mode — "
-            "re-export from the fp32 checkpoint instead")
+    else:
+        ensure_mode_matches(art.serve.mode, serve.mode)
     return QuantizedEngine.from_quantized(art.model_cfg, art.qparams, serve,
-                                          fp32_nbytes=art.fp32_bytes)
+                                          fp32_nbytes=art.fp32_bytes,
+                                          device=device,
+                                          artifact_version=art.version_tag)

@@ -3,8 +3,21 @@
 ``QuantizedEngine.infer_batch`` is synchronous: the caller supplies a
 whole batch and waits. Online traffic doesn't look like that — requests
 arrive one at a time, and the serving system must *form* batches under a
-latency budget. ``MicroBatchScheduler`` does exactly that, on top of the
-engine's existing bucket ladder:
+latency budget. This module holds the two pieces that do it:
+
+* :class:`BatchQueue` — the pure **queueing/flush policy**, with no
+  thread and no engine: per-shape-class admission queues over the
+  engine's bucket ladder, the two flush triggers (full / deadline), the
+  anti-starvation flush ordering, and drain. It is deliberately
+  standalone so the same policy drives both the single-engine
+  :class:`MicroBatchScheduler` below and every replica of the
+  multi-engine cluster (``repro.cluster`` — a cluster replica is this
+  policy plus its own worker thread and device-pinned engine; the
+  single-engine scheduler is the ``n_replicas=1`` degenerate case).
+* :class:`MicroBatchScheduler` — one worker thread owning one engine,
+  fed by one :class:`BatchQueue`.
+
+Policy semantics:
 
 * **per-shape-class admission queues** — each arriving molecule is
   assigned its bucket (same ``assign_bucket`` as ``infer_batch``) and
@@ -17,6 +30,11 @@ engine's existing bucket ladder:
   degenerates to per-request serving — the benchmark baseline (with
   ``max_batch > 1`` a zero deadline still flushes whatever queued
   during the previous dispatch as one batch);
+* **bounded admission** — with ``max_queue`` set, ``submit`` sheds load
+  with :class:`SchedulerOverloaded` (carrying a ``retry_after_s`` hint)
+  instead of letting the queue grow without bound; ``submit`` after
+  ``close()`` raises :class:`SchedulerClosed` — a request is either
+  admitted (and will resolve) or refused loudly, never silently hung;
 * **request -> result identity** — ``submit`` returns a
   :class:`RequestHandle`; flushes from different buckets complete out of
   submission order, but each handle resolves to exactly its own
@@ -29,8 +47,8 @@ engine's existing bucket ladder:
 
 One worker thread owns the engine (JAX dispatch is serialized anyway on
 a single device; batching, not thread parallelism, is where the
-throughput comes from). ``submit`` is thread-safe and cheap: it appends
-to a queue and signals the worker.
+throughput comes from — until the cluster adds devices). ``submit`` is
+thread-safe and cheap: it appends to a queue and signals the worker.
 """
 from __future__ import annotations
 
@@ -38,13 +56,30 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.serving.bucketing import Graph, assign_bucket
+from repro.serving.bucketing import BucketSpec, Graph, assign_bucket
 from repro.serving.engine import QuantizedEngine, MoleculeResult
 from repro.server.stats import FlushRecord, flush_summary
 
-__all__ = ["SchedulerConfig", "RequestHandle", "MicroBatchScheduler"]
+__all__ = ["SchedulerConfig", "SchedulerClosed", "SchedulerOverloaded",
+           "RequestHandle", "BatchQueue", "MicroBatchScheduler"]
+
+
+class SchedulerClosed(RuntimeError):
+    """``submit`` was called on a closed scheduler (or a dead cluster
+    replica): the request was NOT admitted and no handle exists — callers
+    must not wait on anything. Raised instead of silently hanging."""
+
+
+class SchedulerOverloaded(RuntimeError):
+    """Bounded admission refused a request: every eligible queue is at
+    ``max_queue``. ``retry_after_s`` is a hint — roughly how long the
+    backlog needs to drain one batch — for client backoff."""
+
+    def __init__(self, msg: str, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,25 +89,41 @@ class SchedulerConfig:
     max_batch: int = 8        # flush a queue at this many requests
     deadline_ms: float = 20.0  # max batching wait for the oldest request
     warmup: bool = True       # pre-compile all shapes before serving
+    # bounded admission: total queued requests before submit sheds with
+    # SchedulerOverloaded (None = unbounded, the pre-cluster behavior)
+    max_queue: Optional[int] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.deadline_ms < 0:
             raise ValueError("deadline_ms must be >= 0")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
 
 
 class RequestHandle:
     """A pending request's future. ``result()`` blocks until the flush
     containing this molecule completes, then returns its
-    :class:`MoleculeResult` (or re-raises the engine's exception)."""
+    :class:`MoleculeResult` (or re-raises the engine's exception).
 
-    __slots__ = ("graph", "t_submit", "t_done", "_event", "_result", "_error")
+    ``replica_id`` is set when the request resolves (0 for the
+    single-engine scheduler; the serving replica's id in a cluster —
+    after failover this is the survivor that actually completed it).
+    ``n_requeues`` counts cluster failover requeues (0 outside clusters).
+    """
 
-    def __init__(self, graph: Graph, t_submit: float):
+    __slots__ = ("graph", "t_submit", "t_done", "bucket_capacity",
+                 "replica_id", "n_requeues", "_event", "_result", "_error")
+
+    def __init__(self, graph: Graph, t_submit: float,
+                 bucket_capacity: int = 0):
         self.graph = graph
         self.t_submit = t_submit
         self.t_done: Optional[float] = None
+        self.bucket_capacity = bucket_capacity
+        self.replica_id: Optional[int] = None
+        self.n_requeues = 0
         self._event = threading.Event()
         self._result: Optional[MoleculeResult] = None
         self._error: Optional[BaseException] = None
@@ -95,101 +146,55 @@ class RequestHandle:
             raise RuntimeError("request not completed")
         return self.t_done - self.t_submit
 
-    def _resolve(self, result=None, error=None):
+    def _resolve(self, result=None, error=None, replica_id=None):
         self._result, self._error = result, error
+        if replica_id is not None:
+            self.replica_id = replica_id
         self.t_done = time.monotonic()
         self._event.set()
 
 
-class MicroBatchScheduler:
-    """Online request scheduler over a :class:`QuantizedEngine`.
+class BatchQueue:
+    """Per-shape-class admission queues + the flush policy, with no
+    thread of its own.
 
-    Use as a context manager (or call ``close()``), so the worker thread
-    drains and exits::
-
-        with MicroBatchScheduler(engine, SchedulerConfig()) as sched:
-            handles = [sched.submit(g) for g in graphs]
-            results = [h.result() for h in handles]
+    This is the piece shared between the single-engine
+    :class:`MicroBatchScheduler` and every cluster replica
+    (``repro.cluster.replica``): both own one ``BatchQueue``, hold their
+    own lock around every call (nothing here is synchronized), and run
+    the identical policy — what queues exist, when one flushes, which
+    flushes first, and what draining means.
     """
 
-    def __init__(self, engine: QuantizedEngine,
-                 config: SchedulerConfig = SchedulerConfig()):
-        self.engine = engine
+    def __init__(self, buckets: List[BucketSpec], config: SchedulerConfig):
         self.config = config
-        if config.max_batch > engine.serve.max_batch:
-            raise ValueError(
-                f"SchedulerConfig.max_batch {config.max_batch} exceeds "
-                f"ServeConfig.max_batch {engine.serve.max_batch}: flushes "
-                "must fit one engine batch")
-        self._buckets = engine.serve.buckets()
+        self._buckets = list(buckets)
         self._queues: Dict[int, Deque[RequestHandle]] = {
             b.capacity: deque() for b in self._buckets}
-        self._lock = threading.Condition()
-        self._open = True
-        self._flushes: List[FlushRecord] = []
-        self._n_submitted = 0
-        self._n_completed = 0
-        self.warmup_s = engine.warmup() if config.warmup else 0.0
-        self._worker = threading.Thread(
-            target=self._serve_loop, name="microbatch-scheduler", daemon=True)
-        self._worker.start()
 
-    # -- client side --------------------------------------------------------
+    def bucket_of(self, graph: Graph) -> BucketSpec:
+        """Shape class a graph will be queued (and dispatched) under.
+        Raises like ``infer_batch`` for molecules off the ladder."""
+        return assign_bucket(graph.n_atoms, self._buckets)
 
-    def submit(self, graph: Graph) -> RequestHandle:
-        """Admit one molecule. Raises like ``infer_batch`` for molecules
-        larger than the bucket ladder; raises RuntimeError after
-        ``close()``."""
-        spec = assign_bucket(graph.n_atoms, self._buckets)
-        handle = RequestHandle(graph, time.monotonic())
-        with self._lock:
-            if not self._open:
-                raise RuntimeError("scheduler is closed")
-            self._queues[spec.capacity].append(handle)
-            self._n_submitted += 1
-            self._lock.notify()
-        return handle
+    def append(self, handle: RequestHandle) -> None:
+        """Admit one handle to its shape class's queue. The handle's
+        ``bucket_capacity`` must already be set (``bucket_of``)."""
+        self._queues[handle.bucket_capacity].append(handle)
 
-    def close(self):
-        """Stop admitting, drain every queue, join the worker."""
-        with self._lock:
-            if not self._open:
-                return
-            self._open = False
-            self._lock.notify()
-        self._worker.join()
+    def depth(self) -> int:
+        return sum(len(q) for q in self._queues.values())
 
-    def __enter__(self) -> "MicroBatchScheduler":
-        return self
+    def depth_of(self, capacity: int) -> int:
+        return len(self._queues[capacity])
 
-    def __exit__(self, *exc):
-        self.close()
+    def is_full(self) -> bool:
+        mq = self.config.max_queue
+        return mq is not None and self.depth() >= mq
 
-    # -- telemetry ----------------------------------------------------------
-
-    def queue_depth(self) -> int:
-        with self._lock:
-            return sum(len(q) for q in self._queues.values())
-
-    def stats(self) -> Dict[str, object]:
-        """Flush telemetry (batch-size distribution = achieved bucket
-        occupancy, flush reasons, queue depths) + request counters and
-        the engine's dispatch counters."""
-        with self._lock:
-            flushes = list(self._flushes)
-            out = {"n_submitted": self._n_submitted,
-                   "n_completed": self._n_completed,
-                   "warmup_s": self.warmup_s}
-        out.update(flush_summary(flushes))
-        out["engine_dispatch"] = self.engine.stats_snapshot()
-        return out
-
-    # -- worker side --------------------------------------------------------
-
-    def _oldest_deadline(self) -> Optional[float]:
+    def oldest_deadline(self) -> Optional[float]:
         """Monotonic time at which the oldest queued request's batching
-        budget expires (None when all queues are empty). Caller holds
-        the lock."""
+        budget expires (None when all queues are empty)."""
         t = None
         for q in self._queues.values():
             if q:
@@ -197,13 +202,15 @@ class MicroBatchScheduler:
                 t = cand if t is None else min(t, cand)
         return t
 
-    def _pick_flush(self, now: float, drain: bool):
+    def pick_flush(self, now: float, drain: bool
+                   ) -> Optional[Tuple[int, List[RequestHandle], str]]:
         """Choose (capacity, handles, reason) for the next flush, or None
-        when no trigger has fired. Caller holds the lock. Among all
-        *triggered* queues (full, or head's deadline expired) the one
-        whose head request is oldest goes first — a bucket whose queue
-        refills to max_batch faster than flushes complete must not
-        starve deadline-expired requests in other buckets."""
+        when no trigger has fired. Among all *triggered* queues (full, or
+        head's deadline expired) the one whose head request is oldest
+        goes first — a bucket whose queue refills to max_batch faster
+        than flushes complete must not starve deadline-expired requests
+        in other buckets. With ``drain`` the oldest non-empty queue
+        flushes unconditionally (close()/failover teardown)."""
         best = None          # (head_t_submit, cap, reason)
         oldest = None        # (head_t_submit, cap) over non-empty queues
         deadline_s = self.config.deadline_ms * 1e-3
@@ -233,18 +240,132 @@ class MicroBatchScheduler:
         return [q.popleft() for _ in range(min(len(q),
                                                self.config.max_batch))]
 
+    def drain_all(self) -> List[RequestHandle]:
+        """Remove and return every queued handle (failover: the pool
+        requeues them onto surviving replicas)."""
+        out: List[RequestHandle] = []
+        for q in self._queues.values():
+            out.extend(q)
+            q.clear()
+        return out
+
+
+class MicroBatchScheduler:
+    """Online request scheduler over a :class:`QuantizedEngine`.
+
+    Use as a context manager (or call ``close()``), so the worker thread
+    drains and exits::
+
+        with MicroBatchScheduler(engine, SchedulerConfig()) as sched:
+            handles = [sched.submit(g) for g in graphs]
+            results = [h.result() for h in handles]
+    """
+
+    def __init__(self, engine: QuantizedEngine,
+                 config: SchedulerConfig = SchedulerConfig()):
+        self.engine = engine
+        self.config = config
+        if config.max_batch > engine.serve.max_batch:
+            raise ValueError(
+                f"SchedulerConfig.max_batch {config.max_batch} exceeds "
+                f"ServeConfig.max_batch {engine.serve.max_batch}: flushes "
+                "must fit one engine batch")
+        self._queue = BatchQueue(engine.serve.buckets(), config)
+        self._lock = threading.Condition()
+        self._open = True
+        self._flushes: List[FlushRecord] = []
+        self._n_submitted = 0
+        self._n_completed = 0
+        self._n_shed = 0
+        self._service_ema: Optional[float] = None
+        self.warmup_s = engine.warmup() if config.warmup else 0.0
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="microbatch-scheduler", daemon=True)
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, graph: Graph) -> RequestHandle:
+        """Admit one molecule. Raises like ``infer_batch`` for molecules
+        larger than the bucket ladder; :class:`SchedulerClosed` after
+        ``close()``; :class:`SchedulerOverloaded` when bounded admission
+        (``max_queue``) sheds the request."""
+        handle = RequestHandle(graph, time.monotonic())
+        with self._lock:
+            # bucket assignment under the lock keeps oversize rejection
+            # ordered with close(); it is a few comparisons, not work
+            handle.bucket_capacity = self._queue.bucket_of(graph).capacity
+            if not self._open:
+                raise SchedulerClosed(
+                    "scheduler is closed: request not admitted")
+            if self._queue.is_full():
+                self._n_shed += 1
+                retry = self._retry_after_locked()
+                raise SchedulerOverloaded(
+                    f"admission queue at max_queue="
+                    f"{self.config.max_queue}: request shed "
+                    f"(retry in ~{retry:.3f}s)", retry)
+            self._queue.append(handle)
+            self._n_submitted += 1
+            self._lock.notify()
+        return handle
+
+    def _retry_after_locked(self) -> float:
+        """Backoff hint: roughly one flush's service time, or the
+        batching deadline when nothing has been served yet."""
+        if self._service_ema is not None:
+            return self._service_ema
+        return max(self.config.deadline_ms * 1e-3, 0.01)
+
+    def close(self):
+        """Stop admitting, drain every queue, join the worker."""
+        with self._lock:
+            if not self._open:
+                return
+            self._open = False
+            self._lock.notify()
+        self._worker.join()
+
+    def __enter__(self) -> "MicroBatchScheduler":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- telemetry ----------------------------------------------------------
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._queue.depth()
+
+    def stats(self) -> Dict[str, object]:
+        """Flush telemetry (batch-size distribution = achieved bucket
+        occupancy, flush reasons, queue depths) + request counters and
+        the engine's dispatch counters."""
+        with self._lock:
+            flushes = list(self._flushes)
+            out = {"n_submitted": self._n_submitted,
+                   "n_completed": self._n_completed,
+                   "n_shed": self._n_shed,
+                   "warmup_s": self.warmup_s}
+        out.update(flush_summary(flushes))
+        out["engine_dispatch"] = self.engine.stats_snapshot()
+        return out
+
+    # -- worker side --------------------------------------------------------
+
     def _serve_loop(self):
         while True:
             with self._lock:
                 while True:
                     now = time.monotonic()
-                    depth = sum(len(q) for q in self._queues.values())
-                    picked = self._pick_flush(now, drain=not self._open)
+                    depth = self._queue.depth()
+                    picked = self._queue.pick_flush(now, drain=not self._open)
                     if picked is not None:
                         break
                     if not self._open and depth == 0:
                         return
-                    deadline = self._oldest_deadline()
+                    deadline = self._queue.oldest_deadline()
                     self._lock.wait(
                         None if deadline is None else max(deadline - now, 0))
                 cap, handles, reason = picked
@@ -256,16 +377,20 @@ class MicroBatchScheduler:
                     [h.graph for h in handles])
             except BaseException as e:  # propagate to every waiting client
                 for h in handles:
-                    h._resolve(error=e)
+                    h._resolve(error=e, replica_id=0)
                 continue
             service_s = time.monotonic() - t0
             # bookkeeping strictly before resolving: a client returning
             # from result() must already see this flush in stats()
             with self._lock:
                 self._n_completed += len(handles)
+                self._service_ema = (service_s if self._service_ema is None
+                                     else 0.8 * self._service_ema
+                                     + 0.2 * service_s)
                 self._flushes.append(FlushRecord(
                     capacity=cap, n_requests=len(handles), reason=reason,
                     queue_depth=depth, wait_s=wait_s, service_s=service_s,
-                    path=results[0].path))
+                    path=results[0].path, batch_size=results[0].batch_size,
+                    replica_id=0))
             for h, r in zip(handles, results):
-                h._resolve(result=r)
+                h._resolve(result=r, replica_id=0)

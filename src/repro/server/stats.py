@@ -42,7 +42,7 @@ def latency_summary(latencies_s: Sequence[float],
 
 @dataclasses.dataclass(frozen=True)
 class FlushRecord:
-    """One scheduler flush: which shape class ran and why."""
+    """One scheduler flush: which shape class ran, where, and why."""
     capacity: int        # bucket the flushed queue belongs to
     n_requests: int      # real molecules in the flush
     reason: str          # "full" | "deadline" | "drain"
@@ -50,20 +50,26 @@ class FlushRecord:
     wait_s: float        # oldest request's queue residence at flush time
     service_s: float     # infer_batch wall clock for the flush
     path: str            # execution path the batch took (dense/sparse)
+    batch_size: int = 0  # compiled batch rows (incl. alignment dummies)
+    replica_id: int = 0  # replica that served the flush (0: single engine)
 
 
 def flush_summary(flushes: Sequence[FlushRecord]) -> Dict[str, object]:
     """Aggregate flush telemetry: batch-size distribution (the bucket
-    occupancy dynamic batching achieved), flush reasons, queue depths."""
+    occupancy dynamic batching achieved), flush reasons, queue depths,
+    and the per-replica breakdown that verifies cluster routing balance
+    (degenerate single-replica schedulers report one entry for id 0)."""
     if not flushes:
         return {"n_flushes": 0}
     sizes = np.asarray([f.n_requests for f in flushes], np.float64)
     depths = np.asarray([f.queue_depth for f in flushes], np.float64)
     reasons: Dict[str, int] = {}
     per_bucket: Dict[int, List[int]] = {}
+    per_replica: Dict[int, List[FlushRecord]] = {}
     for f in flushes:
         reasons[f.reason] = reasons.get(f.reason, 0) + 1
         per_bucket.setdefault(f.capacity, []).append(f.n_requests)
+        per_replica.setdefault(f.replica_id, []).append(f)
     return {
         "n_flushes": len(flushes),
         "mean_batch": float(sizes.mean()),
@@ -74,4 +80,10 @@ def flush_summary(flushes: Sequence[FlushRecord]) -> Dict[str, object]:
         "mean_batch_per_bucket": {
             str(cap): float(np.mean(v)) for cap, v in sorted(
                 per_bucket.items())},
+        "per_replica": {
+            str(rid): {
+                "n_flushes": len(fs),
+                "n_requests": int(sum(f.n_requests for f in fs)),
+                "mean_batch": float(np.mean([f.n_requests for f in fs])),
+            } for rid, fs in sorted(per_replica.items())},
     }

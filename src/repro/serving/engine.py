@@ -105,8 +105,15 @@ class MoleculeResult:
     forces: np.ndarray       # (n_atoms, 3)
     n_atoms: int
     bucket_capacity: int     # shape class the molecule rode in
-    batch_size: int
+    batch_size: int          # compiled batch rows (incl. alignment dummies)
     path: str = "dense"      # execution path the molecule's batch took
+    # which cluster replica served the batch (0 outside a cluster; set
+    # by repro.cluster's replica worker, not by the engine itself)
+    replica_id: int = 0
+    # content tag of the packed artifact the serving weights came from
+    # ("" for engines built straight from fp32 params) — lets a client
+    # verify which weights answered during a rolling hot swap
+    artifact_version: str = ""
 
 
 class QuantizedEngine:
@@ -114,17 +121,30 @@ class QuantizedEngine:
 
     def __init__(self, model_cfg: so3.So3kratesConfig,
                  params: Optional[Dict[str, jnp.ndarray]], serve: ServeConfig,
-                 *, qparams=None, fp32_nbytes: Optional[int] = None):
+                 *, qparams=None, fp32_nbytes: Optional[int] = None,
+                 device: Optional[jax.Device] = None,
+                 artifact_version: str = ""):
         """Build from fp32 ``params`` (quantized here, the training->serving
         hand-off) or directly from serving-format ``qparams`` (the packed-
         artifact cold-start path, ``repro.server.artifact`` — no fp32 tree
         is ever materialized). Exactly one of the two must be given;
         ``fp32_nbytes`` carries the fp32 footprint for ``memory_report``
-        when no fp32 tree exists."""
+        when no fp32 tree exists.
+
+        ``device`` pins the engine to one JAX device: weights, codebook,
+        and every batch are committed there, so the jitted forwards
+        compile and execute on it — this is how ``repro.cluster`` stands
+        up one engine per device (simulated on CPU via
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). None
+        keeps the default-device behavior. ``artifact_version`` is the
+        content tag of the packed artifact the weights came from, echoed
+        into every :class:`MoleculeResult`."""
         if (params is None) == (qparams is None):
             raise ValueError("pass exactly one of params / qparams")
         self.model_cfg = model_cfg
         self.serve = serve
+        self.device = device
+        self.artifact_version = artifact_version
         if qparams is None:
             self._fp32_bytes = fp32_bytes(params)  # fp32 tree is not retained
             self.qparams = quantize_so3_params(params, serve.mode)
@@ -132,8 +152,15 @@ class QuantizedEngine:
             self._fp32_bytes = (fp32_nbytes if fp32_nbytes is not None
                                 else serving_fp32_equiv(qparams))
             self.qparams = qparams
+        # committed placement: with a device given, weights/codebook move
+        # there once and inputs follow per batch (_put), so jit compiles
+        # for exactly that device
+        self._put = ((lambda x: jax.device_put(x, device))
+                     if device is not None else jnp.asarray)
+        if device is not None:
+            self.qparams = jax.device_put(self.qparams, device)
         quant_vec = serve.vectors_quantized
-        self._codebook = (make_codebook(model_cfg.dir_bits)
+        self._codebook = (self._put(make_codebook(model_cfg.dir_bits))
                           if quant_vec else None)
         self._buckets = serve.buckets()
         use_kernels = serve.mode != "fp32"
@@ -166,24 +193,29 @@ class QuantizedEngine:
     def from_config(cls, model_cfg: so3.So3kratesConfig,
                     params: Optional[Dict[str, jnp.ndarray]] = None,
                     serve: ServeConfig = ServeConfig(),
-                    seed: int = 0) -> "QuantizedEngine":
+                    seed: int = 0,
+                    device: Optional[jax.Device] = None) -> "QuantizedEngine":
         """Build an engine from a model config and (optionally) trained
         fp32 params; random init when params is None (benchmarks, smoke)."""
         if params is None:
             params = so3.init_params(jax.random.PRNGKey(seed), model_cfg)
-        return cls(model_cfg, params, serve)
+        return cls(model_cfg, params, serve, device=device)
 
     @classmethod
     def from_quantized(cls, model_cfg: so3.So3kratesConfig, qparams,
                        serve: ServeConfig,
-                       fp32_nbytes: Optional[int] = None) -> "QuantizedEngine":
+                       fp32_nbytes: Optional[int] = None,
+                       device: Optional[jax.Device] = None,
+                       artifact_version: str = "") -> "QuantizedEngine":
         """Build an engine from already-serving-format parameters — the
-        packed-artifact cold-start path (``repro.server.artifact``): no
-        fp32 materialization, no quantization pass. ``qparams`` must have
+        packed-artifact cold-start path (``repro.server.artifact``) and
+        the per-replica construction path of ``repro.cluster``: no fp32
+        materialization, no quantization pass. ``qparams`` must have
         been produced by ``quantize_so3_params(params, serve.mode)`` (or
         loaded from an artifact saved from such an engine)."""
         return cls(model_cfg, None, serve, qparams=qparams,
-                   fp32_nbytes=fp32_nbytes)
+                   fp32_nbytes=fp32_nbytes, device=device,
+                   artifact_version=artifact_version)
 
     # -- introspection ------------------------------------------------------
 
@@ -258,16 +290,16 @@ class QuantizedEngine:
 
     def _run_dense(self, species, coords, mask):
         self.compiled_shapes.add(species.shape)
-        return self._forward_dense(jnp.asarray(species), jnp.asarray(coords),
-                                   jnp.asarray(mask))
+        return self._forward_dense(self._put(species), self._put(coords),
+                                   self._put(mask))
 
     def _run_sparse(self, species, coords, mask, el):
         self.compiled_shapes.add(("sparse",) + species.shape
                                  + (el.edge_capacity,))
         return self._forward_sparse(
-            jnp.asarray(species), jnp.asarray(coords), jnp.asarray(mask),
-            jnp.asarray(el.senders), jnp.asarray(el.receivers),
-            jnp.asarray(el.edge_mask))
+            self._put(species), self._put(coords), self._put(mask),
+            self._put(el.senders), self._put(el.receivers),
+            self._put(el.edge_mask))
 
     # "auto" dispatches sparse only when the dense pairwise work is at
     # least this many times the padded edge-slot count — the gather /
@@ -324,7 +356,8 @@ class QuantizedEngine:
                 results[gi] = MoleculeResult(
                     energy=float(e[row]), forces=f[row, :n],
                     n_atoms=n, bucket_capacity=plan.bucket.capacity,
-                    batch_size=plan.batch_size, path=path)
+                    batch_size=plan.batch_size, path=path,
+                    artifact_version=self.artifact_version)
         return results  # type: ignore[return-value]
 
     # -- MD bridge ----------------------------------------------------------

@@ -28,10 +28,12 @@ import pytest
 from repro.models import so3krates as so3
 from repro.serving import Graph, QuantizedEngine, ServeConfig
 from repro.server import (ARTIFACT_VERSION, ArtifactError,
-                          MicroBatchScheduler, SchedulerConfig, SizeClass,
+                          MicroBatchScheduler, RateStage, SchedulerClosed,
+                          SchedulerConfig, SchedulerOverloaded, SizeClass,
                           TrafficConfig, flush_summary, latency_summary,
-                          load_artifact, load_engine, make_traffic,
-                          run_closed_loop, run_open_loop, save_artifact)
+                          load_artifact, load_engine, make_step_traffic,
+                          make_traffic, run_closed_loop, run_open_loop,
+                          save_artifact, stage_summaries)
 
 CFG = so3.So3kratesConfig(feat=32, vec_feat=8, n_layers=2, n_rbf=8,
                           dir_bits=6, cutoff=3.0)
@@ -147,7 +149,9 @@ class TestSchedulerBatching:
 
     def test_close_drains_pending_requests(self, engine):
         """close() completes everything already admitted, then rejects
-        new submissions."""
+        new submissions with the typed SchedulerClosed error — a request
+        is admitted (and resolves) or refused loudly, never left hanging
+        on a handle no worker will ever serve."""
         graphs = _graphs([8, 14, 22], seed=8)
         cfg = SchedulerConfig(max_batch=8, deadline_ms=60_000.0,
                               warmup=False)
@@ -157,32 +161,54 @@ class TestSchedulerBatching:
         for h in handles:
             assert h.done()
             assert np.isfinite(h.result().energy)
-        with pytest.raises(RuntimeError, match="closed"):
+        with pytest.raises(SchedulerClosed, match="closed"):
             sched.submit(graphs[0])
+        # SchedulerClosed subclasses RuntimeError (pre-existing callers)
+        assert issubclass(SchedulerClosed, RuntimeError)
+
+    def test_bounded_admission_sheds_with_retry_hint(self, engine):
+        """With max_queue set, submit beyond the bound sheds with
+        SchedulerOverloaded + retry_after_s instead of growing the queue
+        without bound; already-admitted requests still complete."""
+        graphs = _graphs([10, 11, 12], seed=30)
+        cfg = SchedulerConfig(max_batch=8, deadline_ms=60_000.0,
+                              warmup=False, max_queue=2)
+        sched = MicroBatchScheduler(engine, cfg)
+        admitted = [sched.submit(g) for g in graphs[:2]]
+        with pytest.raises(SchedulerOverloaded) as ei:
+            sched.submit(graphs[2])
+        assert ei.value.retry_after_s > 0
+        assert sched.stats()["n_shed"] == 1
+        sched.close()
+        for h in admitted:
+            assert np.isfinite(h.result().energy)
 
     def test_deadline_expired_queue_not_starved_by_full_queue(self, engine):
         """Among triggered queues the oldest head request flushes first:
         a full small-bucket queue must not preempt a deadline-expired
         request that has waited longer (starvation under sustained
-        small-molecule overload)."""
+        small-molecule overload). Probed on BatchQueue directly — the
+        policy object both the single scheduler and every cluster
+        replica drive."""
+        from repro.server import BatchQueue
         from repro.server.scheduler import RequestHandle
         cfg = SchedulerConfig(max_batch=2, deadline_ms=10.0, warmup=False)
-        sched = MicroBatchScheduler(engine, cfg)
-        sched.close()                  # worker gone: probe the policy purely
+        queue = BatchQueue(engine.serve.buckets(), cfg)
         (g16,) = _graphs([8], seed=20)
         (g32,) = _graphs([24], seed=21)
         now = time.monotonic()
-        old = RequestHandle(g32, now - 1.0)     # deadline long expired
-        sched._queues[32].append(old)
-        sched._queues[16].extend(
-            [RequestHandle(g16, now), RequestHandle(g16, now)])  # full
-        cap, handles, reason = sched._pick_flush(now, drain=False)
+        old = RequestHandle(g32, now - 1.0, bucket_capacity=32)
+        queue.append(old)                       # deadline long expired
+        for _ in range(2):                      # full 16-atom queue
+            queue.append(RequestHandle(g16, now, bucket_capacity=16))
+        cap, handles, reason = queue.pick_flush(now, drain=False)
         assert (cap, reason) == (32, "deadline")
         assert handles == [old]
         # the full queue goes next
-        cap, handles, reason = sched._pick_flush(now, drain=False)
+        cap, handles, reason = queue.pick_flush(now, drain=False)
         assert (cap, reason) == (16, "full")
         assert len(handles) == 2
+        assert queue.depth() == 0
 
     def test_oversize_molecule_raises_at_submit(self, engine):
         big = _graphs([100], seed=9)[0]
@@ -329,6 +355,63 @@ def _npy_u8_header(n: int) -> bytes:
     pad = 64 - (10 + len(head) + 1) % 64
     head += b" " * pad + b"\n"
     return b"\x93NUMPY\x01\x00" + len(head).to_bytes(2, "little") + head
+
+
+class TestStepTraffic:
+    STAGES = [RateStage(50.0, 1.0), RateStage(400.0, 0.5),
+              RateStage(50.0, 1.0)]
+
+    def test_step_traffic_is_seeded(self):
+        t1 = make_step_traffic(self.STAGES, seed=3)
+        t2 = make_step_traffic(self.STAGES, seed=3)
+        assert [t for t, _ in t1] == [t for t, _ in t2]
+        for (_, g1), (_, g2) in zip(t1, t2):
+            np.testing.assert_array_equal(g1.coords, g2.coords)
+        assert [t for t, _ in make_step_traffic(self.STAGES, seed=4)] \
+            != [t for t, _ in t1]
+
+    def test_step_traffic_rates_are_piecewise(self):
+        """Arrival counts per stage track the stage rates; arrivals are
+        strictly inside the schedule and increasing."""
+        t = make_step_traffic(self.STAGES, seed=5)
+        times = np.asarray([x for x, _ in t])
+        assert (np.diff(times) > 0).all()
+        assert times[0] >= 0.0 and times[-1] < 2.5
+        n1 = ((times >= 0.0) & (times < 1.0)).sum()
+        n2 = ((times >= 1.0) & (times < 1.5)).sum()
+        n3 = (times >= 1.5).sum()
+        # expectation 50 / 200 / 50: the burst stage must dominate
+        assert n2 > 2 * n1 and n2 > 2 * n3
+        assert abs(n1 - 50) < 40 and abs(n2 - 200) < 80
+
+    def test_stage_summaries_attribute_by_arrival(self, engine):
+        stages = [RateStage(100.0, 0.1), RateStage(100.0, 0.1)]
+        traffic = make_step_traffic(stages, size_mix=(SizeClass(6, 16, 1.0),),
+                                    seed=6)
+        cfg = SchedulerConfig(max_batch=4, deadline_ms=5.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            res = run_open_loop(sched, traffic)
+        rows = stage_summaries(res, stages)
+        assert len(rows) == 2
+        assert sum(r["n_offered"] for r in rows) == len(traffic)
+        assert all(r["n_shed"] == 0 for r in rows)
+
+    def test_telemetry_carries_replica_and_batch(self, engine):
+        """Per-request results expose replica_id/batch_size and the flush
+        summary carries the per-replica breakdown (routing-balance
+        telemetry; a single scheduler is all replica 0)."""
+        graphs = _graphs([10, 11, 12, 13], seed=31)
+        cfg = SchedulerConfig(max_batch=4, deadline_ms=50.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            handles = [sched.submit(g) for g in graphs]
+            results = [h.result(timeout=RESULT_TIMEOUT) for h in handles]
+            stats = sched.stats()
+        for h, r in zip(handles, results):
+            assert r.replica_id == 0
+            assert h.replica_id == 0
+            assert r.batch_size >= 1
+        assert list(stats["per_replica"]) == ["0"]
+        assert stats["per_replica"]["0"]["n_requests"] == len(graphs)
 
 
 class TestTrafficHarness:
