@@ -23,6 +23,11 @@ Scenarios (all on seeded traffic, identical across replica counts):
 4. **Failover** — mid-replay ``kill_replica(mode="in_flight")``: zero
    lost requests required, requeue counts recorded.
 
+The zero-drop / zero-loss counts are **hard** regression gates in
+``benchmarks.run --diff-baselines`` (they hold at any size, so they
+gate smoke runs too); the scaling speedup gates hard only on full-size
+runs, at the core-count-scaled bound recorded in the baseline.
+
 On CPU the devices are simulated (``--xla_force_host_platform_device_
 count``, set automatically before jax import unless already present in
 XLA_FLAGS). Throughput scaling on CPU comes from overlapping per-replica
@@ -41,20 +46,22 @@ Run:  PYTHONPATH=src python benchmarks/cluster_bench.py
           [--replicas 1 2 4] [--requests 240] [--load 6.0]
           [--json BENCH_cluster.json] [--smoke]
 
-Writes a machine-readable JSON record; ``--smoke`` shrinks everything
-for CI and skips the acceptance assertions (tracked via the committed
-BENCH_cluster.json from the reference container).
+Writes a ``repro.bench/1`` document (benchmarks/schema.py); the runner
+drives the same measurement through :func:`run`. ``--smoke`` shrinks
+everything for CI and skips the acceptance assertions (tracked via the
+committed BENCH_cluster.json from the reference container).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import threading
 import time
 
 # devices must be forced before jax initializes; on TPU this flag only
-# affects the (unused) host platform and is harmless
+# affects the (unused) host platform and is harmless. Under
+# ``benchmarks.run`` the parent already committed the count into the
+# child environment, so this is a no-op there.
 _flags = os.environ.get("XLA_FLAGS", "")
 if "--xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
@@ -63,6 +70,14 @@ if "--xla_force_host_platform_device_count" not in _flags:
 import jax          # noqa: E402  (after XLA_FLAGS)
 import numpy as np  # noqa: E402
 
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
+
+from benchmarks import schema                                  # noqa: E402
+from benchmarks.schema import Metric                           # noqa: E402
 from repro.models import so3krates as so3                      # noqa: E402
 from repro.serving import QuantizedEngine, ServeConfig         # noqa: E402
 from repro.server import (RateStage, SizeClass,                # noqa: E402
@@ -95,7 +110,7 @@ def replay(pool, traffic, rate=None):
     return out, res
 
 
-def main():
+def parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="w8a8",
                     choices=["fp32", "w8a8", "w4a8"])
@@ -124,11 +139,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: few requests, 2-replica ceiling, "
                          "no acceptance assertions")
-    args = ap.parse_args()
-    if args.smoke:
-        args.requests = 60
-        args.replicas = [1, 2]
+    return ap
 
+
+def apply_smoke(args) -> None:
+    args.requests = 60
+    args.replicas = [1, 2]
+
+
+def collect(args) -> dict:
+    """Run the full measurement; returns the domain's rich record."""
     n_dev = len(jax.devices())
     model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=8,
                                     n_layers=args.layers, n_rbf=8,
@@ -283,7 +303,6 @@ def main():
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
     }
     dropped = hot_swap["n_dropped"]
-    n_err = hot_swap["n_errors"]
     print(f"\nhot swap at {n_swap} replicas over {span:.1f}s: "
           f"{len(results)}/{len(handles)} completed, {dropped} dropped, "
           f"versions {hot_swap['served_per_version']}, serve pauses "
@@ -340,7 +359,7 @@ def main():
         f"the single-replica baseline. The 2x gate applies at >=4 cores "
         f"/ real devices; here the gate is {speedup_required}x.")
 
-    record = {
+    return {
         "benchmark": "cluster_replica_scaling",
         "backend": jax.default_backend(),
         "n_devices": n_dev,
@@ -364,27 +383,74 @@ def main():
         "failover": failover,
         "smoke": args.smoke,
     }
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"\nwrote {args.json}")
 
-    if args.smoke:
-        print("NOTE: smoke-sized run; acceptance claims not exercised")
-        return
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize the rich record into gated metrics (benchmarks.schema).
+
+    Hot-swap drops/errors and failover losses are **hard** zero-count
+    gates and hold at any run size, so they gate smoke runs too. The
+    scaling speedup gates hard at the core-count-scaled bound the bench
+    itself computed, but only off smoke (``smoke_ok=False``): a smoke
+    run stops its replica ladder at 2, so its "max vs 1" is a different
+    measurement — and its metric name ``[r2]`` keeps it from ever being
+    compared to the full-size ``[r4]`` baseline anyway."""
+    ms = []
+    for row in record["scaling"]:
+        n = row["n_replicas"]
+        ms.append(Metric(f"throughput_rps[r{n}]", row["throughput_rps"],
+                         "req/s"))
+        ms.append(Metric(f"p99_ms[r{n}]", row["p99_ms"], "ms",
+                         direction="lower"))
+    n_max = max(r["n_replicas"] for r in record["scaling"])
+    ms.append(Metric(f"speedup_max_vs_1[r{n_max}]",
+                     record["speedup_max_vs_1"], "x", kind="hard",
+                     gate={"op": "ge",
+                           "bound": record["speedup_required"]},
+                     smoke_ok=False))
+    ms.append(Metric("ramp_p99_ms", record["ramp"]["overall"]["p99_ms"],
+                     "ms", direction="lower"))
+    hs, fo = record["hot_swap"], record["failover"]
+    ms.append(Metric("hot_swap_dropped", float(hs["n_dropped"]), "count",
+                     kind="hard", gate={"op": "eq", "bound": 0.0}))
+    ms.append(Metric("hot_swap_errors", float(hs["n_errors"]), "count",
+                     kind="hard", gate={"op": "eq", "bound": 0.0}))
+    ms.append(Metric("hot_swap_pause_max_s",
+                     float(max(hs["pause_s_per_replica"] or [0.0])), "s",
+                     direction="lower"))
+    ms.append(Metric("failover_lost", float(fo["n_lost"]), "count",
+                     kind="hard", gate={"op": "eq", "bound": 0.0}))
+    # n_live_after < n_replicas proves the kill actually landed while
+    # serving — a scenario that kills nothing gates nothing
+    ms.append(Metric("failover_kill_engaged",
+                     1.0 if fo["n_live_after"] < fo["n_replicas"] else 0.0,
+                     "bool", kind="hard", gate={"op": "eq", "bound": 1.0}))
+    ms.append(Metric("failover_requeued", float(fo["n_requeued"]), "count",
+                     kind="info"))
+    return ms
+
+
+def check(record: dict) -> None:
+    """Standalone acceptance assertions (the runner gates via baselines
+    instead); skipped on smoke-sized runs like the legacy CLI did."""
+    speedup = record["speedup_max_vs_1"]
+    speedup_required = record["speedup_required"]
+    n_cores = record["n_cores"]
+    n_max = max(r["n_replicas"] for r in record["scaling"])
+    hs, fo = record["hot_swap"], record["failover"]
     fails = []
     if speedup < speedup_required:
         fails.append(
             f"{n_max}-replica throughput only {speedup:.2f}x the "
             f"1-replica throughput (< {speedup_required}x gate for "
             f"{n_cores} cores)")
-    if dropped != 0 or n_err != 0:
-        fails.append(f"hot swap dropped {dropped} requests / "
-                     f"{n_err} errors (must be 0)")
-    if failover["n_lost"] != 0:
-        fails.append(f"failover lost {failover['n_lost']} requests "
+    if hs["n_dropped"] != 0 or hs["n_errors"] != 0:
+        fails.append(f"hot swap dropped {hs['n_dropped']} requests / "
+                     f"{hs['n_errors']} errors (must be 0)")
+    if fo["n_lost"] != 0:
+        fails.append(f"failover lost {fo['n_lost']} requests "
                      "(must be 0)")
-    if failover["n_live_after"] == n_kill:
+    if fo["n_live_after"] == fo["n_replicas"]:
         fails.append("failover kill never engaged (victim replica served "
                      "no flush after the kill) — scenario did not test "
                      "anything")
@@ -394,7 +460,52 @@ def main():
           f"replicas (gate {speedup_required}x on {n_cores} cores), hot "
           "swap and failover with zero lost requests")
     if n_cores < 4:
-        print("NOTE: " + scaling_note)
+        print("NOTE: " + record["scaling_note"])
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record)."""
+    args = parser().parse_args([])
+    args.json = ""
+    if config.mode in ("fp32", "w8a8", "w4a8"):
+        args.mode = config.mode
+    if config.smoke:
+        apply_smoke(args)
+    elif config.replicas > 1:
+        # full run: replica ladder up to the declared ceiling
+        args.replicas = [n for n in (1, 2, 4, 8)
+                         if n <= config.replicas] or [config.replicas]
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        r_max = max(args.replicas)
+        result = schema.ExperimentResult(
+            experiment={"domain": "cluster", "mode": args.mode,
+                        "path": "auto", "replicas": r_max,
+                        "devices": len(jax.devices()),
+                        "smoke": args.smoke},
+            fingerprint=(f"cluster:{args.mode}:auto:r{r_max}"
+                         f":d{len(jax.devices())}"),
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/cluster_bench.py"))
+        print(f"\nwrote {args.json}")
+    if args.smoke:
+        print("NOTE: smoke-sized run; acceptance claims not exercised")
+        return
+    check(record)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,251 @@
+"""Experiment enumeration + subprocess isolation for the unified runner.
+
+The runner's job (ROADMAP item 5, in the shape of
+``Liyang90/xla``'s ``experiment_runner.py``): enumerate experiment
+configs over the repo's axes —
+
+    domain:   serving | md | server | cluster | kernels
+    mode:     fp32 | w8a8 | w4a8 (or a "+"-joined sweep run in-script)
+    path:     dense | sparse | auto | dense+sparse
+    replicas: replica-ladder ceiling (cluster)
+    devices:  JAX device count the experiment needs
+
+— run each config in its **own subprocess** with its own environment,
+and collect every result into one ``repro.bench/1`` document
+(:mod:`benchmarks.schema`).
+
+Subprocess isolation is not hygiene theater: ``XLA_FLAGS
+--xla_force_host_platform_device_count`` must be set *before* the
+process imports jax, so benching a 1-device serving config and a
+4-forced-device cluster config in one invocation is only possible if
+each runs in a fresh interpreter. It also means one experiment's
+compilation cache, thread pool, or crash cannot leak into the next.
+
+Each domain's bench script exposes ``run(config) ->
+(list[Metric], record)`` (keeping its standalone CLI); the registry
+below maps domains to those modules and to the committed per-domain
+BENCH documents that ``--refresh-baselines`` derives the gate table
+from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks import schema
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# domain -> (bench module, committed per-domain document)
+DOMAINS: Dict[str, Dict[str, str]] = {
+    "serving": {"module": "benchmarks.serving_bench",
+                "document": "BENCH_serving.json"},
+    "md": {"module": "benchmarks.md_bench", "document": "BENCH_md.json"},
+    "server": {"module": "benchmarks.server_bench",
+               "document": "BENCH_server.json"},
+    "cluster": {"module": "benchmarks.cluster_bench",
+                "document": "BENCH_cluster.json"},
+    "kernels": {"module": "benchmarks.kernel_bench",
+                "document": "BENCH_kernels.json"},
+}
+DOMAIN_ORDER = ("serving", "md", "server", "cluster", "kernels")
+
+BASELINES_PATH = "BENCH_baselines.json"
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    """One cell of the experiment grid.
+
+    ``extra`` holds per-run overrides of the bench script's CLI defaults
+    (e.g. ``{"requests": 10}``) — used by tests to shrink runs below
+    even smoke size. It is deliberately excluded from the fingerprint:
+    the fingerprint identifies *what* is measured, smoke/extra say *how
+    small* the measurement is, and smoke-size hard gates must still find
+    their full-size baseline entry.
+    """
+    domain: str
+    mode: str = "w8a8"
+    path: str = "-"
+    replicas: int = 1
+    devices: int = 1
+    smoke: bool = False
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.domain not in DOMAINS:
+            raise ValueError(f"unknown domain {self.domain!r} "
+                             f"(have {sorted(DOMAINS)})")
+
+    @property
+    def fingerprint(self) -> str:
+        return (f"{self.domain}:{self.mode}:{self.path}"
+                f":r{self.replicas}:d{self.devices}")
+
+    def to_json(self) -> Dict:
+        return {"domain": self.domain, "mode": self.mode, "path": self.path,
+                "replicas": self.replicas, "devices": self.devices,
+                "smoke": self.smoke, "extra": dict(self.extra)}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ExperimentConfig":
+        return cls(domain=d["domain"], mode=d.get("mode", "w8a8"),
+                   path=d.get("path", "-"),
+                   replicas=int(d.get("replicas", 1)),
+                   devices=int(d.get("devices", 1)),
+                   smoke=bool(d.get("smoke", False)),
+                   extra=dict(d.get("extra", {})))
+
+    def env(self) -> Dict[str, str]:
+        """Child-process environment: device count forced before jax can
+        initialize, thread counts pinned so runs are comparable."""
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        flags.append(
+            f"--xla_force_host_platform_device_count={self.devices}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        n = str(os.cpu_count() or 1)
+        for var in ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS",
+                    "MKL_NUM_THREADS"):
+            env.setdefault(var, n)
+        src = os.path.join(REPO_ROOT, "src")
+        env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src)
+        return env
+
+
+def enumerate_experiments(domains: Optional[Sequence[str]] = None,
+                          modes: Optional[Sequence[str]] = None,
+                          smoke: bool = False,
+                          extra: Optional[Dict] = None
+                          ) -> List[ExperimentConfig]:
+    """The default experiment suite: one config per (domain, mode) cell.
+
+    Without ``--modes`` this is exactly the committed-baseline suite —
+    the five domains at their reference configurations (serving runs
+    dense+sparse internally, md sweeps fp32+w8a8, cluster runs the
+    1/2/4 replica ladder on 4 forced host devices). ``modes`` expands
+    the quantization axis for the per-mode domains.
+    """
+    domains = list(domains) if domains else list(DOMAIN_ORDER)
+    unknown = [d for d in domains if d not in DOMAINS]
+    if unknown:
+        raise ValueError(f"unknown domain(s) {unknown} "
+                         f"(have {sorted(DOMAINS)})")
+    extra = dict(extra or {})
+    out: List[ExperimentConfig] = []
+    for d in domains:
+        if d == "serving":
+            for m in (modes or ["w8a8"]):
+                out.append(ExperimentConfig(d, m, "dense+sparse",
+                                            smoke=smoke, extra=extra))
+        elif d == "md":
+            mode = "+".join(modes) if modes else "fp32+w8a8"
+            out.append(ExperimentConfig(d, mode, "sparse", smoke=smoke,
+                                        extra=extra))
+        elif d == "server":
+            for m in (modes or ["w8a8"]):
+                out.append(ExperimentConfig(d, m, "auto", smoke=smoke,
+                                            extra=extra))
+        elif d == "cluster":
+            for m in (modes or ["w8a8"]):
+                out.append(ExperimentConfig(d, m, "auto", replicas=4,
+                                            devices=4, smoke=smoke,
+                                            extra=extra))
+        elif d == "kernels":
+            out.append(ExperimentConfig(d, "-", "-", smoke=smoke,
+                                        extra=extra))
+    return out
+
+
+# -- in-process execution (runs inside the isolated child) -------------------
+
+def run_config_inprocess(config: ExperimentConfig) -> schema.ExperimentResult:
+    """Import the domain module and run it — called from the child
+    process the runner spawned (``benchmarks.run --run-one``), where the
+    environment (XLA device count, thread pins) is already committed."""
+    module = importlib.import_module(DOMAINS[config.domain]["module"])
+    t0 = time.monotonic()
+    metrics, record = module.run(config)
+    return schema.ExperimentResult(
+        experiment=config.to_json(),
+        fingerprint=config.fingerprint,
+        hardware=schema.hardware_context(),
+        metrics=list(metrics),
+        duration_s=time.monotonic() - t0,
+        detail=record)
+
+
+# -- subprocess orchestration ------------------------------------------------
+
+class ExperimentFailed(RuntimeError):
+    pass
+
+
+def run_experiment(config: ExperimentConfig, work_dir: str,
+                   timeout_s: float = 3600.0) -> schema.ExperimentResult:
+    """Run one config in a fresh interpreter with its own env; stream
+    the child's output; return its result."""
+    os.makedirs(work_dir, exist_ok=True)
+    tag = config.fingerprint.replace(":", "_").replace("+", "-")
+    cfg_path = os.path.join(work_dir, f"{tag}.config.json")
+    res_path = os.path.join(work_dir, f"{tag}.result.json")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_json(), f)
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--run-one", cfg_path, "--result-out", res_path]
+    print(f"\n=== [{config.fingerprint}] devices={config.devices} "
+          f"smoke={config.smoke} ===", flush=True)
+    proc = subprocess.run(cmd, env=config.env(), cwd=REPO_ROOT,
+                          timeout=timeout_s)
+    if proc.returncode != 0:
+        raise ExperimentFailed(
+            f"experiment {config.fingerprint} exited "
+            f"{proc.returncode} (see output above)")
+    with open(res_path) as f:
+        return schema.ExperimentResult.from_json(json.load(f))
+
+
+def run_suite(configs: Sequence[ExperimentConfig], work_dir: str,
+              timeout_s: float = 3600.0) -> Dict:
+    """Run every config subprocess-isolated, in order, and collect one
+    schema-valid document. A config that crashes fails the suite — a
+    bench that cannot run is a regression, not a gap in the report."""
+    results = [run_experiment(c, work_dir, timeout_s) for c in configs]
+    doc = schema.bench_document(results, generated_by="benchmarks.run")
+    schema.validate_document(doc)
+    return doc
+
+
+# -- baselines ---------------------------------------------------------------
+
+def domain_document_path(domain: str, root: str = REPO_ROOT) -> str:
+    return os.path.join(root, DOMAINS[domain]["document"])
+
+
+def refresh_baselines(domains: Optional[Sequence[str]] = None,
+                      root: str = REPO_ROOT) -> Dict:
+    """Derive the gate table from the committed per-domain documents.
+
+    Workflow (docs/experiments.md): regenerate the per-domain
+    BENCH_*.json on the reference machine (standalone bench CLIs or
+    ``benchmarks.run --write-domain-docs``), eyeball the numbers, then
+    run this and commit both."""
+    domains = list(domains) if domains else list(DOMAIN_ORDER)
+    docs = []
+    for d in domains:
+        path = domain_document_path(d, root)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no committed document for domain {d!r} at {path}; run "
+                f"the {d} bench first")
+        docs.append(schema.load_document(path))
+    return schema.baselines_from_documents(
+        docs, source=[DOMAINS[d]["document"] for d in domains])

@@ -1,18 +1,36 @@
 """Kernel microbenchmarks: ref-path timings on CPU (the Pallas kernels
 target TPU; interpret-mode timing is not meaningful) + exact byte-movement
-accounting per kernel, which is the quantity the kernels optimize."""
+accounting per kernel, which is the quantity the kernels optimize.
+
+Previously this printed CSV to stdout only, so kernel numbers were
+invisible to regression gating. It now writes a ``repro.bench/1``
+document (benchmarks/schema.py) like the other four domains: the byte
+compression ratios are *exact* arithmetic over the packed layouts, so
+they gate **hard** (``op: eq``) on every machine at every size — if a
+layout change silently fattens a packed buffer, ``benchmarks.run
+--diff-baselines`` fails; ref-path wall times ride along as soft,
+core-count-aware metrics.
+
+Run:  PYTHONPATH=src python benchmarks/kernel_bench.py
+          [--reps 5] [--json BENCH_kernels.json] [--smoke]
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
 
-from repro.core import make_codebook
-from repro.kernels import ops, ref
+from benchmarks import schema
+from benchmarks.schema import Metric
 
 
 def _bench(fn, *args, reps=5):
+    import jax
     jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(reps):
@@ -21,30 +39,56 @@ def _bench(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
-def main():
+def parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer timing reps (shapes are "
+                         "kept — the byte accounting is exact either way)")
+    return ap
+
+
+def apply_smoke(args) -> None:
+    args.reps = 2
+
+
+def collect(args) -> dict:
+    """Run the four microbenchmarks; returns the domain's rich record.
+    Shapes are fixed (the byte ratios are layout facts, not
+    measurements), so metric names are stable across machines."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import make_codebook
+    from repro.kernels import ops, ref
+
     key = jax.random.PRNGKey(0)
+    rows = []
+
     m, k, n = 512, 1024, 1024
     x = jax.random.normal(key, (m, k))
     w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
 
     w8, s8 = ops.prepare_w8(w)
     us = _bench(jax.jit(lambda a, b, c: ref.w8a8_matmul_ref(
-        *ops.quantize_activations(a), b, c)), x, w8, s8)
-    print(f"kernel_w8a8_ref_{m}x{k}x{n},{us:.1f},"
-          f"w_bytes={k * n}_vs_fp32={4 * k * n}")
+        *ops.quantize_activations(a), b, c)), x, w8, s8, reps=args.reps)
+    rows.append({"kernel": f"w8a8_ref_{m}x{k}x{n}", "us": us,
+                 "bytes": k * n, "fp32_bytes": 4 * k * n})
 
     w4, s4 = ops.prepare_w4(w)
     us = _bench(jax.jit(lambda a, b, c: ref.w4a8_matmul_ref(
-        *ops.quantize_activations(a), b, c)), x, w4, s4)
-    print(f"kernel_w4a8_ref_{m}x{k}x{n},{us:.1f},"
-          f"w_bytes={k * n // 2}_vs_fp32={4 * k * n}")
+        *ops.quantize_activations(a), b, c)), x, w4, s4, reps=args.reps)
+    rows.append({"kernel": f"w4a8_ref_{m}x{k}x{n}", "us": us,
+                 "bytes": k * n // 2, "fp32_bytes": 4 * k * n})
 
     cb = make_codebook(8)
     cb_t = ops.pad_codebook(cb)
     v = jax.random.normal(key, (65536, 3))
-    us = _bench(jax.jit(lambda vv: ref.mddq_encode_ref(vv, jnp.asarray(cb_t.T))), v)
-    print(f"kernel_mddq_ref_64k_vectors,{us:.1f},"
-          f"out_bytes={65536 * 2}_vs_fp32={65536 * 12}")
+    us = _bench(jax.jit(lambda vv: ref.mddq_encode_ref(
+        vv, jnp.asarray(cb_t.T))), v, reps=args.reps)
+    rows.append({"kernel": "mddq_ref_64k_vectors", "us": us,
+                 "bytes": 65536 * 2, "fp32_bytes": 65536 * 12})
 
     bh, s, d = 8, 4096, 128
     q = jax.random.normal(key, (bh, d))
@@ -52,9 +96,66 @@ def main():
     vc = jax.random.normal(jax.random.fold_in(key, 3), (bh, s, d))
     kq, ks, vq, vs = ops.prepare_kv_int8(kc, vc)
     us = _bench(jax.jit(lambda *a: ref.decode_attention_int8kv_ref(
-        *a, softmax_scale=d ** -0.5)), q, kq, ks, vq, vs)
-    print(f"kernel_int8kv_decode_ref_{bh}x{s}x{d},{us:.1f},"
-          f"cache_bytes={2 * bh * s * d}_vs_bf16={4 * bh * s * d}")
+        *a, softmax_scale=d ** -0.5)), q, kq, ks, vq, vs, reps=args.reps)
+    # int8 KV halves the *cache* the decode streams, vs a bf16 cache
+    rows.append({"kernel": f"int8kv_decode_ref_{bh}x{s}x{d}", "us": us,
+                 "bytes": 2 * bh * s * d, "fp32_bytes": 4 * bh * s * d})
+
+    for r in rows:
+        r["compression_x"] = r["fp32_bytes"] / r["bytes"]
+        print(f"kernel_{r['kernel']},{r['us']:.1f},"
+              f"bytes={r['bytes']}_vs_full={r['fp32_bytes']}")
+
+    return {"benchmark": "kernel_ref_microbench",
+            "backend": jax.default_backend(),
+            "reps": args.reps,
+            "rows": rows,
+            "smoke": bool(getattr(args, "smoke", False))}
+
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize the rich record into gated metrics (benchmarks.schema)."""
+    ms = []
+    for r in record["rows"]:
+        ms.append(Metric(f"compression_x[{r['kernel']}]",
+                         r["compression_x"], "x", kind="hard",
+                         gate={"op": "eq", "bound": r["compression_x"]}))
+        ms.append(Metric(f"us[{r['kernel']}]", r["us"], "us",
+                         direction="lower"))
+        ms.append(Metric(f"bytes[{r['kernel']}]", float(r["bytes"]),
+                         "bytes", kind="info"))
+    return ms
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record)."""
+    args = parser().parse_args([])
+    args.json = ""
+    if config.smoke:
+        apply_smoke(args)
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        result = schema.ExperimentResult(
+            experiment={"domain": "kernels", "mode": "-", "path": "-",
+                        "replicas": 1, "devices": 1, "smoke": args.smoke},
+            fingerprint="kernels:-:-:r1:d1",
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/kernel_bench.py"))
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

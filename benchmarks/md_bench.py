@@ -22,31 +22,35 @@ same dt:
 
 Speed never at the cost of conservation: both lanes record total energy
 on the same trajectory and the bench reports the drift rate of each
-(the fast path must stay within 2x of legacy) plus the skin-rebuild
+(the fast path must stay within 2x of legacy — the **hard** gate
+``benchmarks.run --diff-baselines`` enforces) plus the skin-rebuild
 frequency, so the neighbour-list reuse is visibly not skipping physics.
 
 Run:  PYTHONPATH=src python benchmarks/md_bench.py [--bucket 64]
           [--modes fp32 w8a8] [--steps 300] [--repeats 3]
           [--replicas 8] [--json BENCH_md.json] [--smoke]
 
-Writes a machine-readable JSON record (per-mode steps/sec both lanes,
-speedup, drift rates, rebuild stats, replica-batch throughput) so the
-perf trajectory is tracked across PRs. ``--smoke`` shrinks everything
-for CI.
+Writes a ``repro.bench/1`` document (benchmarks/schema.py) with
+per-mode steps/sec both lanes, speedup, drift rates, rebuild stats and
+replica-batch throughput so the perf trajectory is tracked across PRs;
+the runner drives the same measurement through :func:`run`. ``--smoke``
+shrinks everything for CI.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
-import jax
 import numpy as np
 
-from repro.md import MDConfig, MDEngine, energy_drift_rate, pad_replicas
-from repro.md.nve import _FS
-from repro.models import so3krates as so3
-from repro.serving import Graph, QuantizedEngine, ServeConfig
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
+
+from benchmarks import schema
+from benchmarks.schema import Metric
 
 
 def make_molecule(n_atoms, n_species, density, seed):
@@ -61,6 +65,8 @@ def legacy_host_loop(engine, species, coords, veloc, masses, dt_fs,
     """Pre-PR MD: velocity-Verlet on the host, one ``infer_batch`` per
     step (neighbour list rebuilt host-side every step inside the
     engine's dispatch). Returns (coords, veloc, energy records)."""
+    from repro.md.nve import _FS
+    from repro.serving import Graph
     dt = dt_fs * _FS
     inv_m = (1.0 / masses)[:, None]
     r, v = coords.copy(), veloc.copy()
@@ -80,6 +86,10 @@ def legacy_host_loop(engine, species, coords, veloc, masses, dt_fs,
 
 
 def bench_mode(mode, model_cfg, params, n, args):
+    import jax
+    from repro.md import (MDConfig, MDEngine, energy_drift_rate,
+                          pad_replicas)
+    from repro.serving import QuantizedEngine, ServeConfig
     species, coords = make_molecule(n, model_cfg.n_species, args.density,
                                     seed=n)
     masses = np.full(n, 12.011, np.float32)
@@ -179,7 +189,7 @@ def bench_mode(mode, model_cfg, params, n, args):
     return out
 
 
-def main():
+def parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+", default=[24, 48, 64],
                     help="molecule sizes to sweep (each rides the "
@@ -199,12 +209,19 @@ def main():
                     help="machine-readable output path ('' to skip)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny molecule, few steps")
-    args = ap.parse_args()
-    if args.smoke:
-        args.sizes = [24]
-        args.steps, args.repeats, args.replicas = 40, 1, 2
-        args.record_every = 20
+    return ap
 
+
+def apply_smoke(args) -> None:
+    args.sizes = [24]
+    args.steps, args.repeats, args.replicas = 40, 1, 2
+    args.record_every = 20
+
+
+def collect(args) -> dict:
+    """Run the full measurement; returns the domain's rich record."""
+    import jax
+    from repro.models import so3krates as so3
     model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=8,
                                     n_layers=args.layers, n_rbf=8,
                                     dir_bits=6, cutoff=3.0)
@@ -227,7 +244,7 @@ def main():
                   f"{row['drift_ratio_device_vs_legacy']:>11.2f}x "
                   f"{row['rebuild_interval_steps']:>11.1f} st")
 
-    record = {
+    return {
         "benchmark": "md_device_scan_vs_host_loop",
         "backend": jax.default_backend(),
         "sizes": args.sizes,
@@ -242,14 +259,44 @@ def main():
         "smoke": args.smoke,
         "rows": rows,
     }
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"\nwrote {args.json}")
 
-    if args.smoke:
-        print("NOTE: smoke-sized run; speed/drift claims not exercised")
-        return
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize the rich record into gated metrics (benchmarks.schema).
+
+    The drift ratio is the domain's correctness number — conservation of
+    the device lane relative to the legacy lane on the same trajectory —
+    so it gates **hard** at the bench's own 2x acceptance bound even on
+    smoke runs. The >= 1.5x speedup floor is also hard, but only off
+    smoke (``smoke_ok=False``): a 40-step run on a loaded CI box cannot
+    fairly amortize the scan's dispatch."""
+    ms = []
+    for row in record["rows"]:
+        key = f"[n{row['n_atoms']},{row['mode']}]"
+        ms.append(Metric(f"drift_ratio_device_vs_legacy{key}",
+                         row["drift_ratio_device_vs_legacy"], "x",
+                         kind="hard", gate={"op": "le", "bound": 2.0}))
+        ms.append(Metric(f"speedup_device_vs_legacy{key}",
+                         row["speedup_device_vs_legacy"], "x",
+                         kind="hard", gate={"op": "ge", "bound": 1.5},
+                         smoke_ok=False))
+        ms.append(Metric(f"device_steps_per_s{key}",
+                         row["device_steps_per_s"], "steps/s"))
+        ms.append(Metric(f"legacy_steps_per_s{key}",
+                         row["legacy_steps_per_s"], "steps/s",
+                         kind="info"))
+        ms.append(Metric(f"replica_steps_per_s{key}",
+                         row["replica_steps_per_s"], "steps/s"))
+        ms.append(Metric(f"rebuild_interval_steps{key}",
+                         row["rebuild_interval_steps"], "steps",
+                         kind="info"))
+    return ms
+
+
+def check(record: dict) -> None:
+    """Standalone acceptance assertions (the runner gates via baselines
+    instead); skipped on smoke-sized runs like the legacy CLI did."""
+    rows = record["rows"]
     worst_speed = min(r["speedup_device_vs_legacy"] for r in rows)
     worst_drift = max(r["drift_ratio_device_vs_legacy"] for r in rows)
     if worst_drift > 2.0:
@@ -279,6 +326,48 @@ def main():
         raise SystemExit(
             f"FAIL: device path only {worst_speed:.2f}x the legacy loop "
             "(< 1.5x) — the scan path has regressed")
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record).
+    ``config.mode`` may be a '+'-joined sweep (the default suite runs
+    ``fp32+w8a8`` in one process so both lanes share the molecule)."""
+    args = parser().parse_args([])
+    args.json = ""
+    modes = [m for m in config.mode.split("+")
+             if m in ("fp32", "w8a8", "w4a8")]
+    if modes:
+        args.modes = modes
+    if config.smoke:
+        apply_smoke(args)
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        mode = "+".join(args.modes)
+        result = schema.ExperimentResult(
+            experiment={"domain": "md", "mode": mode, "path": "sparse",
+                        "replicas": 1, "devices": 1, "smoke": args.smoke},
+            fingerprint=f"md:{mode}:sparse:r1:d1",
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/md_bench.py"))
+        print(f"\nwrote {args.json}")
+    if args.smoke:
+        print("NOTE: smoke-sized run; speed/drift claims not exercised")
+        return
+    check(record)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,446 @@
+"""The one normalized benchmark-result schema every domain emits.
+
+Before this module each bench script wrote its own JSON shape — four
+divergent schemas, no way to diff a number between PRs without reading
+the producing script. Now every benchmark result is a *document*:
+
+    {
+      "schema": "repro.bench/1",
+      "generated_by": "benchmarks/serving_bench.py",
+      "results": [
+        {
+          "experiment": {"domain": "serving", "mode": "w8a8", ...},
+          "fingerprint": "serving:w8a8:dense+sparse:r1:d1",
+          "hardware":   {"backend": "cpu", "n_cores": 2, "n_devices": 1},
+          "duration_s": 123.4,
+          "metrics": [
+            {"name": "mol_per_s[b64].sparse", "value": 140.3,
+             "unit": "mol/s", "kind": "soft", "direction": "higher"},
+            {"name": "drift_ratio[w8a8,n64]", "value": 1.0, "unit": "x",
+             "kind": "hard", "gate": {"op": "le", "bound": 2.0}},
+            ...
+          ],
+          "detail": { ...the domain's rich record, unconstrained... }
+        }
+      ]
+    }
+
+Three metric kinds, which is the whole gating policy:
+
+* ``hard`` — a correctness claim (energy-drift ratio, LEE, zero-drop /
+  zero-loss counts, byte-accounting ratios). Carries an absolute gate
+  ``{"op": "le"|"ge"|"eq", "bound": x}``; violating it is a regression
+  on any machine, at any benchmark size, so hard gates are enforced
+  even on ``--smoke`` runs (unless the metric is marked
+  ``smoke_ok: false`` because its value only means something at full
+  size, e.g. artifact compression of a deploy-scale model).
+* ``soft`` — a performance claim (throughput, latency, speedup).
+  Compared against the committed baseline value with a relative
+  tolerance band, and only when the run is full-size *and* the core
+  count matches the baseline's hardware context — perf numbers from a
+  2-core reference container mean nothing on a 1-core box, so the gate
+  skips (with a note) instead of crying wolf.
+* ``info`` — recorded, never gated.
+
+``BENCH_baselines.json`` is the committed gate table (one entry per
+fingerprint x metric, plus the hardware context the values were measured
+on); :func:`diff_against_baselines` compares a results document against
+it and returns a report whose ``ok`` drives the runner's exit code.
+
+This module is deliberately dependency-free (stdlib only, jax imported
+lazily in :func:`hardware_context`) so schema validation in tests stays
+cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = "repro.bench/1"
+BASELINES_VERSION = "repro.bench.baselines/1"
+
+METRIC_KINDS = ("hard", "soft", "info")
+GATE_OPS = ("le", "ge", "eq")
+DIRECTIONS = ("higher", "lower")
+
+# relative band for soft (perf) gates when the baseline entry does not
+# override it: the 1-2 core reference containers show ±30% run-to-run
+# noise on throughput under load (docs/cluster.md), so the default band
+# must sit above that
+DEFAULT_SOFT_TOLERANCE = 0.40
+
+
+class SchemaError(ValueError):
+    """A benchmark document/baselines file violates the schema."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One measured number in normalized form."""
+    name: str
+    value: float
+    unit: str
+    kind: str = "soft"                    # "hard" | "soft" | "info"
+    direction: str = "higher"             # soft only: which way is better
+    gate: Optional[Dict] = None           # hard only: {"op": .., "bound": ..}
+    smoke_ok: bool = True                 # hard only: gate applies to --smoke
+
+    def __post_init__(self):
+        if self.kind not in METRIC_KINDS:
+            raise SchemaError(f"metric {self.name!r}: bad kind {self.kind!r}")
+        if self.kind == "hard":
+            if not self.gate or self.gate.get("op") not in GATE_OPS:
+                raise SchemaError(
+                    f"hard metric {self.name!r} needs gate op in {GATE_OPS}")
+        if self.direction not in DIRECTIONS:
+            raise SchemaError(
+                f"metric {self.name!r}: bad direction {self.direction!r}")
+
+    def to_json(self) -> Dict:
+        out = {"name": self.name, "value": self.value, "unit": self.unit,
+               "kind": self.kind}
+        if self.kind == "soft":
+            out["direction"] = self.direction
+        if self.kind == "hard":
+            out["gate"] = dict(self.gate)
+            if not self.smoke_ok:
+                out["smoke_ok"] = False
+        return out
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Metric":
+        return cls(name=d["name"], value=d["value"], unit=d.get("unit", ""),
+                   kind=d.get("kind", "soft"),
+                   direction=d.get("direction", "higher"),
+                   gate=d.get("gate"), smoke_ok=d.get("smoke_ok", True))
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One experiment config's outcome: metrics + the rich detail record."""
+    experiment: Dict                      # domain/mode/path/replicas/devices
+    fingerprint: str
+    hardware: Dict
+    metrics: List[Metric]
+    duration_s: float = 0.0
+    detail: Optional[Dict] = None
+
+    def to_json(self) -> Dict:
+        out = {"experiment": self.experiment, "fingerprint": self.fingerprint,
+               "hardware": self.hardware, "duration_s": self.duration_s,
+               "metrics": [m.to_json() for m in self.metrics]}
+        if self.detail is not None:
+            out["detail"] = self.detail
+        return out
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ExperimentResult":
+        return cls(experiment=d["experiment"], fingerprint=d["fingerprint"],
+                   hardware=d["hardware"],
+                   metrics=[Metric.from_json(m) for m in d["metrics"]],
+                   duration_s=d.get("duration_s", 0.0),
+                   detail=d.get("detail"))
+
+
+def hardware_context() -> Dict:
+    """Backend + core/device counts of the running process (jax lazy)."""
+    import os
+    import platform
+
+    import jax
+    return {"backend": jax.default_backend(),
+            "n_cores": os.cpu_count() or 1,
+            "n_devices": jax.device_count(),
+            "machine": platform.machine()}
+
+
+def bench_document(results: Sequence[ExperimentResult],
+                   generated_by: str) -> Dict:
+    return {"schema": SCHEMA_VERSION, "generated_by": generated_by,
+            "results": [r.to_json() for r in results]}
+
+
+def write_document(path: str, doc: Dict) -> None:
+    validate_document(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+
+
+def load_document(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_document(doc, path=path)
+    return doc
+
+
+# -- validation --------------------------------------------------------------
+
+_EXPERIMENT_KEYS = ("domain", "mode", "path", "replicas", "devices", "smoke")
+
+
+def _require(cond: bool, msg: str, path: str) -> None:
+    if not cond:
+        raise SchemaError(f"{path}: {msg}")
+
+
+def validate_document(doc: Dict, path: str = "<doc>") -> None:
+    """Raise :class:`SchemaError` unless ``doc`` is a valid results
+    document. Shared by the runner, the standalone bench CLIs, and the
+    tests that pin every committed BENCH_*.json to the schema."""
+    _require(isinstance(doc, dict), "document must be an object", path)
+    _require(doc.get("schema") == SCHEMA_VERSION,
+             f"schema must be {SCHEMA_VERSION!r}, got {doc.get('schema')!r}",
+             path)
+    _require(isinstance(doc.get("generated_by"), str) and doc["generated_by"],
+             "generated_by must be a non-empty string", path)
+    results = doc.get("results")
+    _require(isinstance(results, list) and results,
+             "results must be a non-empty list", path)
+    seen = set()
+    for i, r in enumerate(results):
+        where = f"{path}#results[{i}]"
+        _require(isinstance(r, dict), "result must be an object", where)
+        exp = r.get("experiment")
+        _require(isinstance(exp, dict), "experiment must be an object", where)
+        for k in _EXPERIMENT_KEYS:
+            _require(k in exp, f"experiment missing key {k!r}", where)
+        fp = r.get("fingerprint")
+        _require(isinstance(fp, str) and fp,
+                 "fingerprint must be a non-empty string", where)
+        _require(fp not in seen, f"duplicate fingerprint {fp!r}", where)
+        seen.add(fp)
+        hw = r.get("hardware")
+        _require(isinstance(hw, dict), "hardware must be an object", where)
+        for k in ("backend", "n_cores", "n_devices"):
+            _require(k in hw, f"hardware missing key {k!r}", where)
+        _require(isinstance(r.get("duration_s"), (int, float)),
+                 "duration_s must be a number", where)
+        metrics = r.get("metrics")
+        _require(isinstance(metrics, list) and metrics,
+                 "metrics must be a non-empty list", where)
+        names = set()
+        for j, m in enumerate(metrics):
+            mwhere = f"{where}.metrics[{j}]"
+            _require(isinstance(m, dict), "metric must be an object", mwhere)
+            try:
+                metric = Metric.from_json(m)
+            except (KeyError, SchemaError) as e:
+                raise SchemaError(f"{mwhere}: {e}") from e
+            _require(isinstance(metric.value, (int, float))
+                     and not isinstance(metric.value, bool),
+                     f"metric {metric.name!r} value must be a number", mwhere)
+            _require(metric.name not in names,
+                     f"duplicate metric name {metric.name!r}", mwhere)
+            names.add(metric.name)
+
+
+def validate_baselines(doc: Dict, path: str = "<baselines>") -> None:
+    _require(isinstance(doc, dict), "baselines must be an object", path)
+    _require(doc.get("schema") == BASELINES_VERSION,
+             f"schema must be {BASELINES_VERSION!r}, "
+             f"got {doc.get('schema')!r}", path)
+    gates = doc.get("gates")
+    _require(isinstance(gates, dict) and gates,
+             "gates must be a non-empty object", path)
+    for fp, entry in gates.items():
+        where = f"{path}#gates[{fp}]"
+        _require(isinstance(entry, dict), "gate entry must be an object",
+                 where)
+        hw = entry.get("hardware")
+        _require(isinstance(hw, dict) and "n_cores" in hw,
+                 "gate entry needs hardware.n_cores", where)
+        metrics = entry.get("metrics")
+        _require(isinstance(metrics, dict) and metrics,
+                 "gate entry needs a non-empty metrics map", where)
+        for name, g in metrics.items():
+            gwhere = f"{where}.{name}"
+            kind = g.get("kind")
+            _require(kind in ("hard", "soft"),
+                     f"gated metric kind must be hard|soft, got {kind!r}",
+                     gwhere)
+            if kind == "hard":
+                _require(g.get("op") in GATE_OPS,
+                         f"hard gate op must be in {GATE_OPS}", gwhere)
+                _require(isinstance(g.get("bound"), (int, float)),
+                         "hard gate needs a numeric bound", gwhere)
+            else:
+                _require(isinstance(g.get("value"), (int, float)),
+                         "soft gate needs a numeric baseline value", gwhere)
+                _require(g.get("direction", "higher") in DIRECTIONS,
+                         "soft gate direction must be higher|lower", gwhere)
+
+
+def load_baselines(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_baselines(doc, path=path)
+    return doc
+
+
+# -- baseline construction ---------------------------------------------------
+
+def baselines_from_documents(docs: Sequence[Dict], source: str) -> Dict:
+    """Derive the committed gate table from per-domain result documents:
+    hard metrics contribute their op+bound, soft metrics their measured
+    value (the tolerance band is applied at diff time). Info metrics are
+    not gated."""
+    gates: Dict[str, Dict] = {}
+    for doc in docs:
+        validate_document(doc)
+        for r in doc["results"]:
+            entry = gates.setdefault(
+                r["fingerprint"],
+                {"hardware": {k: r["hardware"][k]
+                              for k in ("backend", "n_cores", "n_devices")},
+                 "metrics": {}})
+            for m in r["metrics"]:
+                metric = Metric.from_json(m)
+                if metric.kind == "hard":
+                    entry["metrics"][metric.name] = {
+                        "kind": "hard", "op": metric.gate["op"],
+                        "bound": metric.gate["bound"], "unit": metric.unit,
+                        "measured": metric.value,
+                        "smoke_ok": metric.smoke_ok}
+                elif metric.kind == "soft":
+                    entry["metrics"][metric.name] = {
+                        "kind": "soft", "value": metric.value,
+                        "unit": metric.unit, "direction": metric.direction,
+                        "tolerance": DEFAULT_SOFT_TOLERANCE}
+    out = {"schema": BASELINES_VERSION, "source": source, "gates": gates}
+    validate_baselines(out)
+    return out
+
+
+# -- gating ------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GateCheck:
+    fingerprint: str
+    metric: str
+    status: str          # "pass" | "fail" | "skip"
+    message: str
+
+
+@dataclasses.dataclass
+class GateReport:
+    checks: List[GateCheck]
+
+    @property
+    def ok(self) -> bool:
+        return not any(c.status == "fail" for c in self.checks)
+
+    def counts(self) -> Dict[str, int]:
+        out = {"pass": 0, "fail": 0, "skip": 0}
+        for c in self.checks:
+            out[c.status] = out.get(c.status, 0) + 1
+        return out
+
+    def render(self) -> str:
+        lines = []
+        for c in self.checks:
+            if c.status == "pass":
+                continue                     # keep the report readable
+            lines.append(f"  {c.status.upper():<5} {c.fingerprint} :: "
+                         f"{c.metric}: {c.message}")
+        n = self.counts()
+        lines.append(f"gates: {n['pass']} pass, {n['fail']} fail, "
+                     f"{n['skip']} skipped")
+        return "\n".join(lines)
+
+
+def _check_hard(fp: str, name: str, gate: Dict, value: float,
+                smoke: bool) -> GateCheck:
+    if smoke and not gate.get("smoke_ok", True):
+        return GateCheck(fp, name, "skip",
+                         "hard gate only meaningful at full size")
+    op, bound = gate["op"], gate["bound"]
+    ok = {"le": value <= bound, "ge": value >= bound,
+          "eq": value == bound}[op]
+    msg = f"value {value:g} {op} bound {bound:g}"
+    return GateCheck(fp, name, "pass" if ok else "fail",
+                     msg if ok else f"HARD GATE VIOLATED: {msg} is false")
+
+
+def _check_soft(fp: str, name: str, gate: Dict, value: float, smoke: bool,
+                run_cores: int) -> GateCheck:
+    if smoke:
+        return GateCheck(fp, name, "skip", "perf gate skipped on smoke run")
+    base_cores = gate.get("n_cores")
+    if base_cores is not None and run_cores != base_cores:
+        return GateCheck(
+            fp, name, "skip",
+            f"core-count mismatch: baseline measured on {base_cores} "
+            f"cores, this run has {run_cores} — perf band not comparable")
+    base = gate["value"]
+    tol = gate.get("tolerance", DEFAULT_SOFT_TOLERANCE)
+    if gate.get("direction", "higher") == "higher":
+        floor = base * (1.0 - tol)
+        ok = value >= floor
+        msg = (f"value {value:g} vs baseline {base:g} "
+               f"(floor {floor:g}, -{tol:.0%})")
+    else:
+        ceil = base * (1.0 + tol)
+        ok = value <= ceil
+        msg = (f"value {value:g} vs baseline {base:g} "
+               f"(ceiling {ceil:g}, +{tol:.0%})")
+    return GateCheck(fp, name, "pass" if ok else "fail",
+                     msg if ok else f"perf regression: {msg}")
+
+
+def diff_against_baselines(doc: Dict, baselines: Dict,
+                           expected_fingerprints: Optional[Sequence[str]]
+                           = None) -> GateReport:
+    """Gate a results document against the committed baselines.
+
+    ``expected_fingerprints`` limits which baseline entries *must* be
+    present in the document (the runner passes the fingerprints of the
+    configs it was asked to run, so ``--domains md`` does not fail the
+    serving gates as missing). Baseline entries outside the expectation
+    are skipped with a note; an expected fingerprint absent from the
+    document is a failure — a silently-not-run experiment must not read
+    as green.
+    """
+    validate_document(doc)
+    validate_baselines(baselines)
+    by_fp = {r["fingerprint"]: r for r in doc["results"]}
+    if expected_fingerprints is None:
+        expected = set(baselines["gates"])
+    else:
+        expected = set(expected_fingerprints)
+    checks: List[GateCheck] = []
+    for fp, entry in sorted(baselines["gates"].items()):
+        if fp not in expected:
+            checks.append(GateCheck(fp, "*", "skip",
+                                    "experiment not selected for this run"))
+            continue
+        result = by_fp.get(fp)
+        if result is None:
+            checks.append(GateCheck(
+                fp, "*", "fail",
+                "expected experiment missing from results document"))
+            continue
+        smoke = bool(result["experiment"].get("smoke"))
+        run_cores = int(result["hardware"]["n_cores"])
+        values = {m["name"]: m["value"] for m in result["metrics"]}
+        for name, gate in sorted(entry["metrics"].items()):
+            if name not in values:
+                if gate["kind"] == "hard" and not smoke:
+                    checks.append(GateCheck(
+                        fp, name, "fail",
+                        "hard-gated metric missing from full-size run"))
+                else:
+                    checks.append(GateCheck(
+                        fp, name, "skip",
+                        "metric not emitted by this run "
+                        + ("(smoke runs shrink coverage)" if smoke else "")))
+                continue
+            if gate["kind"] == "hard":
+                checks.append(_check_hard(fp, name, gate, values[name],
+                                          smoke))
+            else:
+                soft = dict(gate)
+                soft.setdefault("n_cores", entry["hardware"]["n_cores"])
+                checks.append(_check_soft(fp, name, soft, values[name],
+                                          smoke, run_cores))
+    return GateReport(checks)

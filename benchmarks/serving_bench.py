@@ -11,28 +11,72 @@ Graphs are drawn at constant density (atoms per A^3), the physical regime
 for molecules: the average degree is size-independent, so dense work grows
 as n^2 while sparse work grows as n.
 
+The bench also records the Local Equivariance Error of the *served*
+quantized engine on seeded traffic (``QuantizedEngine.lee_diagnostic``)
+— the paper's correctness metric — as a **hard** regression gate:
+throughput may wobble with the machine, the LEE of a deterministic
+seeded batch may not.
+
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--mode w8a8]
           [--buckets 16 32 64 128] [--graphs 8] [--repeats 3]
           [--density 0.1] [--cutoff 3.0] [--json BENCH_serving.json]
+          [--smoke]
 
 Prints a per-bucket table of molecules/s for both paths and writes a
-machine-readable JSON record (per-bucket numbers + crossover) so the perf
-trajectory is tracked across PRs. CPU runs use the kernels' interpret
-fallback for the matmuls and XLA segment ops for the edge softmax; on TPU
-the same script exercises the compiled kernels.
+``repro.bench/1`` document (benchmarks/schema.py) so the perf
+trajectory is tracked across PRs and gated by ``benchmarks.run
+--diff-baselines``. The runner drives the same measurement through
+:func:`run`. CPU runs use the kernels' interpret fallback for the
+matmuls and XLA segment ops for the edge softmax; on TPU the same
+script exercises the compiled kernels.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import statistics
 import time
 
 import numpy as np
 
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
+
+from benchmarks import schema
+from benchmarks.schema import Metric
 from repro.models import so3krates as so3
 from repro.serving import (QuantizedEngine, ServeConfig,
                            default_edge_capacity, random_graphs)
+
+
+def parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="w8a8",
+                    choices=["fp32", "w8a8", "w4a8"])
+    ap.add_argument("--graphs", type=int, default=8)
+    ap.add_argument("--buckets", type=int, nargs="+",
+                    default=[16, 32, 64, 128])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--density", type=float, default=0.1,
+                    help="atoms per cubic Angstrom (0.1 ~ condensed phase)")
+    ap.add_argument("--cutoff", type=float, default=3.0)
+    ap.add_argument("--feat", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small buckets only, one repeat; "
+                         "the crossover claim is not exercised")
+    return ap
+
+
+def apply_smoke(args) -> None:
+    args.buckets = [16, 32]
+    args.graphs = 4
+    args.repeats = 1
 
 
 def time_engine(engine: QuantizedEngine, graphs, repeats: int) -> float:
@@ -72,24 +116,25 @@ def bench_bucket(model_cfg, mode, cap, n_graphs, max_batch, density,
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="w8a8",
-                    choices=["fp32", "w8a8", "w4a8"])
-    ap.add_argument("--graphs", type=int, default=8)
-    ap.add_argument("--buckets", type=int, nargs="+",
-                    default=[16, 32, 64, 128])
-    ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--density", type=float, default=0.1,
-                    help="atoms per cubic Angstrom (0.1 ~ condensed phase)")
-    ap.add_argument("--cutoff", type=float, default=3.0)
-    ap.add_argument("--feat", type=int, default=32)
-    ap.add_argument("--layers", type=int, default=2)
-    ap.add_argument("--json", default="BENCH_serving.json",
-                    help="machine-readable output path ('' to skip)")
-    args = ap.parse_args()
+def lee_section(model_cfg, mode, *, cap=16, n_graphs=4, n_rotations=2,
+                seed=5):
+    """LEE of the served quantized model on a fixed seeded batch — the
+    deterministic correctness metric the hard gate pins. Same seeds
+    everywhere, so the number is comparable across machines and PRs."""
+    import jax
+    serve = ServeConfig(mode=mode, bucket_sizes=(cap,), max_batch=8,
+                        path="sparse")
+    engine = QuantizedEngine.from_config(model_cfg, serve=serve, seed=0)
+    graphs = random_graphs(n_graphs, 6, 12, model_cfg.n_species, seed=seed,
+                           density=0.1)
+    diag = engine.lee_diagnostic(graphs, jax.random.PRNGKey(0),
+                                 n_rotations=n_rotations)
+    return {"mode": mode, "bucket": cap, "seed": seed, **diag}
 
+
+def collect(args) -> dict:
+    """Run the full measurement; returns the domain's rich record."""
+    import jax
     model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=8,
                                     n_layers=args.layers, n_rbf=8,
                                     dir_bits=6, cutoff=args.cutoff)
@@ -121,7 +166,10 @@ def main():
         None)
     geo = (float(np.exp(np.mean(np.log(
         [r["speedup_sparse_vs_dense"] for r in pure])))) if pure else None)
-    record = {
+    lee = lee_section(model_cfg, args.mode)
+    print(f"LEE (served {args.mode}, seeded batch): "
+          f"mean {lee['lee_mean']:.3e}  max {lee['lee_max']:.3e}")
+    return {
         "benchmark": "serving_dense_vs_sparse",
         "mode": args.mode,
         "density": args.density,
@@ -129,33 +177,109 @@ def main():
         "feat": args.feat,
         "n_layers": args.layers,
         "repeats": args.repeats,
-        "backend": __import__("jax").default_backend(),
+        "backend": jax.default_backend(),
         "buckets": rows,
         "crossover_capacity": crossover,
         "geomean_speedup": geo,
+        "lee": lee,
+        "smoke": bool(getattr(args, "smoke", False)),
     }
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"\nwrote {args.json}")
 
-    # the claim under test is "sparse wins at n >= 64"; it is only
-    # testable when a >= 64-atom bucket was actually benchmarked, so
-    # smoke-size runs (small buckets only) report instead of failing
-    caps_64 = [r for r in rows if r["capacity"] >= 64]
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize the rich record into gated metrics (benchmarks.schema).
+    Also applied unchanged to the legacy committed record during the
+    one-time schema migration, so converted and fresh documents agree."""
+    ms = []
+    for row in record["buckets"]:
+        cap = row["capacity"]
+        ms.append(Metric(f"mol_per_s[b{cap}].dense", row["dense_mol_per_s"],
+                         "mol/s"))
+        ms.append(Metric(f"mol_per_s[b{cap}].sparse",
+                         row["sparse_mol_per_s"], "mol/s"))
+        ms.append(Metric(f"speedup_sparse_vs_dense[b{cap}]",
+                         row["speedup_sparse_vs_dense"], "x", kind="info"))
+    # a fallback-polluted row means the sparse path silently stopped
+    # being exercised — that is a correctness regression of the bench
+    ms.append(Metric("sparse_fallbacks_total",
+                     float(sum(r.get("sparse_fallbacks", 0)
+                               for r in record["buckets"])),
+                     "count", kind="hard", gate={"op": "eq", "bound": 0.0}))
+    if record.get("geomean_speedup") is not None:
+        ms.append(Metric("geomean_speedup_sparse", record["geomean_speedup"],
+                         "x"))
+    if record.get("crossover_capacity") is not None:
+        ms.append(Metric("crossover_capacity",
+                         float(record["crossover_capacity"]), "atoms",
+                         kind="info"))
+    lee = record.get("lee")
+    if lee is not None:
+        ms.append(Metric("lee_mean", lee["lee_mean"], "force-norm",
+                         kind="hard",
+                         gate={"op": "le", "bound": 2.0 * lee["lee_mean"]}))
+        ms.append(Metric("lee_max", lee["lee_max"], "force-norm",
+                         kind="info"))
+    return ms
+
+
+def check(record: dict) -> None:
+    """Standalone acceptance assertions (the runner gates via baselines
+    instead). The claim under test is "sparse wins at n >= 64"; it is
+    only testable when a >= 64-atom bucket was actually benchmarked, so
+    smoke-size runs (small buckets only) report instead of failing."""
+    rows = record["buckets"]
+    pure = [r for r in rows if r["sparse_pure"]]
+    crossover = record["crossover_capacity"]
     if crossover is not None:
         print(f"sparse beats dense from bucket capacity {crossover} up "
-              f"(geomean speedup {geo:.2f}x over {len(pure)} "
-              "fallback-free buckets)")
+              f"(geomean speedup {record['geomean_speedup']:.2f}x over "
+              f"{len(pure)} fallback-free buckets)")
+    caps_64 = [r for r in rows if r["capacity"] >= 64]
     if not caps_64:
-        print(f"NOTE: no bucket >= 64 atoms in {args.buckets}; the "
+        print("NOTE: no bucket >= 64 atoms benchmarked; the "
               "sparse-vs-dense claim was not exercised (smoke run)")
     elif all(r["sparse_pure"] and r["speedup_sparse_vs_dense"] > 1.0
              for r in caps_64):
         print("PASS: sparse edge-list path wins at n >= 64 atoms")
     else:
         raise SystemExit("FAIL: sparse path did not beat dense at "
-                         f"n >= 64 atoms (buckets {args.buckets})")
+                         ">= 64 atoms")
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record)."""
+    args = parser().parse_args([])
+    args.json = ""
+    if config.mode in ("fp32", "w8a8", "w4a8"):
+        args.mode = config.mode
+    if config.smoke:
+        apply_smoke(args)
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        result = schema.ExperimentResult(
+            experiment={"domain": "serving", "mode": args.mode,
+                        "path": "dense+sparse", "replicas": 1, "devices": 1,
+                        "smoke": args.smoke},
+            fingerprint=f"serving:{args.mode}:dense+sparse:r1:d1",
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/serving_bench.py"))
+        print(f"\nwrote {args.json}")
+    if not args.smoke:
+        check(record)
 
 
 if __name__ == "__main__":

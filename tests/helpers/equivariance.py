@@ -1,0 +1,139 @@
+"""Shared symmetry-property assertions for every surface in the repo.
+
+Each serving/MD/quantization surface ultimately claims the same
+contract — energies are scalars invariant under SO(3) rotations,
+translations and atom permutations; forces (and any per-atom vector
+output) rotate with the frame; the MDDQ vector quantizer commutes with
+rotation up to its codebook's covering radius. Before this module those
+claims were asserted four times in four slightly different hand-rolled
+shapes (test_sparse_serving, test_so3_system, test_core_mddq,
+test_md_engine). Now each property is stated once, parameterized over
+the surface's ``run`` callable, so every path asserts the *same*
+property with the same rotation machinery (``repro.core``'s sampled
+rotations).
+
+The central helper is :func:`assert_rotation_equivariant`. Its ``run``
+callable receives ``(coords, R)`` — the rotation is passed in because
+some surfaces must co-rotate auxiliary state (the MD engine rotates its
+sampled initial velocities); surfaces without such state just ignore
+``R``. Returning ``None`` for the scalar skips the invariance half
+(e.g. trajectory-endpoint checks that only compare vectors).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+def rotation(seed: int = 0) -> Array:
+    """A uniformly random SO(3) matrix, deterministic per seed."""
+    import jax
+
+    from repro.core import random_rotation
+    return np.asarray(random_rotation(jax.random.PRNGKey(seed)), np.float32)
+
+
+def assert_rotation_equivariant(
+        run: Callable[[Array, Array], Tuple[Optional[object], Array]],
+        coords: Array, *, seed: int = 0, R: Optional[Array] = None,
+        atol: float = 1e-5, scalar_atol: Optional[float] = None,
+        mask: Optional[Array] = None) -> Array:
+    """Energies invariant, vectors covariant: ``run(R.c) == (s, R.v)``.
+
+    ``run(coords, R) -> (scalars | None, vectors)`` evaluates the
+    surface under test; it is called once with the identity and once
+    with a random rotation applied to ``coords`` (rows are positions:
+    ``coords @ R.T``). Scalars must match to ``scalar_atol`` (defaults
+    to ``atol``); vectors must match the rotated originals to ``atol``.
+    ``mask`` additionally pins padded vector rows to exactly zero in
+    the rotated frame — rotation must not leak signal into padding.
+    Returns the rotation used so callers can chain further checks.
+    """
+    if R is None:
+        R = rotation(seed)
+    eye = np.eye(3, dtype=np.float32)
+    coords = np.asarray(coords)
+    s0, v0 = run(coords, eye)
+    s1, v1 = run(coords @ R.T, R)
+    if s0 is not None:
+        np.testing.assert_allclose(
+            np.asarray(s1), np.asarray(s0),
+            atol=scalar_atol if scalar_atol is not None else atol,
+            err_msg="scalar output is not rotation-invariant")
+    np.testing.assert_allclose(
+        np.asarray(v1), np.asarray(v0) @ R.T, atol=atol,
+        err_msg="vector output is not rotation-equivariant")
+    if mask is not None:
+        np.testing.assert_array_equal(
+            np.asarray(v1)[~np.asarray(mask)], 0.0,
+            err_msg="rotation leaked signal into padded rows")
+    return R
+
+
+def assert_rotation_equivariant_bounded(
+        encode: Callable[[Array], Array], vectors: Array, *, bound: float,
+        seed: int = 0, R: Optional[Array] = None) -> float:
+    """``Q(Rv)`` within ``bound`` of ``R Q(v)`` (worst row, L2).
+
+    The MDDQ contract (paper Eq. 4): a codebook quantizer cannot commute
+    with rotation exactly, but both sides land within the covering
+    radius of the true rotated direction, so they sit within twice the
+    chordal covering distance of each other. Returns the measured error
+    so callers can additionally assert tightness trends.
+    """
+    if R is None:
+        R = rotation(seed)
+    vectors = np.asarray(vectors)
+    lhs = np.asarray(encode(vectors @ R.T))
+    rhs = np.asarray(encode(vectors)) @ R.T
+    err = float(np.linalg.norm(lhs - rhs, axis=-1).max())
+    assert err <= bound, (
+        f"quantizer equivariance error {err:.4g} exceeds bound "
+        f"{bound:.4g}: Q(Rv) strayed further from R Q(v) than the "
+        f"codebook covering radius allows")
+    return err
+
+
+def assert_energy_rotation_invariant(
+        energy: Callable[[Array], object], coords: Array, *,
+        seed: int = 0, atol: float = 1e-4) -> None:
+    """Scalar ``energy(coords)`` unchanged by a random rotation."""
+    R = rotation(seed)
+    coords = np.asarray(coords)
+    e0 = float(np.asarray(energy(coords)))
+    e1 = float(np.asarray(energy(coords @ R.T)))
+    assert abs(e1 - e0) < atol, (
+        f"energy changed by {abs(e1 - e0):.4g} under rotation "
+        f"(atol {atol:g})")
+
+
+def assert_energy_translation_invariant(
+        energy: Callable[[Array], object], coords: Array, *,
+        shift: float = 5.0, atol: float = 1e-4) -> None:
+    """Scalar ``energy(coords)`` unchanged by a rigid translation."""
+    coords = np.asarray(coords)
+    e0 = float(np.asarray(energy(coords)))
+    e1 = float(np.asarray(energy(coords + shift)))
+    assert abs(e1 - e0) < atol, (
+        f"energy changed by {abs(e1 - e0):.4g} under translation by "
+        f"{shift} (atol {atol:g})")
+
+
+def assert_permutation_equivariant(
+        run: Callable[[Array, Array], Array], species: Array,
+        coords: Array, *, seed: int = 0, atol: float = 1e-4) -> None:
+    """Permuting atoms permutes per-atom outputs (and nothing else):
+    ``run(species[p], coords[p]) == run(species, coords)[p]``. This is
+    the GNN invariance that also makes total energies permutation-
+    invariant (a sum over atoms)."""
+    species = np.asarray(species)
+    coords = np.asarray(coords)
+    perm = np.random.default_rng(seed).permutation(len(species))
+    f0 = np.asarray(run(species, coords))
+    f1 = np.asarray(run(species[perm], coords[perm]))
+    np.testing.assert_allclose(
+        f0[perm], f1, atol=atol,
+        err_msg="per-atom output does not commute with atom permutation")

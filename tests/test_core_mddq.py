@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from helpers.equivariance import assert_rotation_equivariant_bounded
 from repro.core import (
     MDDQConfig,
     covering_radius,
@@ -102,13 +103,12 @@ class TestMDDQ:
         k1, k2 = jax.random.split(key)
         v = _rand_vectors(k1, (32,))
         u = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
-        R = random_rotation(k2)
-        lhs = quantize_direction(u @ R.T, cb)
-        rhs = quantize_direction(u, cb) @ R.T
-        # both are within delta of Ru -> within 2 delta of each other (chordal)
+        # both sides land within delta of Ru -> within 2 delta (chordal)
         delta = 0.17  # measured covering radius of 256-pt fibonacci ~ 0.135
-        err = np.linalg.norm(np.asarray(lhs - rhs), axis=-1).max()
-        assert err <= 2 * 2 * np.sin(delta / 2) + 1e-5
+        assert_rotation_equivariant_bounded(
+            lambda x: quantize_direction(jnp.asarray(x), cb), u,
+            bound=2 * 2 * np.sin(delta / 2) + 1e-5,
+            R=np.asarray(random_rotation(k2), np.float32))
 
 
 class TestGeometricSTE:

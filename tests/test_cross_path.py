@@ -1,0 +1,103 @@
+"""Cross-path consistency golden test (ISSUE 6).
+
+The repo now has four surfaces that evaluate the same quantized model:
+direct ``QuantizedEngine.infer_batch``, the micro-batching scheduler
+(``repro.server``), the multi-replica ``ClusterPool`` (``repro.cluster``),
+and the MD engine's force evaluation (``repro.md``). Each surface has
+its own identity tests against its immediate neighbour; this module
+pins all four to each other on ONE molecule batch, per quantization
+mode — so a numeric divergence introduced in any one layer (batch
+assembly, edge building, replica construction, artifact round-trip)
+fails a single obvious test instead of surfacing as a subtle
+cross-subsystem drift.
+
+All surfaces are forced onto the sparse edge-list path: the MD engine
+only has that path, and sparse-vs-dense already has its own 1e-5
+agreement budget in test_sparse_serving — cross-path identity is the
+tighter <= 1e-6 claim about the SAME forward reached four ways. The MD
+leg runs ``skin=0`` so its (refined) skin list is exactly the fresh
+cutoff edge list the serving builder produces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterPool
+from repro.md import MDConfig, MDEngine, pad_replicas
+from repro.models import so3krates as so3
+from repro.serving import Graph, QuantizedEngine, ServeConfig
+from repro.server import MicroBatchScheduler, SchedulerConfig
+
+CFG = so3.So3kratesConfig(feat=16, vec_feat=4, n_layers=1, n_rbf=4,
+                          dir_bits=6, cutoff=3.0)
+NS = [7, 16, 11, 5]
+RESULT_TIMEOUT = 300   # generous: CPU-interpret compiles inside flushes
+ATOL = 1e-6
+
+
+def _graphs(ns, seed=21, density=0.1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in ns:
+        side = (n / density) ** (1.0 / 3.0)
+        out.append(Graph(
+            species=rng.integers(0, CFG.n_species, n).astype(np.int32),
+            coords=rng.uniform(0, side, (n, 3)).astype(np.float32)))
+    return out
+
+
+@pytest.mark.parametrize("mode", ["w8a8", "w4a8"])
+def test_all_paths_agree(mode):
+    serve = ServeConfig(mode=mode, bucket_sizes=(16,), max_batch=4,
+                        path="sparse")
+    graphs = _graphs(NS)
+
+    # surface 1: direct engine (the reference the other three match)
+    engine = QuantizedEngine.from_config(CFG, serve=serve, seed=0)
+    direct = engine.infer_batch(graphs)
+    assert all(r.path == "sparse" for r in direct)
+
+    # surface 2: micro-batching scheduler over the same engine — flush
+    # grouping must be unobservable in the numbers
+    cfg = SchedulerConfig(max_batch=4, deadline_ms=5.0, warmup=False)
+    with MicroBatchScheduler(engine, cfg) as sched:
+        handles = [sched.submit(g) for g in graphs]
+        scheduled = [h.result(timeout=RESULT_TIMEOUT) for h in handles]
+
+    # surface 3: 2-replica cluster pool built from the same seed — which
+    # replica served a molecule must be unobservable too
+    pool = ClusterPool.from_config(
+        CFG, serve=serve,
+        cluster=ClusterConfig(n_replicas=2, deadline_ms=5.0, max_batch=4),
+        seed=0)
+    try:
+        pooled = pool.infer(graphs, timeout=RESULT_TIMEOUT)
+    finally:
+        pool.close()
+
+    # surface 4: one MD-engine force evaluation per molecule (init_state
+    # evaluates e_pot/forces at the given coords through the MD forward)
+    params = so3.init_params(jax.random.PRNGKey(0), CFG)
+    md = MDEngine(CFG, params, md=MDConfig(mode=mode, skin=0.0))
+    masses = np.full(16, 12.0, np.float32)
+    md_results = []
+    for g in graphs:
+        spec, co, mask = pad_replicas(g.species, g.coords, 1, capacity=16)
+        st = md.init_state(jax.random.PRNGKey(0), spec, co, mask, masses,
+                           200.0)
+        md_results.append((float(st.e_pot[0]),
+                           np.asarray(st.forces)[0, :g.n_atoms]))
+
+    for g, rd, rs, rp, (e_md, f_md) in zip(graphs, direct, scheduled,
+                                           pooled, md_results):
+        for label, e, f in (("scheduler", rs.energy, rs.forces),
+                            ("cluster", rp.energy, rp.forces),
+                            ("md", e_md, f_md)):
+            assert abs(e - rd.energy) <= ATOL, (
+                f"{label} energy diverged from direct infer_batch for "
+                f"n={g.n_atoms}: {e!r} vs {rd.energy!r} ({mode})")
+            np.testing.assert_allclose(
+                f, rd.forces, atol=ATOL,
+                err_msg=f"{label} forces diverged from direct "
+                        f"infer_batch for n={g.n_atoms} ({mode})")

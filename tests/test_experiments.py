@@ -1,0 +1,248 @@
+"""Tests for the unified experiment runner + regression gates (ISSUE 6).
+
+Three layers, cheapest first:
+
+* **committed artifacts** — every ``BENCH_*.json`` in the repo parses
+  under the ``repro.bench/1`` schema, ``BENCH_baselines.json`` under the
+  baselines schema, and each committed document gates *clean* against
+  the committed baselines (the reference numbers must agree with the
+  gate table derived from them — a drifted hand-edit fails here);
+* **gate semantics** — unit tests of ``diff_against_baselines`` on
+  synthetic documents: hard le/ge/eq violations, ``smoke_ok`` policy,
+  soft tolerance bands, core-count skip, missing-metric and
+  missing-experiment handling;
+* **the runner itself** — ``python -m benchmarks.run --smoke`` per
+  domain (shrunk further via ``--extra``) emits a schema-valid combined
+  document, and the ``--diff-only`` CLI exits 0 on the committed
+  numbers / exits 2 when gating against a corrupted baselines copy —
+  the acceptance demonstration that a regression actually fails CI.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks import experiments, schema
+from benchmarks.schema import ExperimentResult, Metric
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOMAIN_DOCS = {d: experiments.DOMAINS[d]["document"]
+               for d in experiments.DOMAIN_ORDER}
+BASELINES = os.path.join(REPO, experiments.BASELINES_PATH)
+
+
+def _run_cli(argv, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "benchmarks.run", *argv],
+                          cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=timeout)
+
+
+class TestCommittedArtifacts:
+    @pytest.mark.parametrize("domain", sorted(DOMAIN_DOCS))
+    def test_domain_document_valid(self, domain):
+        doc = schema.load_document(os.path.join(REPO, DOMAIN_DOCS[domain]))
+        assert all(r["experiment"]["domain"] == domain
+                   for r in doc["results"])
+        assert all(not r["experiment"]["smoke"] for r in doc["results"]), \
+            "committed reference documents must be full-size runs"
+
+    def test_baselines_valid(self):
+        baselines = schema.load_baselines(BASELINES)
+        assert baselines["gates"], "baselines must gate something"
+
+    @pytest.mark.parametrize("domain", sorted(DOMAIN_DOCS))
+    def test_domain_document_gates_clean(self, domain):
+        """The gate table was derived from these documents — they must
+        pass it. Fails when someone edits a BENCH_*.json or the gate
+        policy without refreshing BENCH_baselines.json."""
+        doc = schema.load_document(os.path.join(REPO, DOMAIN_DOCS[domain]))
+        baselines = schema.load_baselines(BASELINES)
+        report = schema.diff_against_baselines(
+            doc, baselines,
+            expected_fingerprints=[r["fingerprint"]
+                                   for r in doc["results"]])
+        assert report.ok, report.render()
+        assert report.counts()["pass"] > 0
+
+    def test_baselines_cover_every_enumerated_config(self):
+        """Every config the default full suite would run has a baseline
+        entry — a new experiment axis must come with reference numbers."""
+        baselines = schema.load_baselines(BASELINES)
+        for c in experiments.enumerate_experiments():
+            assert c.fingerprint in baselines["gates"], c.fingerprint
+
+
+# -- gate semantics on synthetic documents -----------------------------------
+
+_FP = "unit:w8a8:dense:r1:d1"
+
+
+def _result(metrics, smoke=False, n_cores=2, fp=_FP):
+    return ExperimentResult(
+        experiment={"domain": "unit", "mode": "w8a8", "path": "dense",
+                    "replicas": 1, "devices": 1, "smoke": smoke},
+        fingerprint=fp,
+        hardware={"backend": "cpu", "n_cores": n_cores, "n_devices": 1,
+                  "machine": "x86_64"},
+        metrics=metrics)
+
+
+def _doc(*results):
+    return schema.bench_document(results, generated_by="test")
+
+
+def _metrics(drift=1.0, dropped=0.0, thr=100.0, lat=5.0):
+    return [
+        Metric("drift", drift, "x", kind="hard",
+               gate={"op": "le", "bound": 2.0}),
+        Metric("dropped", dropped, "count", kind="hard",
+               gate={"op": "eq", "bound": 0.0}, smoke_ok=False),
+        Metric("thr", thr, "mol/s", kind="soft"),
+        Metric("lat", lat, "ms", kind="soft", direction="lower"),
+        Metric("note", 1.0, "", kind="info"),
+    ]
+
+
+@pytest.fixture(scope="module")
+def baselines():
+    return schema.baselines_from_documents([_doc(_result(_metrics()))],
+                                           source="test")
+
+
+class TestGateSemantics:
+    def test_identical_rerun_is_clean(self, baselines):
+        report = schema.diff_against_baselines(_doc(_result(_metrics())),
+                                               baselines)
+        assert report.ok
+        # hard drift + hard dropped + 2 soft gates all compared
+        assert report.counts() == {"pass": 4, "fail": 0, "skip": 0}
+
+    @pytest.mark.parametrize("kwargs,bad", [
+        ({"drift": 2.5}, "drift"),       # le bound exceeded
+        ({"dropped": 1.0}, "dropped"),   # eq count no longer zero
+        ({"thr": 50.0}, "thr"),          # > 40% below soft baseline
+        ({"lat": 8.0}, "lat"),           # > 40% above lower-is-better
+    ])
+    def test_regressions_fail(self, baselines, kwargs, bad):
+        report = schema.diff_against_baselines(
+            _doc(_result(_metrics(**kwargs))), baselines)
+        assert not report.ok
+        assert [c.metric for c in report.checks
+                if c.status == "fail"] == [bad]
+
+    def test_soft_band_tolerates_noise(self, baselines):
+        report = schema.diff_against_baselines(
+            _doc(_result(_metrics(thr=70.0, lat=6.5))), baselines)
+        assert report.ok
+
+    def test_smoke_skips_soft_and_smoke_unsafe_hard_gates(self, baselines):
+        # dropped=1 would hard-fail at full size, but the metric is
+        # marked smoke_ok=False; thr/lat are wild but soft gates never
+        # apply on smoke. Only the drift hard gate still guards.
+        report = schema.diff_against_baselines(
+            _doc(_result(_metrics(dropped=1.0, thr=1.0, lat=500.0),
+                         smoke=True)), baselines)
+        assert report.ok
+        assert report.counts() == {"pass": 1, "fail": 0, "skip": 3}
+
+    def test_smoke_still_enforces_hard_gates(self, baselines):
+        report = schema.diff_against_baselines(
+            _doc(_result(_metrics(drift=2.5), smoke=True)), baselines)
+        assert not report.ok
+
+    def test_core_count_mismatch_skips_soft_gates(self, baselines):
+        report = schema.diff_against_baselines(
+            _doc(_result(_metrics(thr=1.0, lat=500.0), n_cores=1)),
+            baselines)
+        assert report.ok
+        skipped = [c.metric for c in report.checks if c.status == "skip"]
+        assert sorted(skipped) == ["lat", "thr"]
+
+    def test_missing_experiment_fails_when_expected(self, baselines):
+        other = _result(_metrics(), fp="other:w8a8:dense:r1:d1")
+        report = schema.diff_against_baselines(_doc(other), baselines,
+                                               expected_fingerprints=[_FP])
+        assert not report.ok
+
+    def test_unselected_experiment_skips(self, baselines):
+        other = _result(_metrics(), fp="other:w8a8:dense:r1:d1")
+        report = schema.diff_against_baselines(
+            _doc(other), baselines,
+            expected_fingerprints=["other:w8a8:dense:r1:d1"])
+        assert report.ok
+
+    def test_missing_hard_metric_fails_full_but_skips_smoke(self, baselines):
+        for smoke, ok in ((False, False), (True, True)):
+            partial = _result([Metric("note", 1.0, "", kind="info")],
+                              smoke=smoke)
+            report = schema.diff_against_baselines(_doc(partial), baselines)
+            assert report.ok is ok, (smoke, report.render())
+
+
+# -- the runner CLI ----------------------------------------------------------
+
+# per-domain overrides shrinking *below* smoke size: these runs only
+# prove end-to-end plumbing + schema validity, not performance
+_EXTRAS = {
+    "serving": {"graphs": 2, "buckets": [16]},
+    "md": {"steps": 20},
+    "server": {"requests": 10, "loads": [1.5]},
+    "cluster": {"requests": 30},
+    "kernels": {"reps": 1},
+}
+
+
+class TestRunnerCLI:
+    @pytest.mark.parametrize("domain", experiments.DOMAIN_ORDER)
+    def test_smoke_emits_schema_valid_document(self, domain, tmp_path):
+        out = tmp_path / "out.json"
+        proc = _run_cli(["--smoke", "--domains", domain,
+                         "--modes", "w8a8", "--out", str(out),
+                         "--work-dir", str(tmp_path / "work"),
+                         "--extra", json.dumps(_EXTRAS[domain])])
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        doc = schema.load_document(str(out))       # validates the schema
+        (r,) = doc["results"]
+        assert r["experiment"]["domain"] == domain
+        assert r["experiment"]["smoke"] is True
+        assert r["metrics"]
+
+    def test_list_enumerates_all_domains(self):
+        proc = _run_cli(["--list"])
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        for domain in experiments.DOMAIN_ORDER:
+            assert f"{domain}:" in proc.stdout
+
+    def test_diff_only_committed_numbers_exit_zero(self):
+        proc = _run_cli(["--diff-only",
+                         "--results", DOMAIN_DOCS["md"],
+                         "--baselines", experiments.BASELINES_PATH])
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "all gates clean" in proc.stdout
+
+    def test_corrupted_baseline_exits_nonzero(self, tmp_path):
+        """The acceptance demonstration: tighten one committed hard
+        bound past its measured value and the runner must exit 2."""
+        with open(BASELINES) as f:
+            corrupted = json.load(f)
+        md_fp = [fp for fp in corrupted["gates"] if fp.startswith("md:")][0]
+        gates = corrupted["gates"][md_fp]["metrics"]
+        name, gate = next((n, g) for n, g in sorted(gates.items())
+                          if g["kind"] == "hard")
+        gate["bound"] = {"le": gate["measured"] - 1.0,
+                         "ge": gate["measured"] + 1.0,
+                         "eq": gate["measured"] + 1.0}[gate["op"]]
+        bad = tmp_path / "baselines.json"
+        bad.write_text(json.dumps(corrupted))
+        proc = _run_cli(["--diff-only",
+                         "--results", DOMAIN_DOCS["md"],
+                         "--baselines", str(bad)])
+        assert proc.returncode == 2, proc.stdout + proc.stderr
+        assert "REGRESSION" in proc.stderr
+        assert name in proc.stdout

@@ -225,29 +225,27 @@ class TestMDEngineNVE:
         start == rotating the integrated endpoint, up to fp accumulation
         over the trajectory. The MDDQ-bounded analogue is covered by the
         LEE diagnostics in test_sparse_serving."""
-        from repro.core.lee import random_rotations
+        from helpers.equivariance import assert_rotation_equivariant
         sp, co = _molecule(16, seed=11)
         spec, coords, mask = pad_replicas(sp, co, 1)
         masses = np.full(spec.shape[1], 12.0, np.float32)
         eng = _engine(mode="w8a8", quant_vectors=False)
-        R = np.asarray(random_rotations(jax.random.PRNGKey(2), 1)[0],
-                       np.float32)
-        st = eng.init_state(jax.random.PRNGKey(3), spec, coords, mask,
-                            masses, 200.0)
-        v0 = np.asarray(st.veloc)
-        st1, _ = eng.run(st, spec, mask, masses, n_steps=25)
-        # rotated start: rotate coords AND the sampled velocities
-        st_r = eng.init_state(jax.random.PRNGKey(3), spec,
-                              coords @ R.T, mask, masses, 200.0)
-        st_r = st_r._replace(veloc=jnp.asarray(v0 @ R.T))
-        e_pot, forces = eng._energy_forces(jnp.asarray(spec),
-                                           jnp.asarray(coords @ R.T),
-                                           jnp.asarray(mask), st_r.nlist)
-        st_r = st_r._replace(forces=forces, e_pot=e_pot)
-        st2, _ = eng.run(st_r, spec, mask, masses, n_steps=25)
-        np.testing.assert_allclose(np.asarray(st2.coords),
-                                   np.asarray(st1.coords) @ R.T,
-                                   atol=2e-3)
+        v0 = np.asarray(eng.init_state(jax.random.PRNGKey(3), spec, coords,
+                                       mask, masses, 200.0).veloc)
+
+        def run(c, R):
+            # the sampled initial velocities co-rotate with the frame
+            st = eng.init_state(jax.random.PRNGKey(3), spec, c, mask,
+                                masses, 200.0)
+            st = st._replace(veloc=jnp.asarray(v0 @ R.T))
+            e_pot, forces = eng._energy_forces(jnp.asarray(spec),
+                                               jnp.asarray(c),
+                                               jnp.asarray(mask), st.nlist)
+            st = st._replace(forces=forces, e_pot=e_pot)
+            st, _ = eng.run(st, spec, mask, masses, n_steps=25)
+            return None, np.asarray(st.coords)
+
+        assert_rotation_equivariant(run, coords, seed=2, atol=2e-3)
 
     def test_replica_batch_matches_single(self):
         """A replica integrated inside a padded batch matches the same

@@ -7,6 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers.equivariance import (
+    assert_energy_rotation_invariant,
+    assert_energy_translation_invariant,
+    assert_permutation_equivariant,
+    assert_rotation_equivariant,
+)
 from repro.core import lee, make_codebook, random_rotation
 from repro.data.synthetic_md import make_ff, sample_dataset, sample_dataset_md
 from repro.md.nve import energy_drift_rate, init_state, nve_trajectory
@@ -27,26 +33,23 @@ class TestEquivariance:
     def test_fp32_energy_invariant(self, setup):
         data, params = setup
         cfg = dataclasses.replace(CFG, quant="none")
-        coords = data["coords"][0]
-        R = random_rotation(jax.random.PRNGKey(2))
-        e1 = so3.energy(params, cfg, data["species"], coords)
-        e2 = so3.energy(params, cfg, data["species"], coords @ R.T)
-        assert abs(float(e1 - e2)) < 1e-4
+        assert_energy_rotation_invariant(
+            lambda c: so3.energy(params, cfg, data["species"], c),
+            data["coords"][0], seed=2)
 
     def test_fp32_forces_equivariant(self, setup):
         data, params = setup
         cfg = dataclasses.replace(CFG, quant="none")
-        f = lambda c: so3.forces(params, cfg, data["species"], c)
-        R = random_rotation(jax.random.PRNGKey(3))
-        assert float(lee(f, data["coords"][0], R)) < 1e-4
+        assert_rotation_equivariant(
+            lambda c, _R: (None, so3.forces(params, cfg, data["species"], c)),
+            data["coords"][0], seed=3, atol=1e-4)
 
     def test_translation_invariance(self, setup):
         data, params = setup
         cfg = dataclasses.replace(CFG, quant="none")
-        coords = data["coords"][0]
-        e1 = so3.energy(params, cfg, data["species"], coords)
-        e2 = so3.energy(params, cfg, data["species"], coords + 5.0)
-        assert abs(float(e1 - e2)) < 1e-4
+        assert_energy_translation_invariant(
+            lambda c: so3.energy(params, cfg, data["species"], c),
+            data["coords"][0])
 
     def test_gaq_lee_bounded_by_codebook(self, setup):
         """Quantized-model LEE shrinks as the codebook refines."""
@@ -64,12 +67,10 @@ class TestEquivariance:
         """Permuting atoms permutes forces (GNN invariant)."""
         data, params = setup
         cfg = dataclasses.replace(CFG, quant="none")
-        coords = data["coords"][0]
-        perm = np.random.default_rng(0).permutation(24)
-        f1 = so3.forces(params, cfg, data["species"], coords)
-        f2 = so3.forces(params, cfg, data["species"][perm], coords[perm])
-        np.testing.assert_allclose(np.asarray(f1)[perm], np.asarray(f2),
-                                   atol=1e-4)
+        assert_permutation_equivariant(
+            lambda sp, c: so3.forces(params, cfg, jnp.asarray(sp),
+                                     jnp.asarray(c)),
+            data["species"], data["coords"][0])
 
 
 class TestConservativity:
