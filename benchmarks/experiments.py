@@ -4,7 +4,7 @@ The runner's job (ROADMAP item 5, in the shape of
 ``Liyang90/xla``'s ``experiment_runner.py``): enumerate experiment
 configs over the repo's axes —
 
-    domain:   serving | md | server | cluster | kernels
+    domain:   serving | md | server | cluster | kernels | sessions
     mode:     fp32 | w8a8 | w4a8 (or a "+"-joined sweep run in-script)
     path:     dense | sparse | auto | dense+sparse
     replicas: replica-ladder ceiling (cluster)
@@ -53,8 +53,11 @@ DOMAINS: Dict[str, Dict[str, str]] = {
                 "document": "BENCH_cluster.json"},
     "kernels": {"module": "benchmarks.kernel_bench",
                 "document": "BENCH_kernels.json"},
+    "sessions": {"module": "benchmarks.sessions_bench",
+                 "document": "BENCH_sessions.json"},
 }
-DOMAIN_ORDER = ("serving", "md", "server", "cluster", "kernels")
+DOMAIN_ORDER = ("serving", "md", "server", "cluster", "kernels",
+                "sessions")
 
 BASELINES_PATH = "BENCH_baselines.json"
 
@@ -129,9 +132,10 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
     """The default experiment suite: one config per (domain, mode) cell.
 
     Without ``--modes`` this is exactly the committed-baseline suite —
-    the five domains at their reference configurations (serving runs
+    the six domains at their reference configurations (serving runs
     dense+sparse internally, md sweeps fp32+w8a8, cluster runs the
-    1/2/4 replica ladder on 4 forced host devices). ``modes`` expands
+    1/2/4 replica ladder on 4 forced host devices, sessions runs the
+    fault-schedule trajectory on a 2-replica pool). ``modes`` expands
     the quantization axis for the per-mode domains.
     """
     domains = list(domains) if domains else list(DOMAIN_ORDER)
@@ -162,6 +166,11 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
         elif d == "kernels":
             out.append(ExperimentConfig(d, "-", "-", smoke=smoke,
                                         extra=extra))
+        elif d == "sessions":
+            for m in (modes or ["w8a8"]):
+                out.append(ExperimentConfig(d, m, "sparse", replicas=2,
+                                            devices=2, smoke=smoke,
+                                            extra=extra))
     return out
 
 

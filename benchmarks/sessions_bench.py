@@ -1,0 +1,462 @@
+"""Sessions benchmark: streaming MD through injected faults (ISSUE 7).
+
+The claim under test: a long MD trajectory run as chunked session work
+through ``repro.sessions`` keeps the cluster's robustness story intact
+*for stateful work* — the session survives an in-flight replica kill, a
+mid-trajectory rolling weight swap, a corrupted (bitflipped) newest
+checkpoint, and a full process restart, and still delivers **every
+frame exactly as an uninterrupted run of the same seed would have**:
+zero lost frames, replayed frames bit-identical to their first
+delivery, final state equal to the uninterrupted reference to <= 1e-6
+(deterministic chunk replay makes it bit-identical on CPU), and an
+energy-drift ratio vs the reference within the MD domain's existing 2x
+conservation gate (in practice ~1.00: same trajectory).
+
+Scenarios:
+
+1. **Uninterrupted reference** — one w8a8 session of ``--steps`` NVE
+   steps on a fresh 2-replica pool: steps/s, drift rate, checkpoint
+   cadence. This is the trajectory the chaos run must reproduce.
+2. **Interleaving** — a second session streams on the same pool while
+   seeded one-shot inference replays against it: one-shot p50/p99 and
+   zero lost requests required (chunks hold a replica for whole
+   ``chunk_steps`` blocks; admission must still serve both tenants).
+3. **Seeded chaos** — the acceptance scenario: the same trajectory
+   under a fault schedule of an in-flight replica kill, a rolling
+   ``swap_artifact`` (weight-identical artifact, new version tag — the
+   rolling-swap *mechanics* fire while keeping the reference
+   comparison meaningful), an engine-lock stall, and a bitflipped
+   newest checkpoint; then a simulated process death (cancel) and
+   ``SessionManager.resume_all()`` on a fresh manager. Frame-loss,
+   replay-mismatch, final-state-diff, drift-ratio, faults-engaged and
+   checkpoints-restored all gate **hard** — they are size-independent,
+   so they gate smoke runs too.
+
+The model is deliberately tiny (the MD bench owns model-scale claims;
+this bench owns robustness claims, which do not depend on feat width)
+so the full-size >= 2000-step trajectory stays tractable on the 1-core
+reference container.
+
+Run:  PYTHONPATH=src python benchmarks/sessions_bench.py
+          [--steps 2400] [--chunk-steps 200] [--replicas 2]
+          [--json BENCH_sessions.json] [--smoke]
+
+Writes a ``repro.bench/1`` document (benchmarks/schema.py); the runner
+drives the same measurement through :func:`run`.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+# devices must be forced before jax initializes (cluster_bench has the
+# full rationale); under ``benchmarks.run`` the parent already committed
+# the count into the child environment, so this is a no-op there.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+
+import jax          # noqa: E402  (after XLA_FLAGS)
+import numpy as np  # noqa: E402
+
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
+
+from benchmarks import schema                                  # noqa: E402
+from benchmarks.schema import Metric                           # noqa: E402
+from repro.cluster import ClusterConfig, ClusterPool           # noqa: E402
+from repro.md import energy_drift_rate                         # noqa: E402
+from repro.md.engine import MDConfig                           # noqa: E402
+from repro.models import so3krates as so3                      # noqa: E402
+from repro.server.artifact import save_artifact                # noqa: E402
+from repro.serving import Graph, ServeConfig                   # noqa: E402
+from repro.sessions import (FaultInjector, FaultSpec,          # noqa: E402
+                            SessionConfig, SessionManager)
+
+WAIT_S = 1200.0
+
+
+def parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="w8a8",
+                    choices=["fp32", "w8a8", "w4a8"])
+    ap.add_argument("--steps", type=int, default=2400,
+                    help="NVE steps per session (acceptance: >= 2000)")
+    ap.add_argument("--chunk-steps", type=int, default=200)
+    ap.add_argument("--record-every", type=int, default=100)
+    ap.add_argument("--checkpoint-every", type=int, default=3,
+                    help="checkpoint cadence in chunks (3 keeps the "
+                         "chaos geometry honest: with the kill point at "
+                         "chunk 7 the in-flight 8th chunk completes "
+                         "without writing a fresh checkpoint over the "
+                         "corrupted step_6, so resume must fall back)")
+    ap.add_argument("--atoms", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--oneshots", type=int, default=24,
+                    help="one-shot requests interleaved in scenario 2")
+    ap.add_argument("--feat", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--dt-fs", type=float, default=0.25)
+    ap.add_argument("--json", default="BENCH_sessions.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--workdir", default="/tmp/sessions_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: short trajectory, same hard "
+                         "zero-loss/determinism gates")
+    return ap
+
+
+def apply_smoke(args) -> None:
+    args.steps = 500
+    args.chunk_steps = 50
+    args.record_every = 25
+    args.oneshots = 8
+
+
+def _molecule(n, n_species, seed=21, density=0.1):
+    rng = np.random.default_rng(seed)
+    side = (n / density) ** (1.0 / 3.0)
+    return (rng.integers(0, n_species, n).astype(np.int32),
+            rng.uniform(0, side, size=(n, 3)).astype(np.float32),
+            np.full(n, 12.0, np.float32))
+
+
+def _drift(frames, dt_fs, record_every, n_atoms):
+    """Drift-rate fit over a session's streamed frame series (dedup by
+    global index, replica lane 0, uniform spacing assumed — sessions
+    enforce chunk/record alignment so every frame is on-grid)."""
+    by_idx = {f.index: float(np.asarray(f.e_tot)[0]) for f in frames}
+    e = np.asarray([by_idx[i] for i in sorted(by_idx)])
+    return energy_drift_rate(e, dt_fs, record_every, n_atoms)
+
+
+def collect(args) -> dict:
+    model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=4,
+                                    n_layers=args.layers, n_rbf=4,
+                                    dir_bits=6, cutoff=3.0)
+    serve = ServeConfig(mode=args.mode, bucket_sizes=(16,), max_batch=4)
+    cluster = ClusterConfig(n_replicas=args.replicas, max_batch=4,
+                            warmup=False, max_queue=64)
+    scfg = SessionConfig(
+        n_steps=args.steps, chunk_steps=args.chunk_steps,
+        record_every=args.record_every,
+        checkpoint_every=args.checkpoint_every,
+        md=MDConfig(mode=args.mode, dt_fs=args.dt_fs,
+                    record_every=args.record_every))
+    if args.steps % args.chunk_steps != 0:
+        raise SystemExit("--steps must be a multiple of --chunk-steps "
+                         "(the frame-accounting below assumes full "
+                         "chunks)")
+    if scfg.n_chunks < 10:
+        raise SystemExit(f"fault schedule needs >= 10 chunks (faults at "
+                         f"boundaries 2-6, kill point 7, and the 8th "
+                         f"chunk must be neither final nor a checkpoint "
+                         f"boundary so the corrupted step_6 stays the "
+                         f"newest checkpoint); {args.steps}/"
+                         f"{args.chunk_steps} gives {scfg.n_chunks}")
+    sp, co, masses = _molecule(args.atoms, model_cfg.n_species)
+    n_frames = scfg.n_chunks * scfg.frames_per_chunk
+    os.makedirs(args.workdir, exist_ok=True)
+    run_tag = str(int(time.time() * 1e3))
+    root = os.path.join(args.workdir, f"run_{run_tag}")
+    print(f"mode={args.mode} backend={jax.default_backend()} "
+          f"devices={len(jax.devices())} steps={args.steps} "
+          f"chunks={scfg.n_chunks}x{args.chunk_steps} "
+          f"frames={n_frames} replicas={args.replicas}")
+
+    def fresh_pool():
+        return ClusterPool.from_config(model_cfg, serve=serve,
+                                       cluster=cluster)
+
+    # 1. uninterrupted reference + 2. interleaving on the same pool -------
+    with fresh_pool() as pool:
+        mgr = SessionManager(pool, os.path.join(root, "ref"))
+        t0 = time.monotonic()
+        ref = mgr.start(sp, co, masses, config=scfg, seed=8,
+                        session_id="traj")
+        assert ref.wait(WAIT_S) == "done"
+        ref_span = time.monotonic() - t0
+        mgr.close()
+        ref_drift = _drift(ref.collected, args.dt_fs, args.record_every,
+                           args.atoms)
+        reference = {
+            "n_steps": args.steps, "span_s": ref_span,
+            "steps_per_s": args.steps / ref_span,
+            "n_frames": ref.frames_emitted,
+            "n_checkpoints": ref.n_checkpoints,
+            "drift_ev_per_atom_ps": ref_drift,
+        }
+        print(f"reference: {args.steps} steps in {ref_span:.1f}s "
+              f"({reference['steps_per_s']:.0f} steps/s), "
+              f"{ref.n_checkpoints} checkpoints, drift "
+              f"{ref_drift:.2e} eV/atom/ps")
+
+        # interleave: a second session + one-shot traffic, one pool ------
+        pool.reset_stats()
+        mgr = SessionManager(pool, os.path.join(root, "interleave"))
+        s2 = mgr.start(sp, co, masses, config=scfg, seed=9)
+        rng = np.random.default_rng(43)
+        handles = []
+        for i in range(args.oneshots):
+            handles.append(pool.submit(
+                Graph(species=sp, coords=co + 0.01 * i)))
+            time.sleep(float(rng.exponential(0.02)))
+        results = [h.result(timeout=WAIT_S) for h in handles]
+        assert s2.wait(WAIT_S) == "done"
+        mgr.close()
+        lat = np.asarray([h.latency_s for h in handles])
+        st = pool.stats()
+        interleave = {
+            "n_oneshots": len(handles),
+            "n_completed": len(results),
+            "n_lost": len(handles) - len(results),
+            "oneshot_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "oneshot_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "session_steps": s2.steps_done,
+            "chunks": st["chunks"],
+        }
+        print(f"interleave: {len(results)}/{len(handles)} one-shots "
+              f"(p99 {interleave['oneshot_p99_ms']:.1f} ms) beside a "
+              f"{s2.steps_done}-step session")
+
+    # 3. seeded chaos: kill + swap + stall + corrupt + restart ------------
+    with fresh_pool() as pool:
+        art = os.path.join(root, "weights_v2.rpa")
+        save_artifact(art, pool._replicas[0].engine)
+        schedule = [
+            FaultSpec(kind="kill_replica", at_chunk=2, mode="in_flight"),
+            FaultSpec(kind="swap_artifact", at_chunk=4,
+                      artifact_path=art, swap_warmup=False),
+            FaultSpec(kind="stall", at_chunk=5, stall_s=0.05),
+            FaultSpec(kind="corrupt_checkpoint", at_chunk=6,
+                      corruption="bitflip"),
+        ]
+        faults = FaultInjector(schedule, pool, seed=8)
+        mgr = SessionManager(pool, os.path.join(root, "chaos"),
+                             faults=faults)
+        t0 = time.monotonic()
+        # simulated process death at the end of chunk 7: the cancel is
+        # raised from on_frame — which runs on the session's driver
+        # thread — so the driver deterministically stops before chunk 8
+        # regardless of how fast chunks complete. At that point the
+        # newest checkpoint on disk is the corrupted step_6, so the
+        # resume below must detect it and fall back to step_3.
+        kill_frame = 7 * scfg.frames_per_chunk - 1
+        holder = {}
+
+        def kill_at_boundary(f):
+            if f.index >= kill_frame and "s" in holder:
+                holder["s"].cancel()
+
+        s = mgr.start(sp, co, masses, config=scfg, seed=8,
+                      session_id="traj", on_frame=kill_at_boundary)
+        holder["s"] = s
+        mgr.close()                       # joins the driver thread
+        if s.status == "failed":
+            raise SystemExit(f"FAIL: chaos session failed before the "
+                             f"kill point: {s.error!r}")
+        pre = {f.index: f for f in s.collected}
+        counts = faults.counts()
+
+        mgr2 = SessionManager(pool, os.path.join(root, "chaos"))
+        resumed = mgr2.resume_all()
+        if len(resumed) != 1:
+            raise SystemExit(f"FAIL: resume_all found {len(resumed)} "
+                             "sessions (expected 1)")
+        r = resumed[0]
+        assert r.wait(WAIT_S) == "done"
+        chaos_span = time.monotonic() - t0
+        resume_stats = mgr2.stats()
+        mgr2.close()
+        pool_stats = pool.stats()
+        post = {f.index: f for f in r.collected}
+
+    frames_lost = n_frames - len(set(pre) | set(post))
+    replay_mismatch = sum(
+        1 for i in set(pre) & set(post)
+        if not np.array_equal(np.asarray(pre[i].e_tot),
+                              np.asarray(post[i].e_tot)))
+    final_diff = max(
+        float(np.abs(np.asarray(getattr(r.state, leaf))
+                     - np.asarray(getattr(ref.state, leaf))).max())
+        for leaf in ("coords", "veloc"))
+    merged = list(pre.values()) + [f for i, f in post.items()
+                                   if i not in pre]
+    chaos_drift = _drift(merged, args.dt_fs, args.record_every,
+                         args.atoms)
+    drift_ratio = abs(chaos_drift) / max(abs(ref_drift), 1e-12)
+    versions = {f.artifact_version for f in merged}
+    faults_engaged = (counts["kill_replica"] >= 1
+                      and counts["swap_artifact"] >= 1
+                      and counts["corrupt_checkpoint"] >= 1)
+    chaos = {
+        "schedule": [{"kind": f.kind, "at_chunk": f.at_chunk,
+                      "mode": f.mode} for f in schedule],
+        "fault_counts": counts,
+        "faults_engaged": faults_engaged,
+        "n_frames_expected": n_frames,
+        "n_frames_pre": len(pre), "n_frames_post": len(post),
+        "frames_lost": frames_lost,
+        "replay_overlap": len(set(pre) & set(post)),
+        "replay_mismatch": replay_mismatch,
+        "final_state_max_diff": final_diff,
+        "drift_ev_per_atom_ps": chaos_drift,
+        "drift_ratio_chaos_vs_ref": drift_ratio,
+        "artifact_versions_seen": len(versions),
+        "checkpoints_restored": resume_stats["checkpoints_restored"],
+        "chunks_requeued": pool_stats["chunks"]["n_requeued"],
+        "chunk_retries": s.n_retries + r.n_retries,
+        "n_live_after": pool_stats["n_live"],
+        "span_s": chaos_span,
+    }
+    print(f"chaos: {counts['total']} faults, "
+          f"{len(pre)}+{len(post)} frames "
+          f"({chaos['replay_overlap']} replayed, {frames_lost} lost, "
+          f"{replay_mismatch} mismatched), final-state max|diff| "
+          f"{final_diff:.1e}, drift ratio {drift_ratio:.2f}x, "
+          f"{chaos['checkpoints_restored']} checkpoint restored")
+
+    return {
+        "benchmark": "session_fault_tolerance",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "n_cores": os.cpu_count() or 1,
+        "mode": args.mode,
+        "feat": args.feat,
+        "n_layers": args.layers,
+        "n_atoms": args.atoms,
+        "n_steps": args.steps,
+        "chunk_steps": args.chunk_steps,
+        "record_every": args.record_every,
+        "checkpoint_every": args.checkpoint_every,
+        "n_replicas": args.replicas,
+        "reference": reference,
+        "interleave": interleave,
+        "chaos": chaos,
+        "smoke": args.smoke,
+    }
+
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize the rich record into gated metrics (benchmarks.schema).
+
+    Every chaos gate is **hard** and size-independent — losing a frame,
+    diverging from the reference trajectory, or resuming without ever
+    touching a checkpoint is a correctness bug at any trajectory length,
+    so they gate smoke runs too. The drift-ratio bound is the MD
+    domain's existing 2x conservation gate. Throughput/latency rows are
+    informational (the MD and cluster benches own those claims)."""
+    ch, il, ref = record["chaos"], record["interleave"], record["reference"]
+    ms = [
+        Metric("session_frames_lost", float(ch["frames_lost"]), "count",
+               kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("session_replay_mismatch", float(ch["replay_mismatch"]),
+               "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("session_final_state_diff", ch["final_state_max_diff"],
+               "", kind="hard", gate={"op": "le", "bound": 1e-6}),
+        Metric("session_drift_ratio_chaos_vs_ref",
+               ch["drift_ratio_chaos_vs_ref"], "x", kind="hard",
+               gate={"op": "le", "bound": 2.0}),
+        Metric("session_faults_engaged",
+               1.0 if ch["faults_engaged"] else 0.0, "bool", kind="hard",
+               gate={"op": "eq", "bound": 1.0}),
+        Metric("session_checkpoints_restored",
+               float(ch["checkpoints_restored"]), "count", kind="hard",
+               gate={"op": "ge", "bound": 1.0}),
+        Metric("interleave_oneshots_lost", float(il["n_lost"]), "count",
+               kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("session_steps_per_s", ref["steps_per_s"], "steps/s"),
+        Metric("interleave_oneshot_p99_ms", il["oneshot_p99_ms"], "ms",
+               direction="lower"),
+        Metric("session_chunks_requeued", float(ch["chunks_requeued"]),
+               "count", kind="info"),
+        Metric("session_chunk_retries", float(ch["chunk_retries"]),
+               "count", kind="info"),
+        Metric("session_artifact_versions_seen",
+               float(ch["artifact_versions_seen"]), "count", kind="info"),
+    ]
+    return ms
+
+
+def check(record: dict) -> None:
+    """Standalone acceptance assertions (the runner gates via baselines
+    instead). Unlike the throughput benches these hold at smoke size,
+    so the standalone CLI asserts them on every run."""
+    ch, il = record["chaos"], record["interleave"]
+    fails = []
+    if ch["frames_lost"] != 0:
+        fails.append(f"lost {ch['frames_lost']} frames through the fault "
+                     "schedule (must be 0)")
+    if ch["replay_mismatch"] != 0:
+        fails.append(f"{ch['replay_mismatch']} replayed frames differed "
+                     "from their first delivery (replay must be "
+                     "deterministic)")
+    if ch["final_state_max_diff"] > 1e-6:
+        fails.append(f"final state diverged "
+                     f"{ch['final_state_max_diff']:.2e} from the "
+                     "uninterrupted reference (> 1e-6)")
+    if ch["drift_ratio_chaos_vs_ref"] > 2.0:
+        fails.append(f"chaos-run drift {ch['drift_ratio_chaos_vs_ref']:.2f}x "
+                     "the reference (> 2x MD conservation gate)")
+    if not ch["faults_engaged"]:
+        fails.append(f"fault schedule did not fully engage "
+                     f"({ch['fault_counts']}) — scenario did not test "
+                     "anything")
+    if ch["checkpoints_restored"] < 1:
+        fails.append("resume never restored a checkpoint")
+    if il["n_lost"] != 0:
+        fails.append(f"interleaving lost {il['n_lost']} one-shot requests")
+    if fails:
+        raise SystemExit("FAIL: " + "; ".join(fails))
+    print(f"PASS: zero frame loss and final-state diff "
+          f"{ch['final_state_max_diff']:.1e} through "
+          f"{ch['fault_counts']['total']} injected faults + restart "
+          f"(drift ratio {ch['drift_ratio_chaos_vs_ref']:.2f}x)")
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record)."""
+    args = parser().parse_args([])
+    args.json = ""
+    if config.mode in ("fp32", "w8a8", "w4a8"):
+        args.mode = config.mode
+    if config.smoke:
+        apply_smoke(args)
+    if config.replicas > 1:
+        args.replicas = config.replicas
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        result = schema.ExperimentResult(
+            experiment={"domain": "sessions", "mode": args.mode,
+                        "path": "sparse", "replicas": args.replicas,
+                        "devices": len(jax.devices()),
+                        "smoke": args.smoke},
+            fingerprint=(f"sessions:{args.mode}:sparse:r{args.replicas}"
+                         f":d{len(jax.devices())}"),
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/sessions_bench.py"))
+        print(f"\nwrote {args.json}")
+    check(record)
+
+
+if __name__ == "__main__":
+    main()

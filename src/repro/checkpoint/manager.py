@@ -1,16 +1,27 @@
 """Fault-tolerant checkpoint manager.
 
 Design for 1000+-node operation:
-  * atomic step directories: write to `step_N.tmp`, fsync, rename — a crash
-    mid-write never corrupts the latest valid checkpoint;
-  * manifest with per-array SHA-256 so a torn/bitrotten file is detected and
-    that step is skipped at restore;
-  * keep-N garbage collection;
-  * mesh-agnostic restore: arrays are saved UNSHARDED (host-gathered, numpy);
-    `restore(..., shardings=...)` device_puts onto whatever mesh the new job
-    has — elastic rescale (restart on 256 chips from a 512-chip run, or vice
-    versa) is a restore with different shardings, nothing else changes;
+  * atomic step directories: write to `step_N.tmp.*`, fsync, rename — a
+    crash mid-write never corrupts the latest valid checkpoint, and the
+    parent directory is fsynced after the rename so the *commit itself*
+    is durable across power loss, not just the file contents;
+  * manifest with per-array SHA-256 so a torn/bitrotten file is detected
+    and that step is skipped at restore — ``restore``/``restore_arrays``
+    re-verify every digest and raise :class:`CheckpointError` rather
+    than returning garbage bytes;
+  * keep-N garbage collection, which also sweeps `step_N.tmp.*` orphans
+    left behind by a hard kill mid-``save``;
+  * mesh-agnostic restore: arrays are saved UNSHARDED (host-gathered,
+    numpy); `restore(..., shardings=...)` device_puts onto whatever mesh
+    the new job has — elastic rescale (restart on 256 chips from a
+    512-chip run, or vice versa) is a restore with different shardings,
+    nothing else changes;
   * auto-resume: `latest_step()` scans for the newest *valid* step.
+
+The streaming-MD session layer (``repro.sessions``, docs/sessions.md)
+drives this manager for per-session trajectory state; its chaos tests
+corrupt checkpoints on purpose and rely on the typed-error contract
+here to fall back to the previous valid step.
 
 On a real multi-host deployment the np.save path is replaced by per-host
 shards of the process-local addressable data; the manifest/atomicity/restore
@@ -29,7 +40,18 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+__all__ = ["CheckpointError", "CheckpointManager"]
+
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^step_\d+\.tmp\.")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be restored: missing step/array, manifest
+    absent or unreadable, or an on-disk digest that no longer matches
+    the manifest (torn write, bitflip). Restore never hands back bytes
+    it cannot vouch for — callers fall back to an earlier step via
+    ``latest_step()`` instead of silently loading garbage."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -42,6 +64,16 @@ def _flatten(tree) -> Dict[str, Any]:
 
     jax.tree_util.tree_map_with_path(visit, tree)
     return flat
+
+
+def _fsync_dir(path: str) -> None:
+    """Flush a directory entry to disk (POSIX: rename durability needs
+    an fsync of the *parent*, not just the files)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 class CheckpointManager:
@@ -77,6 +109,10 @@ class CheckpointManager:
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)           # atomic on POSIX
+            # the rename only becomes durable once the parent directory
+            # entry is flushed — without this a power cut can roll the
+            # commit back even though save() returned
+            _fsync_dir(self.dir)
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
@@ -88,6 +124,16 @@ class CheckpointManager:
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
+        # sweep orphaned step_N.tmp.* dirs: a process hard-killed between
+        # mkdtemp and the rename leaks its scratch dir forever otherwise
+        # (the rename raced by a *live* save cannot be confused with an
+        # orphan — tempfile.mkdtemp names are unique, and each save
+        # renames its own tmp before ever calling _gc)
+        for name in os.listdir(self.dir):
+            if _TMP_RE.match(name):
+                full = os.path.join(self.dir, name)
+                if full != getattr(self, "_active_tmp", None):
+                    shutil.rmtree(full, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
 
@@ -95,9 +141,41 @@ class CheckpointManager:
         out = []
         for name in os.listdir(self.dir):
             m = _STEP_RE.match(name)
+            # tmp dirs (step_N.tmp.*) never match: an uncommitted save
+            # must not be offered as a restorable step
             if m:
                 out.append(int(m.group(1)))
         return sorted(out)
+
+    def _manifest(self, step: int) -> dict:
+        d = os.path.join(self.dir, f"step_{step}")
+        mpath = os.path.join(d, "manifest.json")
+        if not os.path.exists(mpath):
+            raise CheckpointError(
+                f"step {step}: no checkpoint at {d} (or manifest missing)")
+        try:
+            with open(mpath) as f:
+                return json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointError(
+                f"step {step}: unreadable manifest: {e}") from e
+
+    def _verified_bytes(self, step: int, key: str, meta: dict) -> str:
+        """Path of an array file whose on-disk SHA-256 matches the
+        manifest; :class:`CheckpointError` otherwise."""
+        d = os.path.join(self.dir, f"step_{step}")
+        fpath = os.path.join(d, meta["file"])
+        try:
+            with open(fpath, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+        except OSError as e:
+            raise CheckpointError(
+                f"step {step}: array {key!r} unreadable: {e}") from e
+        if digest != meta["sha256"]:
+            raise CheckpointError(
+                f"step {step}: array {key!r} fails its SHA-256 "
+                f"(torn write or bitflip) — refusing to restore")
+        return fpath
 
     def is_valid(self, step: int) -> bool:
         d = os.path.join(self.dir, f"step_{step}")
@@ -107,12 +185,9 @@ class CheckpointManager:
         try:
             manifest = json.load(open(mpath))
             for key, meta in manifest["arrays"].items():
-                fpath = os.path.join(d, meta["file"])
-                with open(fpath, "rb") as f:
-                    if hashlib.sha256(f.read()).hexdigest() != meta["sha256"]:
-                        return False
+                self._verified_bytes(step, key, meta)
             return True
-        except Exception:
+        except (CheckpointError, Exception):
             return False
 
     def latest_step(self) -> Optional[int]:
@@ -121,18 +196,40 @@ class CheckpointManager:
                 return s
         return None
 
+    def restore_arrays(self, step: int) -> Dict[str, np.ndarray]:
+        """Structure-free restore: every array in the manifest, keyed by
+        its flattened tree path, digest-verified. This is the resume path
+        for callers that rebuild their own containers from known keys
+        (``repro.sessions`` restarting after a process death has no live
+        `like` tree to mirror)."""
+        manifest = self._manifest(step)
+        out = {}
+        for key, meta in manifest["arrays"].items():
+            out[key] = np.load(self._verified_bytes(step, key, meta))
+        return out
+
     def restore(self, step: int, like, shardings=None):
         """Restore into the structure of `like`. If `shardings` (same tree
-        structure) is given, arrays are placed with those shardings — this is
-        the elastic-rescale path."""
-        d = os.path.join(self.dir, f"step_{step}")
-        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        structure) is given, arrays are placed with those shardings — this
+        is the elastic-rescale path.
+
+        Every array is digest-verified against the manifest before use;
+        a mismatch, a truncated file, or a key `like` expects that the
+        manifest lacks raises :class:`CheckpointError` (a torn file must
+        never restore silently as garbage — fall back to an earlier
+        ``latest_step()``)."""
+        manifest = self._manifest(step)
         flat_like = _flatten(like)
         flat_sh = _flatten(shardings) if shardings is not None else {}
         loaded = {}
         for key in flat_like:
-            meta = manifest["arrays"][key]
-            arr = np.load(os.path.join(d, meta["file"]))
+            meta = manifest["arrays"].get(key)
+            if meta is None:
+                raise CheckpointError(
+                    f"step {step}: array {key!r} missing from the "
+                    f"manifest — checkpoint does not match the requested "
+                    f"structure")
+            arr = np.load(self._verified_bytes(step, key, meta))
             if key in flat_sh and flat_sh[key] is not None:
                 loaded[key] = jax.device_put(arr, flat_sh[key])
             else:
@@ -144,5 +241,4 @@ class CheckpointManager:
             treedef, [loaded[k] for k in keys])
 
     def extra(self, step: int) -> dict:
-        d = os.path.join(self.dir, f"step_{step}")
-        return json.load(open(os.path.join(d, "manifest.json")))["extra"]
+        return self._manifest(step)["extra"]

@@ -57,7 +57,7 @@ from repro.server.artifact import (ArtifactError, ensure_mode_matches,
 from repro.server.scheduler import (RequestHandle, SchedulerClosed,
                                     SchedulerConfig, SchedulerOverloaded)
 from repro.server.stats import flush_summary
-from repro.cluster.replica import Replica, ReplicaFailed
+from repro.cluster.replica import ChunkHandle, Replica, ReplicaFailed
 
 __all__ = ["ClusterConfig", "ClusterPool", "pick_devices"]
 
@@ -138,7 +138,13 @@ class ClusterPool:
         self._n_shed = 0
         self._n_requeued = 0
         self._n_failures = 0
+        self._n_chunks_routed = 0
+        self._n_chunks_requeued = 0
         self._routed_per_replica: Dict[int, int] = {}
+        # extra stats() sections registered by higher layers (the
+        # session manager attaches its recovery telemetry here so one
+        # pool.stats() call shows the whole serving+sessions picture)
+        self._stats_sources: Dict[str, object] = {}
         self._retry_cache = (0.0, 0.0)   # (monotonic stamp, estimate)
         # static bucket -> home replica map (affinity tie-break): spread
         # the ladder round-robin so each replica "owns" some shape classes
@@ -235,6 +241,55 @@ class ClusterPool:
         raise SchedulerOverloaded(
             "no replica admitted the request (queues filled while "
             "routing)", self._retry_after())
+
+    def submit_chunk(self, fn, bucket_capacity: int,
+                     preferred_replica: Optional[int] = None,
+                     session_id: str = "",
+                     chunk_idx: int = 0) -> ChunkHandle:
+        """Route one session chunk (``fn(engine) -> result``) to a
+        replica, under the same admission/affinity policy as one-shot
+        traffic. ``bucket_capacity`` must be on the pool's bucket ladder
+        (the session molecule's shape class — chunks share batch-affinity
+        state with same-shape inference). ``preferred_replica`` is a
+        stickiness hint: the replica that ran the previous chunk keeps
+        the trajectory when it is live and below the admission bound,
+        so device-resident arrays and compiled segment shapes stay warm;
+        routing silently falls back to JSQ when it is not. Raises
+        :class:`SchedulerOverloaded`/:class:`SchedulerClosed` exactly
+        like :meth:`submit` — the session manager's typed
+        retry-with-backoff handles sheds."""
+        if bucket_capacity not in self._home:
+            raise ValueError(
+                f"bucket_capacity {bucket_capacity} is not on the pool's "
+                f"ladder {sorted(self._home)}")
+        handle = ChunkHandle(fn, time.monotonic(),
+                             bucket_capacity=bucket_capacity,
+                             session_id=session_id, chunk_idx=chunk_idx)
+        mq = self.cluster.max_queue
+        if preferred_replica is not None:
+            for rep in self._replicas:
+                if (rep.replica_id == preferred_replica and rep.accepting
+                        and (mq is None or rep.depth() < mq)
+                        and rep.try_submit(handle)):
+                    with self._lock:
+                        self._n_chunks_routed += 1
+                        self._routed_per_replica[rep.replica_id] = (
+                            self._routed_per_replica.get(rep.replica_id, 0)
+                            + 1)
+                    return handle
+        for _ in range(2 * len(self._replicas)):
+            rep = self._route(handle.bucket_capacity)
+            if rep.try_submit(handle):
+                with self._lock:
+                    self._n_chunks_routed += 1
+                    self._routed_per_replica[rep.replica_id] = (
+                        self._routed_per_replica.get(rep.replica_id, 0) + 1)
+                return handle
+        with self._lock:
+            self._n_shed += 1
+        raise SchedulerOverloaded(
+            "no replica admitted the chunk (queues filled while routing)",
+            self._retry_after())
 
     def infer(self, graphs: Sequence[Graph],
               timeout: Optional[float] = None) -> List[MoleculeResult]:
@@ -343,6 +398,8 @@ class ClusterPool:
             if placed:
                 with self._lock:
                     self._n_requeued += 1
+                    if isinstance(h, ChunkHandle):
+                        self._n_chunks_requeued += 1
             else:
                 h._resolve(error=error, replica_id=rep.replica_id)
 
@@ -412,8 +469,18 @@ class ClusterPool:
             self._n_shed = 0
             self._n_requeued = 0
             self._n_failures = 0
+            self._n_chunks_routed = 0
+            self._n_chunks_requeued = 0
             self._routed_per_replica = {}
             self._retry_cache = (0.0, 0.0)
+
+    def attach_stats_source(self, name: str, fn) -> None:
+        """Register an extra ``stats()`` section: ``fn()`` must return a
+        JSON-able dict, reported under ``name``. ``repro.sessions``
+        attaches its session/fault/checkpoint telemetry here so
+        operators (and the sessions bench) read one merged snapshot."""
+        with self._lock:
+            self._stats_sources[name] = fn
 
     def stats(self) -> Dict[str, object]:
         """Cluster-wide snapshot: per-replica health/heartbeat, router
@@ -430,10 +497,13 @@ class ClusterPool:
                 "n_shed": self._n_shed,
                 "n_requeued": self._n_requeued,
                 "n_failures": self._n_failures,
+                "n_chunks_routed": self._n_chunks_routed,
+                "n_chunks_requeued": self._n_chunks_requeued,
                 "routed_per_replica": {
                     str(k): v for k, v in
                     sorted(self._routed_per_replica.items())},
             }
+            sources = dict(self._stats_sources)
         dispatch: Dict[str, int] = {}
         for r in self._replicas:
             for k, v in r.engine.stats_snapshot().items():
@@ -448,6 +518,19 @@ class ClusterPool:
             "replicas": replicas,
             "router": router,
         }
+        out["chunks"] = {
+            "n_routed": router["n_chunks_routed"],
+            "n_requeued": router["n_chunks_requeued"],
+            "n_completed": sum(r["n_chunks_completed"] for r in replicas),
+            "n_errors": sum(r["n_chunk_errors"] for r in replicas),
+            "n_stalls_injected": sum(r["n_stalls_injected"]
+                                     for r in replicas),
+        }
+        for name, fn in sources.items():
+            try:
+                out[name] = fn()
+            except Exception as e:   # a sick stats source must not
+                out[name] = {"error": repr(e)}  # break the heartbeat
         out.update(flush_summary(flushes))
         out["engine_dispatch"] = dispatch
         return out

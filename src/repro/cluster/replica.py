@@ -34,7 +34,15 @@ failure and upgrade surface:
 * **heartbeat telemetry** — ``snapshot()`` reports liveness, queue
   depth, completions, the serving artifact version, and the age of the
   last completed flush (the heartbeat the pool surfaces in
-  ``stats()``).
+  ``stats()``);
+* **session chunks** — a :class:`ChunkHandle` (one MD ``lax.scan``
+  segment from ``repro.sessions``) queues beside one-shot traffic and
+  runs on the worker thread under the same engine lock as a flush.
+  Flushes go first: latency-sensitive batches preempt bulk MD work at
+  every chunk boundary. Queued chunks fail over with the one-shot
+  orphans; an in-flight ``kill(mode="in_flight")`` fails whichever work
+  was picked — flush or chunk. ``inject_stall`` adds the slow-flush
+  fault the session chaos harness schedules.
 
 Locking: the replica's condition variable guards its queue and flags
 (never held during engine work); ``_engine_lock`` is held for the
@@ -49,18 +57,48 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.serving.engine import QuantizedEngine
 from repro.server.scheduler import BatchQueue, RequestHandle, SchedulerConfig
 from repro.server.stats import FlushRecord
 
-__all__ = ["Replica", "ReplicaFailed"]
+__all__ = ["ChunkHandle", "Replica", "ReplicaFailed"]
 
 
 class ReplicaFailed(RuntimeError):
     """A replica died (injected kill or engine failure). Requests that
     exhausted their failover requeue budget resolve with this error."""
+
+
+class ChunkHandle(RequestHandle):
+    """A unit of *session* work: an opaque ``fn(engine) -> result``
+    closure (in practice one MD ``lax.scan`` segment from
+    ``repro.sessions``) that a replica's worker runs on its pinned
+    engine, under the same ``_engine_lock`` as a flush — so a rolling
+    ``swap_engine`` waits for an in-flight chunk and every later chunk
+    sees the post-swap engine.
+
+    It rides the existing :class:`RequestHandle` future/failover
+    machinery: ``bucket_capacity`` is the session molecule's shape
+    class (chunks share JSQ + affinity routing with same-shape one-shot
+    traffic), ``n_requeues`` counts failovers, and a dying replica
+    hands queued chunks to the pool's ``on_failure`` exactly like
+    one-shot requests. Unlike a flush, a chunk that raises resolves the
+    error to *this* handle only — the session manager, which holds the
+    authoritative pre-chunk state, decides whether to re-submit.
+    """
+
+    __slots__ = ("fn", "session_id", "chunk_idx")
+
+    def __init__(self, fn: Callable[[QuantizedEngine], Any],
+                 t_submit: float, bucket_capacity: int = 0,
+                 session_id: str = "", chunk_idx: int = 0):
+        super().__init__(None, t_submit, bucket_capacity)
+        self.fn = fn
+        self.session_id = session_id
+        self.chunk_idx = chunk_idx
 
 
 class Replica:
@@ -82,6 +120,7 @@ class Replica:
         self.warmup_s = 0.0
         self.ready = threading.Event()      # set once warmup finished (or failed)
         self._queue = BatchQueue(engine.serve.buckets(), config)
+        self._chunks: Deque[ChunkHandle] = deque()   # session segments
         self._lock = threading.Condition()
         self._engine_lock = threading.Lock()  # held per flush and per swap
         self._accepting = True
@@ -93,6 +132,11 @@ class Replica:
         self._flushes: List[FlushRecord] = []
         self._n_completed = 0
         self._n_errors = 0              # flush errors resolved to handles
+        self._n_chunks_completed = 0
+        self._n_chunk_errors = 0
+        self._chunk_service_s = 0.0
+        self._stall_s = 0.0             # injected slow-flush fault (one-shot)
+        self._n_stalls_injected = 0
         self._consecutive_errors = 0
         self._last_beat = time.monotonic()
         self._worker = threading.Thread(
@@ -112,26 +156,44 @@ class Replica:
             return self._accepting and not self._closing
 
     def depth(self) -> int:
+        """Queued one-shot requests + queued session chunks: chunks are
+        real load, so JSQ routing and the admission bound must see them."""
         with self._lock:
-            return self._queue.depth()
+            return self._queue.depth() + len(self._chunks)
 
     def depth_of(self, capacity: int) -> int:
         with self._lock:
             return self._queue.depth_of(capacity)
 
     def try_submit(self, handle: RequestHandle, force: bool = False) -> bool:
-        """Admit one routed handle. Returns False — so the router picks
+        """Admit one routed handle (one-shot request or session
+        :class:`ChunkHandle`). Returns False — so the router picks
         another replica — when this one has died, is closing, or (unless
         ``force``, the failover-requeue path: already-admitted requests
-        are never shed) its queue is at the bound."""
+        are never shed) its total depth is at the bound."""
         with self._lock:
             if not self._accepting or self._closing:
                 return False
-            if not force and self._queue.is_full():
+            mq = self.config.max_queue
+            if (not force and mq is not None
+                    and self._queue.depth() + len(self._chunks) >= mq):
                 return False
-            self._queue.append(handle)
+            if isinstance(handle, ChunkHandle):
+                self._chunks.append(handle)
+            else:
+                self._queue.append(handle)
             self._lock.notify()
             return True
+
+    def inject_stall(self, seconds: float) -> None:
+        """Fault injection: the next unit of engine work (flush or
+        chunk) sleeps ``seconds`` while holding the engine lock — the
+        'slow flush' failure mode (GC pause, thermal throttle, a
+        straggler device) that delays everything behind it without
+        killing anything."""
+        with self._lock:
+            self._stall_s = float(seconds)
+            self._n_stalls_injected += 1
 
     def swap_engine(self, new_engine: QuantizedEngine) -> float:
         """Exchange the serving engine. Blocks until the in-flight flush
@@ -205,9 +267,14 @@ class Replica:
                           is not None else "default",
                 "alive": self._accepting,
                 "artifact_version": self.engine.artifact_version,
-                "queue_depth": self._queue.depth(),
+                "queue_depth": self._queue.depth() + len(self._chunks),
+                "chunk_depth": len(self._chunks),
                 "n_completed": self._n_completed,
                 "n_errors": self._n_errors,
+                "n_chunks_completed": self._n_chunks_completed,
+                "n_chunk_errors": self._n_chunk_errors,
+                "chunk_service_s": self._chunk_service_s,
+                "n_stalls_injected": self._n_stalls_injected,
                 "n_flushes": len(self._flushes),
                 "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
                 "warmup_s": self.warmup_s,
@@ -222,8 +289,54 @@ class Replica:
         Called from the worker thread with no locks held."""
         with self._lock:
             self._accepting = False
-            orphans = in_flight + self._queue.drain_all()
+            orphans = in_flight + self._queue.drain_all() + list(self._chunks)
+            self._chunks.clear()
         self._on_failure(self, orphans, error)
+
+    def _take_stall(self) -> float:
+        with self._lock:
+            s, self._stall_s = self._stall_s, 0.0
+            return s
+
+    def _run_chunk(self, chunk: ChunkHandle) -> bool:
+        """Execute one session chunk on the worker thread. Returns False
+        when the replica declared itself broken (a run of consecutive
+        errors) and the worker must exit.
+
+        A chunk exception resolves the error to the chunk's own handle —
+        never a blind pool requeue: the session manager holds the
+        authoritative pre-chunk state and decides whether re-running is
+        safe (it always is, chunks are pure functions of that state, but
+        the *decision* belongs to the layer that can also checkpoint)."""
+        t0 = time.monotonic()
+        chunk_error = None
+        stall = self._take_stall()
+        with self._engine_lock:   # swaps wait for the chunk, not v.v.
+            if stall:
+                time.sleep(stall)
+            engine = self.engine
+            try:
+                result = chunk.fn(engine)
+            except BaseException as e:
+                chunk_error = e
+        if chunk_error is not None:
+            chunk._resolve(error=chunk_error, replica_id=self.replica_id)
+            with self._lock:
+                self._n_chunk_errors += 1
+                self._consecutive_errors += 1
+                broken = (self._consecutive_errors
+                          >= self.MAX_CONSECUTIVE_ERRORS)
+            if broken:
+                self._die([], chunk_error)
+                return False
+            return True
+        with self._lock:
+            self._n_chunks_completed += 1
+            self._chunk_service_s += time.monotonic() - t0
+            self._consecutive_errors = 0
+            self._last_beat = time.monotonic()
+        chunk._resolve(result=result, replica_id=self.replica_id)
+        return True
 
     def _run(self):
         try:
@@ -239,6 +352,7 @@ class Replica:
 
         while True:
             in_flight: List[RequestHandle] = []
+            chunk: Optional[ChunkHandle] = None
             with self._lock:
                 while True:
                     now = time.monotonic()
@@ -252,27 +366,44 @@ class Replica:
                                                     drain=self._closing)
                     if picked is not None:
                         break
+                    # flush-first, then chunks: latency-sensitive
+                    # one-shot batches preempt bulk MD work at every
+                    # chunk boundary (the chunk length is the session
+                    # layer's latency/throughput knob — see
+                    # docs/sessions.md)
+                    if self._chunks:
+                        chunk = self._chunks.popleft()
+                        break
                     if self._closing and depth == 0:
                         return
                     ddl = self._queue.oldest_deadline()
                     self._lock.wait(
                         None if ddl is None else max(ddl - now, 0))
-                if picked is not None and self._fail_next_flush:
-                    # injected in-flight failure: these handles were
-                    # popped (in flight) when the replica died
+                if (picked is not None or chunk is not None) \
+                        and self._fail_next_flush:
+                    # injected in-flight failure: this work was popped
+                    # (in flight) when the replica died
                     err = self._fail_error or ReplicaFailed(
                         f"replica {self.replica_id} failed in flight")
-                    in_flight = picked[1]
+                    in_flight = picked[1] if picked is not None else [chunk]
                     picked = None
+                    chunk = None
                     self._accepting = False
-            if picked is None:
+            if picked is None and chunk is None:
                 self._die(in_flight, err)
                 return
+            if chunk is not None:
+                if not self._run_chunk(chunk):
+                    return
+                continue
             cap, handles, reason = picked
             wait_s = time.monotonic() - handles[0].t_submit
             t0 = time.monotonic()
             flush_error = None
+            stall = self._take_stall()
             with self._engine_lock:   # swap waits for the flush, not v.v.
+                if stall:
+                    time.sleep(stall)
                 engine = self.engine
                 try:
                     results = engine.infer_batch([h.graph for h in handles])

@@ -35,6 +35,10 @@ mid-replay:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.serve --workload so3 --server \
       --replicas 4 --rate 60 --requests 300 [--swap-artifact v2.npz]
+
+`--md-session N` additionally streams a checkpointed N-step MD session
+through the same pool beside the one-shot traffic (`repro.sessions`,
+docs/sessions.md).
 """
 from __future__ import annotations
 
@@ -206,7 +210,7 @@ def run_so3_server(engine, args) -> None:
     traffic = make_traffic(cfg)
     max_batch = min(args.sched_batch, args.max_batch)
 
-    if args.replicas > 1 or args.swap_artifact:
+    if args.replicas > 1 or args.swap_artifact or args.md_session:
         from repro.cluster import ClusterConfig, ClusterPool
         cluster = ClusterConfig(n_replicas=args.replicas,
                                 max_batch=max_batch,
@@ -218,12 +222,16 @@ def run_so3_server(engine, args) -> None:
             artifact_version=engine.artifact_version)
         swap_report = {}
         swap_thread = None
+        session = session_mgr = None
         with pool:
             s0 = pool.stats()
             print(f"cluster: {pool.n_replicas} replicas on "
                   f"{[r['device'] for r in s0['replicas']]}, parallel "
                   f"warmup {s0['warmup_s']:.2f}s")
             pool.reset_stats()
+            if args.md_session:
+                session, session_mgr = _start_md_session(pool, engine,
+                                                         args)
             if args.swap_artifact:
                 # fire the rolling swap halfway through the replay; a
                 # failure must surface after the replay, not vanish into
@@ -248,8 +256,18 @@ def run_so3_server(engine, args) -> None:
                     print("replay done; waiting for the rolling swap to "
                           "finish...")
                 swap_thread.join()
+            if session is not None:
+                session.wait()
+                session_mgr.close()
             stats = pool.stats()
         _print_server_summary(res, stats, args, max_batch)
+        if session is not None:
+            print(f"md session: {session.steps_done} steps in "
+                  f"{len(session.collected)} frames beside the replay, "
+                  f"{session.n_checkpoints} checkpoints "
+                  f"({session.checkpoint_dir}), "
+                  f"artifact versions "
+                  f"{sorted({f.artifact_version for f in session.collected})}")
         print(f"routing: {stats['router']['routed_per_replica']} "
               f"(shed {stats['n_shed']}, requeued "
               f"{stats['router']['n_requeued']})")
@@ -275,6 +293,41 @@ def run_so3_server(engine, args) -> None:
         res = run_open_loop(sched, traffic, rate_rps=args.rate)
         stats = sched.stats()
     _print_server_summary(res, stats, args, max_batch)
+
+
+def _start_md_session(pool, engine, args):
+    """`--md-session N`: stream a checkpointed MD trajectory through the
+    pool while the one-shot replay runs (repro.sessions,
+    docs/sessions.md). Returns (session, manager); the caller waits and
+    closes after the replay so both tenants share the replicas."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.md.engine import MDConfig
+    from repro.sessions import SessionConfig, SessionManager
+
+    n = max(args.min_atoms, (args.min_atoms + args.max_atoms) // 2)
+    rng = np.random.default_rng(args.seed + 1)
+    side = (n / (args.density or 0.1)) ** (1.0 / 3.0)
+    species = rng.integers(0, engine.model_cfg.n_species,
+                           n).astype(np.int32)
+    coords = rng.uniform(0, side, size=(n, 3)).astype(np.float32)
+    masses = np.full(n, 12.0, np.float32)
+    record = min(50, args.md_session)
+    chunk = 2 * record if 2 * record <= args.md_session else record
+    scfg = SessionConfig(
+        n_steps=args.md_session, chunk_steps=chunk, record_every=record,
+        checkpoint_every=3,
+        md=MDConfig(mode=engine.serve.mode, record_every=record))
+    root = tempfile.mkdtemp(prefix="serve_md_session_")
+    mgr = SessionManager(pool, root)
+    session = mgr.start(species, coords, masses, config=scfg,
+                        seed=args.seed)
+    print(f"md session: {args.md_session} NVE steps ({n} atoms, "
+          f"{scfg.n_chunks} chunks of {chunk}) streaming beside the "
+          f"replay; checkpoints -> {session.checkpoint_dir}")
+    return session, mgr
 
 
 def _print_server_summary(res, stats, args, max_batch) -> None:
@@ -356,6 +409,12 @@ def main():
                     help="rolling zero-downtime weight swap to this "
                          "packed artifact halfway through the --server "
                          "replay (implies the cluster path)")
+    ap.add_argument("--md-session", type=int, default=0, metavar="STEPS",
+                    help="also stream a checkpointed MD session of this "
+                         "many NVE steps through the pool beside the "
+                         "one-shot traffic (repro.sessions, "
+                         "docs/sessions.md; --server, implies the "
+                         "cluster path)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifact",
                     help="cold-start the engine from a packed quantized "

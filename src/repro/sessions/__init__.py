@@ -1,0 +1,10 @@
+"""Streaming MD sessions: long fault-tolerant trajectories served
+through the cluster beside one-shot inference. See docs/sessions.md."""
+from repro.sessions.faults import (FaultInjector, FaultSpec,
+                                   corrupt_checkpoint, seeded_schedule)
+from repro.sessions.manager import (Frame, MDSession, SessionConfig,
+                                    SessionManager)
+
+__all__ = ["Frame", "MDSession", "SessionConfig", "SessionManager",
+           "FaultInjector", "FaultSpec", "corrupt_checkpoint",
+           "seeded_schedule"]

@@ -1,0 +1,180 @@
+"""Tests for the fault-tolerant checkpoint manager (ISSUE 7).
+
+Covers: save/restore round-trip (structure-preserving and the
+structure-free ``restore_arrays``), digest verification at restore
+(bitflip and torn-write rejection with the typed ``CheckpointError``),
+keep-N garbage collection, ``latest_step()`` falling back past a
+corrupted newest step, the crash-orphan ``step_N.tmp.*`` sweep, and
+manifest ``extra`` round-trip.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "coords": rng.normal(size=(2, 8, 3)).astype(np.float32),
+        "veloc": rng.normal(size=(2, 8, 3)).astype(np.float32),
+        "nl": {"senders": rng.integers(0, 16, 64).astype(np.int32),
+               "mask": rng.integers(0, 2, 64).astype(bool),
+               "overflow": np.asarray(False)},
+        "step": np.int64(7),
+    }
+
+
+def _flip_byte(path, offset=16):
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def _array_files(cm, step):
+    return sorted(glob.glob(os.path.join(cm.dir, f"step_{step}", "*.npy")))
+
+
+class TestRoundTrip:
+    def test_save_restore_tree(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep=3)
+        tree = _tree()
+        cm.save(1, tree, extra={"chunks_done": 1, "mode": "w8a8"})
+        out = cm.restore(1, like=tree)
+        for key in ("coords", "veloc"):
+            np.testing.assert_array_equal(np.asarray(out[key]), tree[key])
+        np.testing.assert_array_equal(np.asarray(out["nl"]["senders"]),
+                                      tree["nl"]["senders"])
+        assert int(np.asarray(out["step"])) == 7
+        assert cm.extra(1) == {"chunks_done": 1, "mode": "w8a8"}
+
+    def test_restore_arrays_structure_free(self, tmp_path):
+        """The resume-after-process-death path: no live `like` tree,
+        arrays come back keyed by flattened path."""
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(2, _tree(1))
+        arrays = cm.restore_arrays(2)
+        assert set(arrays) == {"coords", "veloc", "nl/senders", "nl/mask",
+                               "nl/overflow", "step"}
+        np.testing.assert_array_equal(arrays["coords"], _tree(1)["coords"])
+
+    def test_missing_step_raises_typed(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        with pytest.raises(CheckpointError, match="no checkpoint"):
+            cm.restore(5, like=_tree())
+        with pytest.raises(CheckpointError):
+            cm.restore_arrays(5)
+
+    def test_missing_key_raises_typed(self, tmp_path):
+        """A `like` tree the manifest can't satisfy must refuse loudly,
+        not return a partial tree."""
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, _tree())
+        with pytest.raises(CheckpointError, match="missing from the"):
+            cm.restore(1, like={"coords": np.zeros(1), "nope": np.zeros(1)})
+
+
+class TestCorruptionRejection:
+    def test_bitflip_rejected_at_restore(self, tmp_path):
+        """The satellite bug: restore used to trust bytes is_valid()
+        would reject. A flipped byte must raise CheckpointError."""
+        cm = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        cm.save(1, tree)
+        _flip_byte(_array_files(cm, 1)[0])
+        assert not cm.is_valid(1)
+        with pytest.raises(CheckpointError, match="SHA-256"):
+            cm.restore(1, like=tree)
+        with pytest.raises(CheckpointError, match="SHA-256"):
+            cm.restore_arrays(1)
+
+    def test_torn_write_rejected(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        cm.save(1, tree)
+        f = _array_files(cm, 1)[-1]
+        with open(f, "r+b") as fh:
+            fh.truncate(os.path.getsize(f) // 2)
+        with pytest.raises(CheckpointError):
+            cm.restore(1, like=tree)
+
+    def test_unreadable_manifest_rejected(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, _tree())
+        with open(os.path.join(cm.dir, "step_1", "manifest.json"), "w") as f:
+            f.write("{not json")
+        assert not cm.is_valid(1)
+        with pytest.raises(CheckpointError, match="manifest"):
+            cm.restore(1, like=_tree())
+
+    def test_latest_step_skips_corrupted_newest(self, tmp_path):
+        """Auto-resume must land on the newest *valid* step — a torn
+        newest checkpoint falls back to the previous one."""
+        cm = CheckpointManager(str(tmp_path), keep=5)
+        tree = _tree()
+        for s in (1, 2, 3):
+            cm.save(s, tree)
+        _flip_byte(_array_files(cm, 3)[0])
+        assert cm.all_steps() == [1, 2, 3]
+        assert cm.latest_step() == 2
+        out = cm.restore(cm.latest_step(), like=tree)
+        np.testing.assert_array_equal(np.asarray(out["coords"]),
+                                      tree["coords"])
+
+
+class TestGC:
+    def test_keep_n(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep=2)
+        for s in range(1, 6):
+            cm.save(s, _tree(s))
+        assert cm.all_steps() == [4, 5]
+
+    def test_orphan_tmp_swept_and_ignored(self, tmp_path):
+        """A hard kill between mkdtemp and rename leaks step_N.tmp.* —
+        all_steps()/latest_step() must never offer it, and the next
+        save's GC must remove it from disk."""
+        cm = CheckpointManager(str(tmp_path), keep=2)
+        cm.save(1, _tree())
+        orphan = os.path.join(cm.dir, "step_7.tmp.deadbeef")
+        os.makedirs(orphan)
+        with open(os.path.join(orphan, "junk.npy"), "wb") as f:
+            f.write(b"partial")
+        assert cm.all_steps() == [1]        # tmp never listed
+        assert cm.latest_step() == 1
+        cm.save(2, _tree())
+        assert not os.path.exists(orphan)   # swept by _gc
+        assert cm.all_steps() == [1, 2]
+
+    def test_failed_save_leaves_no_tmp(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+
+        class Boom:
+            def __array__(self):
+                raise RuntimeError("device fell over")
+
+        with pytest.raises(RuntimeError, match="fell over"):
+            cm.save(1, {"bad": Boom()})
+        assert [n for n in os.listdir(cm.dir) if "tmp" in n] == []
+        assert cm.all_steps() == []
+
+    def test_overwrite_same_step(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, _tree(0))
+        cm.save(1, _tree(9))
+        out = cm.restore_arrays(1)
+        np.testing.assert_array_equal(out["coords"], _tree(9)["coords"])
+
+    def test_manifest_records_shapes_and_hashes(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(3, _tree())
+        with open(os.path.join(cm.dir, "step_3", "manifest.json")) as f:
+            manifest = json.load(f)
+        meta = manifest["arrays"]["coords"]
+        assert meta["shape"] == [2, 8, 3] and meta["dtype"] == "float32"
+        assert len(meta["sha256"]) == 64

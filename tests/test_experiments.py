@@ -195,6 +195,10 @@ _EXTRAS = {
     "server": {"requests": 10, "loads": [1.5]},
     "cluster": {"requests": 30},
     "kernels": {"reps": 1},
+    # 10 x 20-step chunks: the smallest trajectory the fixed fault
+    # schedule (boundaries 2-6, kill point 7) can run against
+    "sessions": {"steps": 200, "chunk_steps": 20, "record_every": 20,
+                 "oneshots": 2},
 }
 
 
