@@ -55,9 +55,11 @@ DOMAINS: Dict[str, Dict[str, str]] = {
                 "document": "BENCH_kernels.json"},
     "sessions": {"module": "benchmarks.sessions_bench",
                  "document": "BENCH_sessions.json"},
+    "guardrails": {"module": "benchmarks.guardrails_bench",
+                   "document": "BENCH_guardrails.json"},
 }
 DOMAIN_ORDER = ("serving", "md", "server", "cluster", "kernels",
-                "sessions")
+                "sessions", "guardrails")
 
 BASELINES_PATH = "BENCH_baselines.json"
 
@@ -132,11 +134,12 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
     """The default experiment suite: one config per (domain, mode) cell.
 
     Without ``--modes`` this is exactly the committed-baseline suite —
-    the six domains at their reference configurations (serving runs
+    the seven domains at their reference configurations (serving runs
     dense+sparse internally, md sweeps fp32+w8a8, cluster runs the
     1/2/4 replica ladder on 4 forced host devices, sessions runs the
-    fault-schedule trajectory on a 2-replica pool). ``modes`` expands
-    the quantization axis for the per-mode domains.
+    fault-schedule trajectory on a 2-replica pool, guardrails runs the
+    poison/stall/drift chaos suite on 4 forced host devices). ``modes``
+    expands the quantization axis for the per-mode domains.
     """
     domains = list(domains) if domains else list(DOMAIN_ORDER)
     unknown = [d for d in domains if d not in DOMAINS]
@@ -170,6 +173,13 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
             for m in (modes or ["w8a8"]):
                 out.append(ExperimentConfig(d, m, "sparse", replicas=2,
                                             devices=2, smoke=smoke,
+                                            extra=extra))
+        elif d == "guardrails":
+            # w4a8 primary tier (escalates to w8a8); poison needs the
+            # dense path — see benchmarks/guardrails_bench.py
+            for m in (modes or ["w4a8"]):
+                out.append(ExperimentConfig(d, m, "dense", replicas=4,
+                                            devices=4, smoke=smoke,
                                             extra=extra))
     return out
 

@@ -16,6 +16,12 @@ fans traffic out across them:
 * :class:`Replica` / :class:`ReplicaFailed` — the per-replica worker
   and its failure error.
 
+PR 8 adds the runtime health layer (docs/guardrails.md): mixed-precision
+fleets (``ClusterPool.from_tiers``) whose flagged results transparently
+re-run one tier up, a flagged-rate circuit breaker + stall watchdog that
+quarantine and cold-restart sick replicas, and typed per-request
+deadlines (``RequestHandle.result(timeout_s=...)``).
+
 On CPU, simulate N devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
 process imports jax); on TPU the real device list is used. See

@@ -38,6 +38,18 @@ pool, which requeues them onto surviving replicas — a request is only
 resolved with the replica's error after ``max_requeues`` failovers, or
 when no survivor remains. ``stats()`` merges per-replica heartbeat
 snapshots with router counters and the shared flush telemetry.
+
+**Guardrails** (docs/guardrails.md): a pool may mix precision tiers
+(``from_tiers`` — w4a8 traffic replicas backed by w8a8/fp32 escalation
+replicas running singleton flushes). A flush result whose engine-side
+detectors fired is triaged through :meth:`_on_flagged`: re-run one tier
+up (audit trail in ``MoleculeResult.escalations``, bounded by
+``max_escalations``), else a typed ``GuardrailViolation`` (fatal) or
+annotated delivery (suspect). A watchdog thread quarantines replicas
+whose worker stalls past ``stall_timeout_s`` or whose sliding-window
+flagged rate trips the circuit breaker: handles are expropriated and
+requeued (zero lost), the engine cold-restarts on the same device, and
+the replacement serves again only after ``probation_s``.
 """
 from __future__ import annotations
 
@@ -49,9 +61,12 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 
+from repro.guardrails import (EscalationRecord, GuardrailConfig,
+                              GuardrailViolation, tier_rank)
 from repro.models import so3krates as so3
 from repro.serving.bucketing import Graph, assign_bucket
 from repro.serving.engine import QuantizedEngine, MoleculeResult, ServeConfig
+from repro.serving.qparams import fp32_bytes, quantize_so3_params
 from repro.server.artifact import (ArtifactError, ensure_mode_matches,
                                    load_artifact)
 from repro.server.scheduler import (RequestHandle, SchedulerClosed,
@@ -79,12 +94,47 @@ class ClusterConfig:
     affinity_slack: int = 2
     # failovers a single request may survive before its error resolves
     max_requeues: int = 2
+    # -- guardrails / tiered escalation (all defaults keep them off) --
+    # precision-tier re-runs one flagged request may receive before its
+    # replica resolves it locally (typed error for fatal, annotated
+    # delivery for suspect)
+    max_escalations: int = 1
+    # sliding window of recent flush results each replica keeps for the
+    # circuit breaker (0 = keep none)
+    breaker_window: int = 20
+    # breaker trip condition: flagged fraction of the window above this
+    # rate (None = breaker off), evaluated only once the window holds at
+    # least breaker_min_events results — a single flagged request on a
+    # cold window must not quarantine a healthy replica
+    breaker_flag_rate: Optional[float] = None
+    breaker_min_events: int = 10
+    # a quarantined replica's respawned engine serves again only after
+    # this probation hold (its warmup typically overlaps it)
+    probation_s: float = 5.0
+    # pool watchdog: a worker busy on one unit of work longer than this
+    # is declared stalled and quarantined (None = watchdog off)
+    stall_timeout_s: Optional[float] = None
+    watchdog_interval_s: float = 0.25
+    # quarantines one replica id may survive before it is left dead
+    # (a replica that keeps tripping is hardware/weights, not luck)
+    max_quarantines: int = 2
 
     def __post_init__(self):
         if self.n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if self.affinity_slack < 0:
             raise ValueError("affinity_slack must be >= 0")
+        if self.max_escalations < 0:
+            raise ValueError("max_escalations must be >= 0")
+        if self.breaker_window < 0:
+            raise ValueError("breaker_window must be >= 0")
+        if self.breaker_flag_rate is not None \
+                and not (0.0 <= self.breaker_flag_rate <= 1.0):
+            raise ValueError("breaker_flag_rate must be in [0, 1] or None")
+        if self.stall_timeout_s is not None and self.stall_timeout_s <= 0:
+            raise ValueError("stall_timeout_s must be > 0 or None")
+        if self.watchdog_interval_s <= 0:
+            raise ValueError("watchdog_interval_s must be > 0")
 
     def scheduler_config(self) -> SchedulerConfig:
         # warmup/max_queue are pool-driven (parallel warmup, router-side
@@ -121,10 +171,21 @@ class ClusterPool:
         ``from_artifact`` constructors."""
         if not engines:
             raise ValueError("need at least one engine")
-        serves = {e.serve for e in engines}
-        if len(serves) != 1:
-            raise ValueError("all replica engines must share one ServeConfig")
-        self.serve = engines[0].serve
+        # engines must agree on everything *except* precision mode: a
+        # tiered fleet (w4a8 traffic replicas + w8a8/fp32 escalation
+        # replicas) differs only in mode, so bucket ladders and batch
+        # formation stay identical across the whole pool
+        norm = {dataclasses.replace(e.serve, mode=engines[0].serve.mode)
+                for e in engines}
+        if len(norm) != 1:
+            raise ValueError(
+                "all replica engines must share one ServeConfig "
+                "(precision mode may differ for a tiered fleet)")
+        ranks = [tier_rank(e.serve.mode) for e in engines]
+        self._primary_rank = min(ranks)
+        # the pool's nominal serve is the primary (cheapest) tier's —
+        # that is the tier ordinary traffic routes to
+        self.serve = engines[ranks.index(self._primary_rank)].serve
         self.model_cfg = engines[0].model_cfg
         self.cluster = dataclasses.replace(cluster, n_replicas=len(engines))
         if cluster.max_batch > self.serve.max_batch:
@@ -146,15 +207,45 @@ class ClusterPool:
         # pool.stats() call shows the whole serving+sessions picture)
         self._stats_sources: Dict[str, object] = {}
         self._retry_cache = (0.0, 0.0)   # (monotonic stamp, estimate)
+        # guardrail / escalation / quarantine telemetry
+        self._n_flagged = 0
+        self._n_escalated = 0
+        self._n_escalation_failures = 0
+        self._n_quarantined = 0
+        self._n_respawned = 0
+        self._n_permanent_deaths = 0
+        self._n_stalls_detected = 0
+        self._n_breaker_trips = 0
+        self._quarantine_counts: Dict[int, int] = {}
         # static bucket -> home replica map (affinity tie-break): spread
-        # the ladder round-robin so each replica "owns" some shape classes
+        # the ladder round-robin over *primary-tier* replicas so each
+        # "owns" some shape classes (escalation replicas never get homes)
+        primary_ids = [i for i, r in enumerate(ranks)
+                       if r == self._primary_rank]
         caps = sorted(b.capacity for b in self._buckets)
-        self._home = {cap: i % len(engines) for i, cap in enumerate(caps)}
+        self._home = {cap: primary_ids[i % len(primary_ids)]
+                      for i, cap in enumerate(caps)}
         sched_cfg = self.cluster.scheduler_config()
+        # escalation tiers run singleton flushes (max_batch=1, zero
+        # deadline, unbounded queue): an escalated re-run is then
+        # bit-identical to a direct batch-of-1 call on that tier
+        esc_cfg = SchedulerConfig(max_batch=1, deadline_ms=0.0,
+                                  warmup=False, max_queue=None)
         self._replicas = [
-            Replica(i, eng, sched_cfg, on_failure=self._on_replica_failure,
-                    warmup=cluster.warmup)
+            Replica(i, eng,
+                    sched_cfg if ranks[i] == self._primary_rank else esc_cfg,
+                    on_failure=self._on_replica_failure,
+                    warmup=cluster.warmup,
+                    on_flagged=self._on_flagged,
+                    breaker_window=cluster.breaker_window)
             for i, eng in enumerate(engines)]
+        self._watchdog: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
+        if (cluster.stall_timeout_s is not None
+                or cluster.breaker_flag_rate is not None):
+            self._watchdog = threading.Thread(
+                target=self._watch, name="cluster-watchdog", daemon=True)
+            self._watchdog.start()
         if wait_ready:
             self.wait_ready()
 
@@ -166,14 +257,17 @@ class ClusterPool:
                        cluster: ClusterConfig = ClusterConfig(),
                        fp32_nbytes: Optional[int] = None,
                        devices: Optional[Sequence] = None,
-                       artifact_version: str = "") -> "ClusterPool":
+                       artifact_version: str = "",
+                       guardrails: Optional[GuardrailConfig] = None
+                       ) -> "ClusterPool":
         """One engine per device from a single serving-format tree (each
         replica gets its own committed copy via ``jax.device_put``)."""
         if devices is None:
             devices = pick_devices(cluster.n_replicas)
         engines = [QuantizedEngine.from_quantized(
             model_cfg, qparams, serve, fp32_nbytes=fp32_nbytes,
-            device=d, artifact_version=artifact_version) for d in devices]
+            device=d, artifact_version=artifact_version,
+            guardrails=guardrails) for d in devices]
         return cls(engines, cluster)
 
     @classmethod
@@ -181,14 +275,61 @@ class ClusterPool:
                     params=None, serve: ServeConfig = ServeConfig(),
                     cluster: ClusterConfig = ClusterConfig(),
                     seed: int = 0,
-                    devices: Optional[Sequence] = None) -> "ClusterPool":
+                    devices: Optional[Sequence] = None,
+                    guardrails: Optional[GuardrailConfig] = None
+                    ) -> "ClusterPool":
         """Quantize fp32 params once (random init when None), replicate
         the serving tree across devices."""
         base = QuantizedEngine.from_config(model_cfg, params=params,
                                            serve=serve, seed=seed)
         return cls.from_quantized(
             model_cfg, base.qparams, serve, cluster,
-            fp32_nbytes=base.memory_report()["fp32_bytes"], devices=devices)
+            fp32_nbytes=base.memory_report()["fp32_bytes"], devices=devices,
+            guardrails=guardrails)
+
+    @classmethod
+    def from_tiers(cls, model_cfg: so3.So3kratesConfig, params=None,
+                   serve: ServeConfig = ServeConfig(),
+                   tier_plan: Optional[Dict[str, int]] = None,
+                   cluster: ClusterConfig = ClusterConfig(),
+                   seed: int = 0,
+                   devices: Optional[Sequence] = None,
+                   guardrails: Optional[GuardrailConfig] = None
+                   ) -> "ClusterPool":
+        """Mixed-precision fleet from ONE fp32 params tree (random init
+        when None): ``tier_plan`` maps precision tier -> replica count,
+        e.g. ``{"w4a8": 2, "w8a8": 1, "fp32": 1}`` — two cheap traffic
+        replicas backed by one escalation replica each at w8a8 and fp32.
+        Every tier is quantized from the *same* weights, so an escalated
+        re-run answers the same model at higher precision. Replicas are
+        ordered cheapest tier first (ids 0..N-1); ``devices`` (when
+        given) must cover the total replica count."""
+        if tier_plan is None:
+            tier_plan = {"w4a8": 2, "w8a8": 1, "fp32": 1}
+        plan = sorted(tier_plan.items(), key=lambda kv: tier_rank(kv[0]))
+        total = sum(n for _, n in plan)
+        if total < 1:
+            raise ValueError("tier_plan must place at least one replica")
+        if params is None:
+            params = so3.init_params(jax.random.PRNGKey(seed), model_cfg)
+        if devices is None:
+            devices = pick_devices(total)
+        elif len(devices) < total:
+            raise ValueError(f"tier_plan wants {total} replicas but only "
+                             f"{len(devices)} devices were given")
+        nbytes = fp32_bytes(params)
+        engines, i = [], 0
+        for tier, n in plan:
+            if n <= 0:
+                continue
+            qp = quantize_so3_params(params, tier)
+            tier_serve = dataclasses.replace(serve, mode=tier)
+            for _ in range(n):
+                engines.append(QuantizedEngine.from_quantized(
+                    model_cfg, qp, tier_serve, fp32_nbytes=nbytes,
+                    device=devices[i], guardrails=guardrails))
+                i += 1
+        return cls(engines, cluster)
 
     @classmethod
     def from_artifact(cls, path: str, serve: Optional[ServeConfig] = None,
@@ -245,7 +386,8 @@ class ClusterPool:
     def submit_chunk(self, fn, bucket_capacity: int,
                      preferred_replica: Optional[int] = None,
                      session_id: str = "",
-                     chunk_idx: int = 0) -> ChunkHandle:
+                     chunk_idx: int = 0,
+                     min_tier: Optional[str] = None) -> ChunkHandle:
         """Route one session chunk (``fn(engine) -> result``) to a
         replica, under the same admission/affinity policy as one-shot
         traffic. ``bucket_capacity`` must be on the pool's bucket ladder
@@ -257,7 +399,10 @@ class ClusterPool:
         routing silently falls back to JSQ when it is not. Raises
         :class:`SchedulerOverloaded`/:class:`SchedulerClosed` exactly
         like :meth:`submit` — the session manager's typed
-        retry-with-backoff handles sheds."""
+        retry-with-backoff handles sheds. ``min_tier`` routes the chunk
+        to a replica at (or above) that precision tier — the session
+        manager's guardrail escalation re-runs a flagged MD chunk one
+        tier up through this."""
         if bucket_capacity not in self._home:
             raise ValueError(
                 f"bucket_capacity {bucket_capacity} is not on the pool's "
@@ -265,10 +410,13 @@ class ClusterPool:
         handle = ChunkHandle(fn, time.monotonic(),
                              bucket_capacity=bucket_capacity,
                              session_id=session_id, chunk_idx=chunk_idx)
+        min_rank = (self._primary_rank if min_tier is None
+                    else tier_rank(min_tier))
         mq = self.cluster.max_queue
         if preferred_replica is not None:
             for rep in self._replicas:
                 if (rep.replica_id == preferred_replica and rep.accepting
+                        and tier_rank(rep.tier) >= min_rank
                         and (mq is None or rep.depth() < mq)
                         and rep.try_submit(handle)):
                     with self._lock:
@@ -278,7 +426,7 @@ class ClusterPool:
                             + 1)
                     return handle
         for _ in range(2 * len(self._replicas)):
-            rep = self._route(handle.bucket_capacity)
+            rep = self._route(handle.bucket_capacity, min_rank=min_rank)
             if rep.try_submit(handle):
                 with self._lock:
                     self._n_chunks_routed += 1
@@ -292,10 +440,14 @@ class ClusterPool:
             self._retry_after())
 
     def infer(self, graphs: Sequence[Graph],
-              timeout: Optional[float] = None) -> List[MoleculeResult]:
-        """Convenience: submit all, wait for all (in input order)."""
+              timeout: Optional[float] = None,
+              timeout_s: Optional[float] = None) -> List[MoleculeResult]:
+        """Convenience: submit all, wait for all (in input order).
+        ``timeout_s`` raises the typed
+        :class:`~repro.server.scheduler.RequestTimeout` per request."""
         handles = [self.submit(g) for g in graphs]
-        return [h.result(timeout=timeout) for h in handles]
+        return [h.result(timeout=timeout, timeout_s=timeout_s)
+                for h in handles]
 
     def close(self) -> None:
         """Stop admitting, drain every replica, join their workers."""
@@ -303,10 +455,14 @@ class ClusterPool:
             if not self._open:
                 return
             self._open = False
+        if self._watchdog is not None:
+            self._watchdog_stop.set()
+            self._watchdog.join()
         for r in self._replicas:
             r.begin_close()
         for r in self._replicas:
-            r.join()
+            if not r._expropriated:   # an expropriated stuck worker may
+                r.join()              # sleep past close — don't wait on it
 
     def __enter__(self) -> "ClusterPool":
         return self
@@ -337,14 +493,25 @@ class ClusterPool:
             self._retry_cache = (now, est)
         return est
 
-    def _route(self, cap: int, ignore_bound: bool = False) -> Replica:
-        """JSQ + bucket affinity over live replicas (see module doc)."""
+    def _route(self, cap: int, ignore_bound: bool = False,
+               min_rank: Optional[int] = None) -> Replica:
+        """JSQ + bucket affinity over live replicas (see module doc).
+
+        Tier selection: ordinary traffic (``min_rank=None``) routes to
+        the primary (cheapest) tier; escalated work passes the minimum
+        acceptable ``tier_rank``. Either way the *lowest* qualifying
+        tier with a live replica is used — so when every primary
+        replica is gone, traffic degrades up-tier (more precise, more
+        expensive) rather than failing."""
         with self._lock:
             if not self._open:
                 raise SchedulerClosed("cluster pool is closed")
-        live = self._live()
+        floor = self._primary_rank if min_rank is None else min_rank
+        live = [r for r in self._live() if tier_rank(r.tier) >= floor]
         if not live:
             raise SchedulerClosed("no live replicas")
+        lo = min(tier_rank(r.tier) for r in live)
+        live = [r for r in live if tier_rank(r.tier) == lo]
         depths = {r.replica_id: r.depth() for r in live}
         mq = self.cluster.max_queue
         if mq is not None and not ignore_bound:
@@ -379,21 +546,37 @@ class ClusterPool:
         requeue its queued + in-flight handles onto survivors."""
         with self._lock:
             self._n_failures += 1
+        self._requeue_orphans(rep, orphans, error)
+
+    def _requeue_orphans(self, rep: Replica, orphans: List[RequestHandle],
+                         error: BaseException) -> None:
+        """Requeue a dead/quarantined replica's handles onto survivors:
+        same precision tier first, then (when none remains) the lowest
+        live tier — a request is resolved with ``error`` only after
+        ``max_requeues`` failovers or when no survivor admits it."""
+        rep_rank = tier_rank(rep.tier)
+        tries = ((rep_rank,) if rep_rank == self._primary_rank
+                 else (rep_rank, self._primary_rank))
         for h in orphans:
             h.n_requeues += 1
             if h.n_requeues > self.cluster.max_requeues:
                 h._resolve(error=error, replica_id=rep.replica_id)
                 continue
             placed = False
-            for _ in range(2 * len(self._replicas)):
-                try:
-                    # never shed an already-admitted request: failover
-                    # requeue bypasses the admission bound
-                    surv = self._route(h.bucket_capacity, ignore_bound=True)
-                except (SchedulerClosed, SchedulerOverloaded):
-                    break
-                if surv.try_submit(h, force=True):
-                    placed = True
+            for min_rank in tries:
+                for _ in range(2 * len(self._replicas)):
+                    try:
+                        # never shed an already-admitted request:
+                        # failover requeue bypasses the admission bound
+                        surv = self._route(h.bucket_capacity,
+                                           ignore_bound=True,
+                                           min_rank=min_rank)
+                    except (SchedulerClosed, SchedulerOverloaded):
+                        break
+                    if surv.try_submit(h, force=True):
+                        placed = True
+                        break
+                if placed:
                     break
             if placed:
                 with self._lock:
@@ -402,6 +585,117 @@ class ClusterPool:
                         self._n_chunks_requeued += 1
             else:
                 h._resolve(error=error, replica_id=rep.replica_id)
+
+    # -- guardrail escalation ------------------------------------------------
+
+    def _on_flagged(self, rep: Replica, handle: RequestHandle,
+                    result: MoleculeResult) -> bool:
+        """Replica guardrail-triage hook (called from its worker thread,
+        no replica locks held): re-run a flagged request one precision
+        tier up when the ladder and the escalation budget allow. True =
+        pool took ownership (the handle now sits in a higher-tier
+        replica's queue); False = the flagging replica resolves it
+        locally."""
+        with self._lock:
+            self._n_flagged += 1
+        if len(handle.escalations) >= self.cluster.max_escalations:
+            return False
+        from_rank = tier_rank(rep.tier)
+        targets = sorted(
+            (r for r in self._replicas
+             if r is not rep and r.accepting
+             and tier_rank(r.tier) > from_rank),
+            key=lambda r: (tier_rank(r.tier), r.depth(), r.replica_id))
+        reason = result.flags[0].reason if result.flags else "flagged"
+        for tgt in targets:
+            # append the audit hop *before* submitting: the target's
+            # flush stamps handle.escalations into its result
+            handle.escalations.append(EscalationRecord(
+                from_tier=rep.tier, to_tier=tgt.tier, reason=reason,
+                from_replica=rep.replica_id))
+            if tgt.try_submit(handle, force=True):
+                with self._lock:
+                    self._n_escalated += 1
+                return True
+            handle.escalations.pop()
+        with self._lock:
+            self._n_escalation_failures += 1
+        return False
+
+    # -- watchdog / circuit breaker / quarantine -----------------------------
+
+    def _watch(self) -> None:
+        """Pool watchdog loop: every ``watchdog_interval_s`` sweep the
+        replicas for (a) a worker stuck on one unit of work past
+        ``stall_timeout_s`` — the engine-lock stall ``sessions.faults``
+        injects — and (b) a flagged-rate circuit-breaker trip. Either
+        quarantines the replica: its handles are expropriated and
+        requeued (zero requests lost), the engine is cold-restarted on
+        the same device, and the replacement is re-admitted only after
+        ``probation_s``."""
+        c = self.cluster
+        while not self._watchdog_stop.wait(c.watchdog_interval_s):
+            with self._lock:
+                if not self._open:
+                    return
+            for idx, rep in enumerate(list(self._replicas)):
+                if rep._expropriated:
+                    continue        # already quarantined, worker winding down
+                if c.stall_timeout_s is not None:
+                    busy = rep.busy_duration()
+                    if busy is not None and busy > c.stall_timeout_s:
+                        with self._lock:
+                            self._n_stalls_detected += 1
+                        self._quarantine(idx, GuardrailViolation(
+                            f"replica {rep.replica_id} stalled: busy "
+                            f"{busy:.2f}s > stall_timeout_s="
+                            f"{c.stall_timeout_s}s", reason="stall"))
+                        continue
+                if c.breaker_flag_rate is not None:
+                    events, flagged = rep.flag_window()
+                    if (events >= c.breaker_min_events
+                            and flagged / events > c.breaker_flag_rate):
+                        with self._lock:
+                            self._n_breaker_trips += 1
+                        self._quarantine(idx, GuardrailViolation(
+                            f"replica {rep.replica_id} circuit breaker: "
+                            f"{flagged}/{events} recent flushes flagged "
+                            f"(> {c.breaker_flag_rate:.0%})",
+                            reason="breaker"))
+
+    def _quarantine(self, idx: int, error: GuardrailViolation) -> None:
+        """Take a sick replica out of service: expropriate + requeue its
+        handles, cold-restart its engine on the same device, hold the
+        replacement on probation. A replica id that trips more than
+        ``max_quarantines`` times stays dead — a replica that keeps
+        tripping is a hardware or weights problem, not bad luck."""
+        rep = self._replicas[idx]
+        with self._lock:
+            if not self._open:
+                return
+            n = self._quarantine_counts.get(rep.replica_id, 0) + 1
+            self._quarantine_counts[rep.replica_id] = n
+            self._n_quarantined += 1
+        orphans = rep.expropriate(error)
+        self._requeue_orphans(rep, orphans, error)
+        if n > self.cluster.max_quarantines:
+            with self._lock:
+                self._n_permanent_deaths += 1
+            return
+        old = rep.engine
+        eng = QuantizedEngine.from_quantized(
+            old.model_cfg, old.qparams, old.serve,
+            device=old.device, artifact_version=old.artifact_version,
+            guardrails=old.guardrails)
+        fresh = Replica(rep.replica_id, eng, rep.config,
+                        on_failure=self._on_replica_failure,
+                        warmup=self.cluster.warmup,
+                        on_flagged=self._on_flagged,
+                        breaker_window=self.cluster.breaker_window)
+        fresh.hold_admission(self.cluster.probation_s)
+        self._replicas[idx] = fresh
+        with self._lock:
+            self._n_respawned += 1
 
     def kill_replica(self, replica_id: int, mode: str = "drain") -> None:
         """Injectable failure (tests, chaos drills, cluster_bench):
@@ -435,6 +729,8 @@ class ClusterPool:
         for rep in self._replicas:
             if not rep.accepting:
                 continue             # dead replicas don't get new weights
+            if tier_rank(rep.tier) != tier_rank(art.serve.mode):
+                continue             # escalation tiers keep their own weights
             t0 = time.monotonic()
             eng = QuantizedEngine.from_quantized(
                 art.model_cfg, art.qparams, self.serve,
@@ -526,6 +822,26 @@ class ClusterPool:
             "n_stalls_injected": sum(r["n_stalls_injected"]
                                      for r in replicas),
         }
+        tiers: Dict[str, int] = {}
+        for r in self._replicas:
+            tiers[r.tier] = tiers.get(r.tier, 0) + 1
+        detectors: Dict[str, int] = {}
+        for r in self._replicas:
+            for k, v in r.engine.guard_snapshot().items():
+                detectors[k] = detectors.get(k, 0) + v
+        with self._lock:
+            out["tiers"] = tiers
+            out["guardrails"] = {
+                "n_flagged": self._n_flagged,
+                "n_escalated": self._n_escalated,
+                "n_escalation_failures": self._n_escalation_failures,
+                "n_quarantined": self._n_quarantined,
+                "n_breaker_trips": self._n_breaker_trips,
+                "n_stalls_detected": self._n_stalls_detected,
+                "n_respawned": self._n_respawned,
+                "n_permanent_deaths": self._n_permanent_deaths,
+                "detectors": detectors,
+            }
         for name, fn in sources.items():
             try:
                 out[name] = fn()

@@ -60,6 +60,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
+from repro.guardrails import GuardrailViolation
 from repro.serving.engine import QuantizedEngine
 from repro.server.scheduler import BatchQueue, RequestHandle, SchedulerConfig
 from repro.server.stats import FlushRecord
@@ -113,7 +114,18 @@ class Replica:
                  config: SchedulerConfig,
                  on_failure: Callable[["Replica", List[RequestHandle],
                                        BaseException], None],
-                 warmup: bool = True):
+                 warmup: bool = True,
+                 on_flagged: Optional[Callable] = None,
+                 breaker_window: int = 0):
+        """``on_flagged(replica, handle, result) -> bool`` is the pool's
+        guardrail triage hook, called (with no replica locks held) for
+        each flush result whose detectors fired: True means the pool
+        took ownership (requeued the handle one precision tier up),
+        False means this replica resolves it locally (typed error for
+        fatal flags, annotated delivery for suspect ones).
+        ``breaker_window`` sizes the sliding flagged-rate window the
+        pool's circuit breaker reads via :meth:`flag_window` (0 = keep
+        none)."""
         self.replica_id = replica_id
         self.engine = engine
         self.config = config
@@ -128,6 +140,7 @@ class Replica:
         self._fail_next_flush = False
         self._fail_error: Optional[BaseException] = None
         self._on_failure = on_failure
+        self._on_flagged = on_flagged
         self._do_warmup = warmup
         self._flushes: List[FlushRecord] = []
         self._n_completed = 0
@@ -138,6 +151,15 @@ class Replica:
         self._stall_s = 0.0             # injected slow-flush fault (one-shot)
         self._n_stalls_injected = 0
         self._consecutive_errors = 0
+        self._n_flagged = 0             # flush results with guardrail flags
+        self._recent_flags: Deque[bool] = deque(maxlen=max(breaker_window, 0))
+        # watchdog surface: when the worker picked work and what it holds
+        self._busy_since: Optional[float] = None
+        self._in_flight: List[RequestHandle] = []
+        # set by expropriate(): the pool already rehomed every handle;
+        # the (possibly stuck) worker must exit silently when it wakes
+        self._expropriated = False
+        self._admit_at = 0.0            # monotonic probation gate
         self._last_beat = time.monotonic()
         self._worker = threading.Thread(
             target=self._run, name=f"cluster-replica-{replica_id}",
@@ -151,9 +173,15 @@ class Replica:
         return self.engine.device
 
     @property
+    def tier(self) -> str:
+        """Precision tier = the engine's serving mode (w4a8/w8a8/fp32)."""
+        return self.engine.serve.mode
+
+    @property
     def accepting(self) -> bool:
         with self._lock:
-            return self._accepting and not self._closing
+            return (self._accepting and not self._closing
+                    and time.monotonic() >= self._admit_at)
 
     def depth(self) -> int:
         """Queued one-shot requests + queued session chunks: chunks are
@@ -172,7 +200,8 @@ class Replica:
         ``force``, the failover-requeue path: already-admitted requests
         are never shed) its total depth is at the bound."""
         with self._lock:
-            if not self._accepting or self._closing:
+            if not self._accepting or self._closing \
+                    or time.monotonic() < self._admit_at:
                 return False
             mq = self.config.max_queue
             if (not force and mq is not None
@@ -205,6 +234,53 @@ class Replica:
         with self._engine_lock:
             self.engine = new_engine
         return time.monotonic() - t0
+
+    def hold_admission(self, seconds: float) -> None:
+        """Probation gate: ``accepting`` stays False (and ``try_submit``
+        refuses) until ``seconds`` from now — how the pool re-admits a
+        quarantined replica's replacement only after its probation
+        window (warmup typically overlaps the hold)."""
+        with self._lock:
+            self._admit_at = time.monotonic() + float(seconds)
+
+    def busy_duration(self) -> Optional[float]:
+        """Seconds the worker has been inside its current unit of work
+        (None when idle) — the stall signal the pool watchdog polls. A
+        healthy flush holds this for milliseconds; an engine-lock stall
+        holds it for the stall's duration."""
+        with self._lock:
+            if self._busy_since is None:
+                return None
+            return time.monotonic() - self._busy_since
+
+    def flag_window(self):
+        """(events, flagged) over the sliding breaker window — the
+        flagged-rate the pool's circuit breaker trips on."""
+        with self._lock:
+            return len(self._recent_flags), sum(self._recent_flags)
+
+    def expropriate(self, error: BaseException) -> List[RequestHandle]:
+        """Forcibly take every unresolved handle away from this replica
+        — called by the pool's watchdog (stalled worker) or circuit
+        breaker (quarantine), from *outside* the worker thread, without
+        touching the engine lock the worker may be stuck holding.
+
+        The replica stops accepting; queued requests, queued chunks,
+        and the in-flight work the worker is currently executing are
+        all returned for the pool to requeue. The worker, whenever it
+        wakes, sees ``_expropriated``, still resolves its (now
+        possibly duplicate) results — first resolution wins at the
+        handle — and exits without the ``_die`` failover path, which
+        the pool already performed on its behalf."""
+        with self._lock:
+            self._expropriated = True
+            self._accepting = False
+            orphans = (list(self._in_flight) + self._queue.drain_all()
+                       + list(self._chunks))
+            self._in_flight = []
+            self._chunks.clear()
+            self._lock.notify()
+        return [h for h in orphans if not h.done()]
 
     def kill(self, mode: str = "drain") -> None:
         """Inject a replica failure. ``mode="drain"``: stop before the
@@ -266,6 +342,11 @@ class Replica:
                 "device": str(self.engine.device) if self.engine.device
                           is not None else "default",
                 "alive": self._accepting,
+                "tier": self.engine.serve.mode,
+                "on_probation": now < self._admit_at,
+                "busy_s": (now - self._busy_since
+                           if self._busy_since is not None else 0.0),
+                "n_flagged": self._n_flagged,
                 "artifact_version": self.engine.artifact_version,
                 "queue_depth": self._queue.depth() + len(self._chunks),
                 "chunk_depth": len(self._chunks),
@@ -320,23 +401,34 @@ class Replica:
             except BaseException as e:
                 chunk_error = e
         if chunk_error is not None:
-            chunk._resolve(error=chunk_error, replica_id=self.replica_id)
             with self._lock:
+                self._busy_since = None
+                self._in_flight = []
+                if self._expropriated:
+                    # pool already rehomed the chunk — do NOT resolve
+                    # the error (the re-run elsewhere must win); exit
+                    return False
                 self._n_chunk_errors += 1
                 self._consecutive_errors += 1
                 broken = (self._consecutive_errors
                           >= self.MAX_CONSECUTIVE_ERRORS)
+            chunk._resolve(error=chunk_error, replica_id=self.replica_id)
             if broken:
                 self._die([], chunk_error)
                 return False
             return True
         with self._lock:
+            self._busy_since = None
+            self._in_flight = []
+            expropriated = self._expropriated
             self._n_chunks_completed += 1
             self._chunk_service_s += time.monotonic() - t0
             self._consecutive_errors = 0
             self._last_beat = time.monotonic()
+        # a genuine result is still the best resolution — first resolve
+        # wins if the pool's re-run already answered
         chunk._resolve(result=result, replica_id=self.replica_id)
-        return True
+        return not expropriated
 
     def _run(self):
         try:
@@ -356,6 +448,10 @@ class Replica:
             with self._lock:
                 while True:
                     now = time.monotonic()
+                    if self._expropriated:
+                        # pool watchdog/breaker already rehomed every
+                        # handle — exit without the _die failover path
+                        return
                     if not self._accepting:          # killed (drain mode)
                         err = self._fail_error or ReplicaFailed(
                             f"replica {self.replica_id} failed")
@@ -389,6 +485,11 @@ class Replica:
                     picked = None
                     chunk = None
                     self._accepting = False
+                if picked is not None or chunk is not None:
+                    # watchdog surface: what the worker holds, since when
+                    self._busy_since = time.monotonic()
+                    self._in_flight = (list(picked[1]) if picked is not None
+                                       else [chunk])
             if picked is None and chunk is None:
                 self._die(in_flight, err)
                 return
@@ -406,7 +507,8 @@ class Replica:
                     time.sleep(stall)
                 engine = self.engine
                 try:
-                    results = engine.infer_batch([h.graph for h in handles])
+                    results = engine.infer_batch(
+                        [h.graph for h in handles], on_flag="mark")
                 except BaseException as e:
                     flush_error = e
             if flush_error is not None:
@@ -416,22 +518,35 @@ class Replica:
                 # flushes means the replica itself is broken: then fail
                 # over the queued (never-attempted) work. All of this
                 # runs with no locks held (_die's contract).
-                for h in handles:
-                    h._resolve(error=flush_error,
-                               replica_id=self.replica_id)
                 with self._lock:
+                    self._busy_since = None
+                    self._in_flight = []
+                    if self._expropriated:
+                        # pool already requeued these handles elsewhere —
+                        # resolving the error here could beat the re-run
+                        return
                     self._n_errors += 1
                     self._consecutive_errors += 1
                     broken = (self._consecutive_errors
                               >= self.MAX_CONSECUTIVE_ERRORS)
+                for h in handles:
+                    h._resolve(error=flush_error,
+                               replica_id=self.replica_id)
                 if broken:
                     self._die([], flush_error)
                     return
                 continue
             service_s = time.monotonic() - t0
-            results = [dataclasses.replace(r, replica_id=self.replica_id)
-                       for r in results]
+            # stamp the escalation audit trail the pool appended to each
+            # handle into its delivered result
+            results = [dataclasses.replace(
+                           r, replica_id=self.replica_id,
+                           escalations=tuple(h.escalations))
+                       for h, r in zip(handles, results)]
             with self._lock:
+                self._busy_since = None
+                self._in_flight = []
+                expropriated = self._expropriated
                 self._n_completed += len(handles)
                 self._consecutive_errors = 0
                 self._last_beat = time.monotonic()
@@ -440,5 +555,31 @@ class Replica:
                     queue_depth=depth, wait_s=wait_s, service_s=service_s,
                     path=results[0].path, batch_size=results[0].batch_size,
                     replica_id=self.replica_id))
+                # feed the circuit-breaker window (flush results only —
+                # chunk health is the session layer's concern)
+                for r in results:
+                    self._recent_flags.append(bool(r.flags))
+                self._n_flagged += sum(1 for r in results if r.flags)
             for h, r in zip(handles, results):
+                if r.flags:
+                    # triage, hook first (no replica locks held): the
+                    # pool may take ownership and re-run one tier up
+                    if self._on_flagged is not None \
+                            and self._on_flagged(self, h, r):
+                        continue
+                    fatal = next((f for f in r.flags if f.fatal), None)
+                    if fatal is not None:
+                        h._resolve(error=GuardrailViolation(
+                            f"guardrail {fatal.reason}: result withheld "
+                            f"(replica {self.replica_id}, tier {self.tier})",
+                            reason=fatal.reason, severity=fatal.severity,
+                            detail={"value": fatal.value,
+                                    "limit": fatal.limit,
+                                    "mode": self.tier,
+                                    "replica_id": self.replica_id}),
+                            replica_id=self.replica_id)
+                        continue
+                    # suspect-only with nowhere to go: deliver annotated
                 h._resolve(result=r, replica_id=self.replica_id)
+            if expropriated:
+                return

@@ -1,0 +1,41 @@
+"""repro.guardrails — runtime physics/numerics health layer.
+
+The paper's core claim is that naive low-bit quantization *silently*
+violates SO(3) symmetry and conservation laws: LEE blows up on some
+inputs, MD stops conserving energy, and a w4a8 forward can emit NaN
+forces for geometries the calibration never saw. This package is the
+serving stack's runtime defense — every result is checked before a
+caller sees it, and suspect work degrades gracefully instead of
+failing:
+
+* :mod:`repro.guardrails.detectors` — cheap host-side checks fused into
+  the forward's result path: non-finite energy/forces (fatal),
+  force-norm outliers against a calibrated per-bucket
+  :class:`ForceEnvelope` (suspect), and a sampled per-batch LEE probe
+  (suspect). :class:`GuardrailConfig` configures them per engine;
+  :class:`GuardrailViolation` is the typed error every surface raises —
+  a caller never receives a silent NaN.
+* :mod:`repro.guardrails.escalation` — the precision ladder
+  (:data:`TIER_ORDER` = w4a8 -> w8a8 -> fp32) and the typed
+  :class:`EscalationRecord` stamped into a
+  :class:`~repro.serving.engine.MoleculeResult` when a flagged request
+  was transparently re-run one tier up by a mixed-tier
+  :class:`~repro.cluster.pool.ClusterPool`.
+
+This package is a dependency leaf (numpy only): ``repro.serving``,
+``repro.md``, ``repro.server``, ``repro.cluster``, and
+``repro.sessions`` all import it, never the reverse. See
+docs/guardrails.md for the detector catalog, the escalation ladder, the
+breaker/quarantine state machine, and the pool watchdog.
+"""
+from repro.guardrails.detectors import (Flag, ForceEnvelope, GuardrailConfig,
+                                        GuardrailViolation, check_finite_tree,
+                                        check_result)
+from repro.guardrails.escalation import (EscalationRecord, TIER_ORDER,
+                                         next_tier, tier_rank)
+
+__all__ = [
+    "Flag", "ForceEnvelope", "GuardrailConfig", "GuardrailViolation",
+    "check_finite_tree", "check_result",
+    "EscalationRecord", "TIER_ORDER", "next_tier", "tier_rank",
+]

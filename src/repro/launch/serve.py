@@ -39,6 +39,18 @@ mid-replay:
 `--md-session N` additionally streams a checkpointed N-step MD session
 through the same pool beside the one-shot traffic (`repro.sessions`,
 docs/sessions.md).
+
+Runtime guardrails (`repro.guardrails`, docs/guardrails.md):
+`--guardrails` arms the engine-side detectors (non-finite results are
+withheld with a typed error instead of delivered); `--tiers
+w4a8:2,w8a8:1,fp32:1` serves through a mixed-precision fleet whose
+flagged requests transparently re-run one tier up; `--stall-timeout S`
+arms the pool watchdog that quarantines and cold-restarts a replica
+whose worker stalls:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --workload so3 --server \
+      --tiers w4a8:2,w8a8:1,fp32:1 --guardrails --stall-timeout 5
 """
 from __future__ import annotations
 
@@ -141,6 +153,11 @@ def run_so3(args) -> None:
                                         n_layers=args.layers, n_rbf=8,
                                         dir_bits=args.dir_bits)
         engine = QuantizedEngine.from_config(model_cfg, serve=serve)
+    if args.guardrails:
+        from repro.guardrails import GuardrailConfig
+        engine.guardrails = GuardrailConfig(check_finite=True)
+        print("guardrails: non-finite results are withheld with a typed "
+              "GuardrailViolation (docs/guardrails.md)")
     if args.save_artifact:
         nbytes = save_artifact(args.save_artifact, engine)
         print(f"packed artifact -> {args.save_artifact} "
@@ -210,16 +227,32 @@ def run_so3_server(engine, args) -> None:
     traffic = make_traffic(cfg)
     max_batch = min(args.sched_batch, args.max_batch)
 
-    if args.replicas > 1 or args.swap_artifact or args.md_session:
+    if (args.replicas > 1 or args.swap_artifact or args.md_session
+            or args.tiers):
         from repro.cluster import ClusterConfig, ClusterPool
         cluster = ClusterConfig(n_replicas=args.replicas,
                                 max_batch=max_batch,
                                 deadline_ms=args.deadline_ms,
-                                max_queue=args.max_queue)
-        pool = ClusterPool.from_quantized(
-            engine.model_cfg, engine.qparams, engine.serve, cluster,
-            fp32_nbytes=engine.memory_report()["fp32_bytes"],
-            artifact_version=engine.artifact_version)
+                                max_queue=args.max_queue,
+                                stall_timeout_s=args.stall_timeout)
+        if args.tiers:
+            # mixed-precision fleet: flagged w4a8 results re-run one
+            # tier up (fresh random weights shared across the tiers —
+            # a demo fleet, like the non-artifact engine above)
+            plan = {}
+            for part in args.tiers.split(","):
+                t, _, k = part.partition(":")
+                plan[t.strip()] = int(k or 1)
+            pool = ClusterPool.from_tiers(
+                engine.model_cfg, serve=engine.serve, tier_plan=plan,
+                cluster=cluster, seed=args.seed,
+                guardrails=engine.guardrails if args.guardrails else None)
+        else:
+            pool = ClusterPool.from_quantized(
+                engine.model_cfg, engine.qparams, engine.serve, cluster,
+                fp32_nbytes=engine.memory_report()["fp32_bytes"],
+                artifact_version=engine.artifact_version,
+                guardrails=engine.guardrails if args.guardrails else None)
         swap_report = {}
         swap_thread = None
         session = session_mgr = None
@@ -271,6 +304,13 @@ def run_so3_server(engine, args) -> None:
         print(f"routing: {stats['router']['routed_per_replica']} "
               f"(shed {stats['n_shed']}, requeued "
               f"{stats['router']['n_requeued']})")
+        if args.tiers or args.guardrails or args.stall_timeout:
+            g = stats.get("guardrails", {})
+            print(f"tiers: {stats.get('tiers')}  guardrails: flagged "
+                  f"{g.get('n_flagged', 0)}, escalated "
+                  f"{g.get('n_escalated', 0)}, quarantined "
+                  f"{g.get('n_quarantined', 0)}, stalls detected "
+                  f"{g.get('n_stalls_detected', 0)}")
         if swap_report.get("error") is not None:
             raise SystemExit(
                 f"hot swap FAILED: {swap_report['error']} (traffic was "
@@ -415,6 +455,22 @@ def main():
                          "one-shot traffic (repro.sessions, "
                          "docs/sessions.md; --server, implies the "
                          "cluster path)")
+    ap.add_argument("--guardrails", action="store_true",
+                    help="arm the runtime result detectors: non-finite "
+                         "energies/forces are withheld with a typed "
+                         "error instead of delivered "
+                         "(repro.guardrails, docs/guardrails.md)")
+    ap.add_argument("--tiers", metavar="SPEC",
+                    help="serve through a mixed-precision fleet, e.g. "
+                         "'w4a8:2,w8a8:1,fp32:1' — flagged requests "
+                         "transparently re-run one precision tier up "
+                         "(--server, implies the cluster path)")
+    ap.add_argument("--stall-timeout", type=float, default=None,
+                    metavar="S",
+                    help="arm the pool watchdog: a replica whose worker "
+                         "is stuck on one flush/chunk longer than this "
+                         "is quarantined and cold-restarted, its "
+                         "requests requeued (--server cluster path)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifact",
                     help="cold-start the engine from a packed quantized "

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_codebook
+from repro.guardrails import GuardrailViolation, check_finite_tree
 from repro.kernels import ops
 from repro.md.neighbor import NeighborList, build_neighbor_list, maybe_rebuild
 from repro.md.nve import _FS
@@ -85,12 +86,24 @@ class MDConfig:
     # verification mode: count cutoff edges missed by the skin list every
     # step (O(cap^2) extra work — tests/benchmark audits only)
     track_missed: bool = False
+    # -- runtime guardrails (checked at each record checkpoint, where
+    # run() syncs to the host anyway — zero extra device work) --
+    # raise a typed GuardrailViolation when a checkpoint's energies go
+    # non-finite (an exploded trajectory is garbage from that point on)
+    check_finite: bool = True
+    # max admissible |e_tot - e_tot(first checkpoint)| per replica (eV);
+    # None = drift monitor off. An NVE integrator at a sane dt conserves
+    # e_tot — sustained drift is the quantized forward leaving its trust
+    # region, the signal the session layer escalates a precision tier on
+    drift_limit: Optional[float] = None
 
     def __post_init__(self):
         if self.mode not in ("fp32", "w8a8", "w4a8"):
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.skin < 0:
             raise ValueError("skin must be >= 0")
+        if self.drift_limit is not None and self.drift_limit <= 0:
+            raise ValueError("drift_limit must be > 0 or None")
 
     @property
     def vectors_quantized(self) -> bool:
@@ -326,6 +339,7 @@ class MDEngine:
         n_records, tail = divmod(n_steps, record_every)
         lengths = [record_every] * n_records + ([tail] if tail else [])
         recs = []
+        e_ref: Optional[np.ndarray] = None   # first checkpoint's e_tot
         for length in lengths:
             state, rec = self._segment_jit(state, species, mask, masses,
                                            length=length)
@@ -334,6 +348,33 @@ class MDEngine:
                     "skin neighbour list overflowed its edge capacity "
                     f"({state.nlist.edge_capacity}) during the run; raise "
                     "MDConfig.edge_capacity / edge_capacity_safety")
+            # guardrails ride the same host sync: non-finite energies and
+            # (when armed) per-replica e_tot drift vs the first checkpoint
+            if self.md.check_finite or self.md.drift_limit is not None:
+                e_tot = np.asarray(rec["e_tot"])
+                if self.md.check_finite:
+                    bad = check_finite_tree(
+                        {"e_tot": e_tot, "e_pot": np.asarray(rec["e_pot"])})
+                    if bad is not None:
+                        raise GuardrailViolation(
+                            f"non-finite {bad} at an MD checkpoint (mode "
+                            f"{self.md.mode}) — the trajectory exploded",
+                            reason="nonfinite", severity="fatal",
+                            detail={"mode": self.md.mode, "array": bad})
+                if self.md.drift_limit is not None:
+                    if e_ref is None:
+                        e_ref = e_tot
+                    else:
+                        drift = float(np.abs(e_tot - e_ref).max())
+                        if drift > self.md.drift_limit:
+                            raise GuardrailViolation(
+                                f"energy drift {drift:.4g} eV exceeds "
+                                f"drift_limit={self.md.drift_limit} eV "
+                                f"(mode {self.md.mode})",
+                                reason="energy_drift", severity="suspect",
+                                detail={"mode": self.md.mode,
+                                        "value": drift,
+                                        "limit": self.md.drift_limit})
             recs.append(rec)
         records = {k: np.stack([np.asarray(r[k]) for r in recs])
                    for k in recs[0]} if recs else {}

@@ -30,8 +30,9 @@ from repro.server.artifact import (ARTIFACT_MAGIC, ARTIFACT_VERSION,
                                    ensure_mode_matches, load_artifact,
                                    load_engine, save_artifact)
 from repro.server.scheduler import (BatchQueue, MicroBatchScheduler,
-                                    RequestHandle, SchedulerClosed,
-                                    SchedulerConfig, SchedulerOverloaded)
+                                    RequestHandle, RequestTimeout,
+                                    SchedulerClosed, SchedulerConfig,
+                                    SchedulerOverloaded)
 from repro.server.stats import FlushRecord, flush_summary, latency_summary
 from repro.server.traffic import (RateStage, SizeClass, TrafficConfig,
                                   TrafficResult, calibrate_service_time,
@@ -42,8 +43,8 @@ from repro.server.traffic import (RateStage, SizeClass, TrafficConfig,
 __all__ = [
     "ARTIFACT_MAGIC", "ARTIFACT_VERSION", "ArtifactError", "LoadedArtifact",
     "ensure_mode_matches", "load_artifact", "load_engine", "save_artifact",
-    "BatchQueue", "MicroBatchScheduler", "RequestHandle", "SchedulerClosed",
-    "SchedulerConfig", "SchedulerOverloaded",
+    "BatchQueue", "MicroBatchScheduler", "RequestHandle", "RequestTimeout",
+    "SchedulerClosed", "SchedulerConfig", "SchedulerOverloaded",
     "FlushRecord", "flush_summary", "latency_summary",
     "RateStage", "SizeClass", "TrafficConfig", "TrafficResult",
     "calibrate_service_time", "draw_graphs", "make_step_traffic",

@@ -58,18 +58,28 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.guardrails import GuardrailViolation
 from repro.serving.bucketing import BucketSpec, Graph, assign_bucket
 from repro.serving.engine import QuantizedEngine, MoleculeResult
 from repro.server.stats import FlushRecord, flush_summary
 
 __all__ = ["SchedulerConfig", "SchedulerClosed", "SchedulerOverloaded",
-           "RequestHandle", "BatchQueue", "MicroBatchScheduler"]
+           "RequestTimeout", "RequestHandle", "BatchQueue",
+           "MicroBatchScheduler"]
 
 
 class SchedulerClosed(RuntimeError):
     """``submit`` was called on a closed scheduler (or a dead cluster
     replica): the request was NOT admitted and no handle exists — callers
     must not wait on anything. Raised instead of silently hanging."""
+
+
+class RequestTimeout(TimeoutError):
+    """``RequestHandle.result(timeout_s=...)`` expired before the
+    request resolved. Subclasses :class:`TimeoutError` so callers that
+    caught the old builtin keep working; typed so the session manager
+    and the pool watchdog can tell a deadline miss (request may still
+    complete — retrying a pure chunk is safe) from an engine error."""
 
 
 class SchedulerOverloaded(RuntimeError):
@@ -114,7 +124,8 @@ class RequestHandle:
     """
 
     __slots__ = ("graph", "t_submit", "t_done", "bucket_capacity",
-                 "replica_id", "n_requeues", "_event", "_result", "_error")
+                 "replica_id", "n_requeues", "escalations", "_event",
+                 "_result", "_error")
 
     def __init__(self, graph: Graph, t_submit: float,
                  bucket_capacity: int = 0):
@@ -124,6 +135,10 @@ class RequestHandle:
         self.bucket_capacity = bucket_capacity
         self.replica_id: Optional[int] = None
         self.n_requeues = 0
+        # precision-tier escalation trail (repro.guardrails
+        # EscalationRecords, appended by ClusterPool when a flagged
+        # result is re-run one tier up; stamped into the final result)
+        self.escalations: list = []
         self._event = threading.Event()
         self._result: Optional[MoleculeResult] = None
         self._error: Optional[BaseException] = None
@@ -131,9 +146,19 @@ class RequestHandle:
     def done(self) -> bool:
         return self._event.is_set()
 
-    def result(self, timeout: Optional[float] = None) -> MoleculeResult:
-        if not self._event.wait(timeout):
-            raise TimeoutError("request not completed within timeout")
+    def result(self, timeout: Optional[float] = None,
+               timeout_s: Optional[float] = None) -> MoleculeResult:
+        """Block for the result. ``timeout_s`` (alias of the older
+        ``timeout``; it wins when both are given) bounds the wait and
+        raises a typed :class:`RequestTimeout` instead of blocking
+        forever — the request itself stays in flight and may still
+        resolve (a pool watchdog recovering a stalled replica resolves
+        it later; first resolution wins)."""
+        t = timeout_s if timeout_s is not None else timeout
+        if not self._event.wait(t):
+            raise RequestTimeout(
+                f"request not completed within {t}s (submitted "
+                f"{time.monotonic() - self.t_submit:.3f}s ago)")
         if self._error is not None:
             raise self._error
         return self._result  # type: ignore[return-value]
@@ -147,6 +172,12 @@ class RequestHandle:
         return self.t_done - self.t_submit
 
     def _resolve(self, result=None, error=None, replica_id=None):
+        # first resolution wins: after a watchdog expropriates a stalled
+        # replica and requeues its in-flight work, both the survivor and
+        # the (eventually waking) stuck worker resolve the same handle —
+        # the late one must be a no-op, not a result swap under a reader
+        if self._event.is_set():
+            return
         self._result, self._error = result, error
         if replica_id is not None:
             self.replica_id = replica_id
@@ -277,6 +308,7 @@ class MicroBatchScheduler:
         self._n_submitted = 0
         self._n_completed = 0
         self._n_shed = 0
+        self._n_guard_flagged = 0
         self._service_ema: Optional[float] = None
         self.warmup_s = engine.warmup() if config.warmup else 0.0
         self._worker = threading.Thread(
@@ -347,6 +379,7 @@ class MicroBatchScheduler:
             out = {"n_submitted": self._n_submitted,
                    "n_completed": self._n_completed,
                    "n_shed": self._n_shed,
+                   "n_guard_flagged": self._n_guard_flagged,
                    "warmup_s": self.warmup_s}
         out.update(flush_summary(flushes))
         out["engine_dispatch"] = self.engine.stats_snapshot()
@@ -373,8 +406,11 @@ class MicroBatchScheduler:
             wait_s = time.monotonic() - handles[0].t_submit
             t0 = time.monotonic()
             try:
+                # on_flag="mark": a poison molecule must fail *its own*
+                # handle with a typed error, not its batch peers — the
+                # per-handle triage happens below
                 results = self.engine.infer_batch(
-                    [h.graph for h in handles])
+                    [h.graph for h in handles], on_flag="mark")
             except BaseException as e:  # propagate to every waiting client
                 for h in handles:
                     h._resolve(error=e, replica_id=0)
@@ -382,8 +418,10 @@ class MicroBatchScheduler:
             service_s = time.monotonic() - t0
             # bookkeeping strictly before resolving: a client returning
             # from result() must already see this flush in stats()
+            n_flagged = sum(1 for r in results if r.flags)
             with self._lock:
                 self._n_completed += len(handles)
+                self._n_guard_flagged += n_flagged
                 self._service_ema = (service_s if self._service_ema is None
                                      else 0.8 * self._service_ema
                                      + 0.2 * service_s)
@@ -393,4 +431,15 @@ class MicroBatchScheduler:
                     path=results[0].path, batch_size=results[0].batch_size,
                     replica_id=0))
             for h, r in zip(handles, results):
-                h._resolve(result=r, replica_id=0)
+                # fatal flags (non-finite values) are never delivered:
+                # the single-engine scheduler has no higher tier to
+                # escalate to, so the handle gets the typed error.
+                # Suspect flags ride out annotated in result.flags.
+                fatal = next((f for f in r.flags if f.fatal), None)
+                if fatal is not None:
+                    h._resolve(error=GuardrailViolation(
+                        f"guardrail {fatal.reason}: result withheld",
+                        reason=fatal.reason, severity=fatal.severity),
+                        replica_id=0)
+                else:
+                    h._resolve(result=r, replica_id=0)

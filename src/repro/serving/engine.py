@@ -41,7 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_codebook
-from repro.core.lee import random_rotations
+from repro.core.lee import random_rotation, random_rotations
+from repro.guardrails import (Flag, GuardrailConfig, GuardrailViolation,
+                              check_result)
 from repro.models import so3krates as so3
 from repro.serving.bucketing import (BucketSpec, Graph, build_edge_list,
                                      count_edges, pad_graphs, plan_batches)
@@ -114,6 +116,15 @@ class MoleculeResult:
     # ("" for engines built straight from fp32 params) — lets a client
     # verify which weights answered during a rolling hot swap
     artifact_version: str = ""
+    # guardrail flags that fired on this molecule (repro.guardrails
+    # Flag tuples). Empty for clean results; fatal flags never reach a
+    # caller as a result — suspect flags annotate results that were
+    # delivered because no higher precision tier remained
+    flags: tuple = ()
+    # precision-escalation audit trail (EscalationRecord tuples): each
+    # entry is one re-run up the w4a8 -> w8a8 -> fp32 ladder a cluster
+    # performed before this result was produced
+    escalations: tuple = ()
 
 
 class QuantizedEngine:
@@ -123,7 +134,8 @@ class QuantizedEngine:
                  params: Optional[Dict[str, jnp.ndarray]], serve: ServeConfig,
                  *, qparams=None, fp32_nbytes: Optional[int] = None,
                  device: Optional[jax.Device] = None,
-                 artifact_version: str = ""):
+                 artifact_version: str = "",
+                 guardrails: Optional[GuardrailConfig] = None):
         """Build from fp32 ``params`` (quantized here, the training->serving
         hand-off) or directly from serving-format ``qparams`` (the packed-
         artifact cold-start path, ``repro.server.artifact`` — no fp32 tree
@@ -138,13 +150,22 @@ class QuantizedEngine:
         ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). None
         keeps the default-device behavior. ``artifact_version`` is the
         content tag of the packed artifact the weights came from, echoed
-        into every :class:`MoleculeResult`."""
+        into every :class:`MoleculeResult`.
+
+        ``guardrails`` configures the runtime result detectors
+        (``repro.guardrails``; None = the default config, non-finite
+        check on). It is an engine argument, not part of ``ServeConfig``,
+        so artifacts and the cluster's shared-config invariant stay
+        unchanged — detectors are a property of the serving process,
+        not of the weights."""
         if (params is None) == (qparams is None):
             raise ValueError("pass exactly one of params / qparams")
         self.model_cfg = model_cfg
         self.serve = serve
         self.device = device
         self.artifact_version = artifact_version
+        self.guardrails = (guardrails if guardrails is not None
+                           else GuardrailConfig())
         if qparams is None:
             self._fp32_bytes = fp32_bytes(params)  # fp32 tree is not retained
             self.qparams = quantize_so3_params(params, serve.mode)
@@ -186,6 +207,12 @@ class QuantizedEngine:
         # batches dispatched per path; "sparse_fallback" counts batches a
         # sparse-preferring config had to run dense (edge-capacity overflow)
         self.dispatch_stats = {"dense": 0, "sparse": 0, "sparse_fallback": 0}
+        # guardrail telemetry: molecules checked / flagged per detector,
+        # LEE probes run (all counts only advance when guardrails.active)
+        self.guard_stats = {"checked": 0, "flagged_nonfinite": 0,
+                            "flagged_outlier": 0, "flagged_lee": 0,
+                            "lee_probes": 0}
+        self._n_infer_calls = 0         # LEE probe sampling counter
 
     # -- construction -------------------------------------------------------
 
@@ -194,19 +221,24 @@ class QuantizedEngine:
                     params: Optional[Dict[str, jnp.ndarray]] = None,
                     serve: ServeConfig = ServeConfig(),
                     seed: int = 0,
-                    device: Optional[jax.Device] = None) -> "QuantizedEngine":
+                    device: Optional[jax.Device] = None,
+                    guardrails: Optional[GuardrailConfig] = None
+                    ) -> "QuantizedEngine":
         """Build an engine from a model config and (optionally) trained
         fp32 params; random init when params is None (benchmarks, smoke)."""
         if params is None:
             params = so3.init_params(jax.random.PRNGKey(seed), model_cfg)
-        return cls(model_cfg, params, serve, device=device)
+        return cls(model_cfg, params, serve, device=device,
+                   guardrails=guardrails)
 
     @classmethod
     def from_quantized(cls, model_cfg: so3.So3kratesConfig, qparams,
                        serve: ServeConfig,
                        fp32_nbytes: Optional[int] = None,
                        device: Optional[jax.Device] = None,
-                       artifact_version: str = "") -> "QuantizedEngine":
+                       artifact_version: str = "",
+                       guardrails: Optional[GuardrailConfig] = None
+                       ) -> "QuantizedEngine":
         """Build an engine from already-serving-format parameters — the
         packed-artifact cold-start path (``repro.server.artifact``) and
         the per-replica construction path of ``repro.cluster``: no fp32
@@ -215,7 +247,7 @@ class QuantizedEngine:
         loaded from an artifact saved from such an engine)."""
         return cls(model_cfg, None, serve, qparams=qparams,
                    fp32_nbytes=fp32_nbytes, device=device,
-                   artifact_version=artifact_version)
+                   artifact_version=artifact_version, guardrails=guardrails)
 
     # -- introspection ------------------------------------------------------
 
@@ -238,14 +270,21 @@ class QuantizedEngine:
         one after a phase and subtract to attribute batches to it."""
         return dict(self.dispatch_stats)
 
+    def guard_snapshot(self) -> Dict[str, int]:
+        """Immutable copy of the guardrail counters (checked/flagged per
+        detector, LEE probes run)."""
+        return dict(self.guard_stats)
+
     def reset_stats(self) -> Dict[str, int]:
-        """Zero the dispatch counters, returning the pre-reset snapshot.
-        ``dispatch_stats`` otherwise accumulates for the engine's lifetime,
-        so benches/servers reset after warmup to keep steady-state phases
-        unpolluted."""
+        """Zero the dispatch + guardrail counters, returning the
+        pre-reset dispatch snapshot. Both otherwise accumulate for the
+        engine's lifetime, so benches/servers reset after warmup to keep
+        steady-state phases unpolluted."""
         snap = self.stats_snapshot()
         for k in self.dispatch_stats:
             self.dispatch_stats[k] = 0
+        for k in self.guard_stats:
+            self.guard_stats[k] = 0
         return snap
 
     # -- serving ------------------------------------------------------------
@@ -334,7 +373,8 @@ class QuantizedEngine:
         e, f = self._run_dense(species, coords, mask)
         return e, f, "dense"
 
-    def infer_batch(self, graphs: Sequence[Graph]) -> List[MoleculeResult]:
+    def infer_batch(self, graphs: Sequence[Graph],
+                    on_flag: Optional[str] = None) -> List[MoleculeResult]:
         """Energies and forces for a heterogeneous list of molecules.
 
         Graphs are bucketed, padded, batched, and dispatched through the
@@ -342,7 +382,59 @@ class QuantizedEngine:
         batch's cutoff graph fits the edge capacity); results come back
         in input order with padding (and dummy alignment molecules)
         stripped.
+
+        Results then pass the configured runtime guardrails
+        (``repro.guardrails``): non-finite energy/forces, force-norm
+        outliers vs the calibrated envelope, and the sampled LEE probe.
+        ``on_flag`` overrides ``GuardrailConfig.on_flag`` for this call:
+        ``"raise"`` (the direct-call default — a typed
+        :class:`~repro.guardrails.GuardrailViolation` instead of a bad
+        result) or ``"mark"`` (scheduler/cluster surfaces — flagged
+        results come back with ``MoleculeResult.flags`` set and the
+        caller triages: typed error, annotated delivery, or a precision
+        escalation).
         """
+        results = self._infer_raw(graphs)
+        g = self.guardrails
+        if not g.active:
+            return results
+        self._n_infer_calls += 1
+        self.guard_stats["checked"] += len(results)
+        flagged: Dict[int, tuple] = {}
+        for i, r in enumerate(results):
+            flags = check_result(r.energy, r.forces, r.bucket_capacity, g)
+            if flags:
+                flagged[i] = flags
+        if g.lee_probe_every > 0 \
+                and self._n_infer_calls % g.lee_probe_every == 0:
+            for i, flag in self._lee_probe(graphs, results):
+                flagged[i] = flagged.get(i, ()) + (flag,)
+        if not flagged:
+            return results
+        for flags in flagged.values():
+            for f in flags:
+                key = {"nonfinite": "flagged_nonfinite",
+                       "force_outlier": "flagged_outlier",
+                       "lee": "flagged_lee"}.get(f.reason)
+                if key is not None:
+                    self.guard_stats[key] += 1
+        mode = on_flag if on_flag is not None else g.on_flag
+        if mode == "raise":
+            worst = max((f for flags in flagged.values() for f in flags),
+                        key=lambda f: f.fatal)
+            raise GuardrailViolation(
+                f"guardrail {worst.reason} on {len(flagged)}/{len(results)} "
+                f"molecule(s) (mode={self.serve.mode})", reason=worst.reason,
+                severity=worst.severity,
+                detail={"value": worst.value, "limit": worst.limit,
+                        "mode": self.serve.mode})
+        return [dataclasses.replace(r, flags=flagged[i]) if i in flagged
+                else r for i, r in enumerate(results)]
+
+    def _infer_raw(self, graphs: Sequence[Graph]) -> List[MoleculeResult]:
+        """The bucket/pad/dispatch pipeline with no guardrail pass —
+        also the re-run path of the LEE probe and ``lee_diagnostic``
+        (probing the probe would recurse)."""
         plans = plan_batches(graphs, self._buckets)
         results: List[Optional[MoleculeResult]] = [None] * len(graphs)
         for plan in plans:
@@ -359,6 +451,29 @@ class QuantizedEngine:
                     batch_size=plan.batch_size, path=path,
                     artifact_version=self.artifact_version)
         return results  # type: ignore[return-value]
+
+    def _lee_probe(self, graphs: Sequence[Graph],
+                   results: Sequence[MoleculeResult]):
+        """Sampled equivariance check: re-run the batch under one
+        seeded rotation and compare rotated vs counter-rotated forces
+        (paper Eq. 1, online). Returns ``(index, Flag)`` pairs for
+        molecules whose LEE exceeds the limit."""
+        g = self.guardrails
+        self.guard_stats["lee_probes"] += 1
+        key = jax.random.PRNGKey(g.lee_seed + self._n_infer_calls)
+        R = np.asarray(random_rotation(key))
+        rotated = [Graph(gr.species, np.asarray(gr.coords) @ R.T)
+                   for gr in graphs]
+        out = []
+        for i, (r0, r1) in enumerate(zip(results,
+                                         self._infer_raw(rotated))):
+            if not np.isfinite(r0.forces).all():
+                continue            # nonfinite already flagged as fatal
+            err = float(np.linalg.norm(r1.forces - r0.forces @ R.T))
+            if not np.isfinite(err) or err > g.lee_limit:
+                out.append((i, Flag("lee", "suspect", value=err,
+                                    limit=g.lee_limit)))
+        return out
 
     # -- MD bridge ----------------------------------------------------------
 
@@ -406,12 +521,12 @@ class QuantizedEngine:
         them are exactly zero on both sides).
         """
         rots = np.asarray(random_rotations(key, n_rotations))
-        base = self.infer_batch(graphs)
+        base = self._infer_raw(graphs)
         errs = []
         for R in rots:
             rotated = [Graph(g.species, np.asarray(g.coords) @ R.T)
                        for g in graphs]
-            rot_res = self.infer_batch(rotated)
+            rot_res = self._infer_raw(rotated)
             for r0, r1 in zip(base, rot_res):
                 errs.append(float(np.linalg.norm(
                     r1.forces - r0.forces @ R.T)))

@@ -33,10 +33,23 @@ Why this survives faults:
   deterministically.
 * **typed retry-with-backoff.** A shed submission
   (:class:`SchedulerOverloaded`) backs off by the scheduler's
-  ``retry_after_s`` hint; a failed chunk (:class:`ReplicaFailed` or an
-  engine error) retries on the survivors with exponential backoff.
-  Budget exhausted or pool closed → the session fails loudly with its
-  error, never silently stalls.
+  ``retry_after_s`` hint; a failed chunk (:class:`ReplicaFailed`, a
+  typed :class:`~repro.server.scheduler.RequestTimeout` from the chunk
+  deadline, or an engine error) retries on the survivors with
+  exponential backoff under **full jitter** — waits are drawn uniformly
+  from ``[0, backoff]`` per session, so many sessions shed by the same
+  overload burst don't retry in lockstep and re-shed together. Budget
+  exhausted or pool closed → the session fails loudly with its error,
+  never silently stalls.
+* **guardrail tier escalation.** A chunk the MD guardrails reject
+  (:class:`~repro.guardrails.GuardrailViolation`: non-finite energies,
+  energy drift past ``MDConfig.drift_limit``) is re-submitted with
+  ``min_tier`` one precision step above the mode that failed — the
+  tiered pool routes it to a w8a8/fp32 escalation replica, and
+  ``_md_engine_for`` integrates at *that* replica's precision. Bounded
+  by ``SessionConfig.max_escalations``; past the ladder top the session
+  fails with the violation (fp32 exploding is real physics, not
+  quantization).
 
 Delivery semantics: frames are **exactly-once within a process** (chunk
 completion is monotonic on the driver thread) and **at-least-once
@@ -64,9 +77,11 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointError, CheckpointManager
 from repro.cluster.pool import ClusterPool
+from repro.guardrails import GuardrailViolation, next_tier
 from repro.md.engine import MDConfig, MDEngine, ReplicaState, pad_replicas
 from repro.md.neighbor import NeighborList
-from repro.server.scheduler import SchedulerClosed, SchedulerOverloaded
+from repro.server.scheduler import (RequestTimeout, SchedulerClosed,
+                                    SchedulerOverloaded)
 from repro.serving.bucketing import assign_bucket
 
 __all__ = ["Frame", "SessionConfig", "MDSession", "SessionManager"]
@@ -105,7 +120,15 @@ class SessionConfig:
     max_retries: int = 12           # per-chunk retry budget (faults+sheds)
     backoff_s: float = 0.05         # initial retry backoff
     backoff_max_s: float = 2.0
+    # per-chunk wall deadline: handle.result raises a typed
+    # RequestTimeout past this, counting against the retry budget
     result_timeout_s: float = 600.0
+    # precision-tier re-runs a guardrail-rejected chunk may receive
+    # (GuardrailViolation from the MD engine -> re-submit with min_tier
+    # one step up the ladder) before the session fails with it
+    max_escalations: int = 1
+
+
 
     def __post_init__(self):
         if self.n_steps < 1 or self.chunk_steps < 1:
@@ -169,9 +192,15 @@ class MDSession:
         self.artifact_versions: List[str] = []   # distinct versions seen
         self.collected: List[Frame] = []    # retained frames (tests/bench)
         self.n_retries = 0
+        self.n_escalations = 0              # guardrail tier escalations
         self.n_checkpoints = 0
         self.n_restores = 0
         self.frames_emitted = 0
+        # full-jitter retry RNG: deterministic per session, distinct
+        # across sessions so a shared overload burst doesn't make every
+        # session retry (and re-shed) in lockstep
+        self._rng = np.random.default_rng(
+            [seed & 0x7FFFFFFF] + [ord(c) for c in session_id[:24]])
         self._frame_q: "queue.Queue" = queue.Queue()
         self._cancel = threading.Event()
         self._done = threading.Event()
@@ -233,6 +262,7 @@ class MDSession:
                 "steps_done": self.steps_done,
                 "frames_emitted": self.frames_emitted,
                 "n_retries": self.n_retries,
+                "n_escalations": self.n_escalations,
                 "n_checkpoints": self.n_checkpoints,
                 "n_restores": self.n_restores,
                 "artifact_versions": list(self.artifact_versions),
@@ -267,6 +297,8 @@ class SessionManager:
         self._chunks_completed = 0
         self._chunks_retried = 0
         self._shed_retries = 0
+        self._chunk_timeouts = 0        # typed RequestTimeout on result()
+        self._chunk_escalations = 0     # guardrail tier re-runs
         self._checkpoints_written = 0
         self._checkpoints_restored = 0
         pool.attach_stats_source("sessions", self.stats)
@@ -418,6 +450,8 @@ class SessionManager:
         fn = self._make_chunk_fn(session, length)
         backoff = cfg.backoff_s
         attempt = 0
+        min_tier: Optional[str] = None   # guardrail escalation target
+        esc_used = 0
         while True:
             if session._cancel.is_set():
                 return
@@ -425,34 +459,58 @@ class SessionManager:
                 handle = self.pool.submit_chunk(
                     fn, session.bucket_capacity,
                     preferred_replica=session.preferred_replica,
-                    session_id=session.session_id, chunk_idx=ci)
+                    session_id=session.session_id, chunk_idx=ci,
+                    min_tier=min_tier)
             except SchedulerOverloaded as e:
                 # typed retry-with-backoff on shed: the scheduler tells
-                # us roughly when one batch will have drained
+                # us roughly when one batch will have drained; full
+                # jitter (uniform over [0, wait]) decorrelates sessions
+                # shed by the same burst
                 attempt += 1
                 with self._lock:
                     self._shed_retries += 1
                 if attempt > cfg.max_retries:
                     raise
-                session._cancel.wait(
-                    min(max(e.retry_after_s, backoff), cfg.backoff_max_s))
+                session._cancel.wait(session._rng.uniform(0.0, min(
+                    max(e.retry_after_s, backoff), cfg.backoff_max_s)))
                 backoff = min(backoff * 2, cfg.backoff_max_s)
                 continue
             try:
                 new_state, records, art = handle.result(
-                    timeout=cfg.result_timeout_s)
-            except BaseException:
-                # replica died mid-chunk (or requeue budget exhausted):
+                    timeout_s=cfg.result_timeout_s)
+            except GuardrailViolation as e:
+                # the chunk's physics failed its guardrails (non-finite
+                # energies, drift past the limit): state is untouched —
+                # re-submit the same pure chunk one precision tier above
+                # the mode that produced the violation
+                try:
+                    target = next_tier(e.detail.get("mode", cfg.md.mode))
+                except ValueError:
+                    target = None
+                if target is None or esc_used >= cfg.max_escalations:
+                    raise      # top of the ladder / budget spent: real
+                esc_used += 1  # physics or broken weights, fail loudly
+                session.n_escalations += 1
+                with self._lock:
+                    self._chunk_escalations += 1
+                min_tier = target
+                session.preferred_replica = None
+                continue
+            except BaseException as e:
+                # replica died mid-chunk, the per-chunk deadline fired
+                # (typed RequestTimeout), or the requeue budget ran out:
                 # state is untouched on the host — re-submit the same
                 # pure chunk, dropping stickiness so JSQ picks a survivor
                 attempt += 1
                 session.n_retries += 1
                 with self._lock:
                     self._chunks_retried += 1
+                    if isinstance(e, RequestTimeout):
+                        self._chunk_timeouts += 1
                 if attempt > cfg.max_retries:
                     raise
                 session.preferred_replica = None
-                session._cancel.wait(backoff)
+                session._cancel.wait(session._rng.uniform(0.0, backoff))
                 backoff = min(backoff * 2, cfg.backoff_max_s)
                 continue
             break
@@ -510,6 +568,12 @@ class SessionManager:
         a fresh MDEngine (fresh jit cache) per call — without this every
         chunk would recompile its segments. Weak keys let swapped-out
         engines drop their compiled programs."""
+        # integrate at the precision of whichever replica executes the
+        # chunk: on a tiered pool an escalated chunk lands on a w8a8 or
+        # fp32 replica and must run *that* engine's mode, not the
+        # session's nominal one (the GuardrailViolation it raises then
+        # carries the actual mode for the next escalation decision)
+        md = dataclasses.replace(md, mode=engine.serve.mode)
         with self._md_lock:
             per = self._md_cache.get(engine)
             if per is None:
@@ -591,6 +655,8 @@ class SessionManager:
                 "chunks_completed": self._chunks_completed,
                 "chunks_retried": self._chunks_retried,
                 "shed_retries": self._shed_retries,
+                "chunk_timeouts": self._chunk_timeouts,
+                "chunk_escalations": self._chunk_escalations,
                 "checkpoints_written": self._checkpoints_written,
                 "checkpoints_restored": self._checkpoints_restored,
             }

@@ -321,11 +321,11 @@ class TestFailover:
         real_infer = rep0.engine.infer_batch
         calls = {"n": 0}
 
-        def flaky(graphs):
+        def flaky(graphs, on_flag=None):
             calls["n"] += 1
             if calls["n"] == 1:
                 raise RuntimeError("transient engine failure")
-            return real_infer(graphs)
+            return real_infer(graphs, on_flag=on_flag)
 
         rep0.engine.infer_batch = flaky
         (g,) = _graphs([10], seed=13)
@@ -352,7 +352,7 @@ class TestFailover:
                                   warmup=False), seed=0)
         rep0 = pool._replicas[0]
 
-        def dead(graphs):
+        def dead(graphs, on_flag=None):
             raise RuntimeError("device lost")
 
         rep0.engine.infer_batch = dead

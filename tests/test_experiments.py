@@ -199,6 +199,10 @@ _EXTRAS = {
     # schedule (boundaries 2-6, kill point 7) can run against
     "sessions": {"steps": 200, "chunk_steps": 20, "record_every": 20,
                  "oneshots": 2},
+    # 2 stalls stay: the stalls-detected gate (>= 2) is hard at smoke
+    "guardrails": {"escalation_mols": 3, "requests": 8, "poison_every": 4,
+                   "overhead_batches": 5, "stalls": 2, "stall_traffic": 2,
+                   "md_steps": 40},
 }
 
 
