@@ -5,6 +5,7 @@ The runner's job (ROADMAP item 5, in the shape of
 configs over the repo's axes —
 
     domain:   serving | md | server | cluster | kernels | sessions
+              | guardrails | obs
     mode:     fp32 | w8a8 | w4a8 (or a "+"-joined sweep run in-script)
     path:     dense | sparse | auto | dense+sparse
     replicas: replica-ladder ceiling (cluster)
@@ -57,9 +58,11 @@ DOMAINS: Dict[str, Dict[str, str]] = {
                  "document": "BENCH_sessions.json"},
     "guardrails": {"module": "benchmarks.guardrails_bench",
                    "document": "BENCH_guardrails.json"},
+    "obs": {"module": "benchmarks.obs_bench",
+            "document": "BENCH_obs.json"},
 }
 DOMAIN_ORDER = ("serving", "md", "server", "cluster", "kernels",
-                "sessions", "guardrails")
+                "sessions", "guardrails", "obs")
 
 BASELINES_PATH = "BENCH_baselines.json"
 
@@ -134,12 +137,14 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
     """The default experiment suite: one config per (domain, mode) cell.
 
     Without ``--modes`` this is exactly the committed-baseline suite —
-    the seven domains at their reference configurations (serving runs
+    the eight domains at their reference configurations (serving runs
     dense+sparse internally, md sweeps fp32+w8a8, cluster runs the
     1/2/4 replica ladder on 4 forced host devices, sessions runs the
     fault-schedule trajectory on a 2-replica pool, guardrails runs the
-    poison/stall/drift chaos suite on 4 forced host devices). ``modes``
-    expands the quantization axis for the per-mode domains.
+    poison/stall/drift chaos suite on 4 forced host devices, obs runs
+    the traced chaos replay + overhead A/B on the same 4-device
+    layout). ``modes`` expands the quantization axis for the per-mode
+    domains.
     """
     domains = list(domains) if domains else list(DOMAIN_ORDER)
     unknown = [d for d in domains if d not in DOMAINS]
@@ -177,6 +182,13 @@ def enumerate_experiments(domains: Optional[Sequence[str]] = None,
         elif d == "guardrails":
             # w4a8 primary tier (escalates to w8a8); poison needs the
             # dense path — see benchmarks/guardrails_bench.py
+            for m in (modes or ["w4a8"]):
+                out.append(ExperimentConfig(d, m, "dense", replicas=4,
+                                            devices=4, smoke=smoke,
+                                            extra=extra))
+        elif d == "obs":
+            # chaos tracing on a 4-replica mixed-tier pool; w4a8
+            # primary so poison escalates — see benchmarks/obs_bench.py
             for m in (modes or ["w4a8"]):
                 out.append(ExperimentConfig(d, m, "dense", replicas=4,
                                             devices=4, smoke=smoke,

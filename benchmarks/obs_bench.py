@@ -1,0 +1,475 @@
+"""Observability benchmark: trace completeness under chaos + clean-path
+overhead (ISSUE 9).
+
+The claims under test for ``repro.obs`` (docs/observability.md):
+
+1. **Chaos trace completeness** — a seeded chaos replay (NaN poison
+   escalating w4a8 -> w8a8, an in-flight replica kill, a rolling weight
+   swap) through a 4-replica mixed-tier pool with tracing on: **every**
+   request yields **exactly one** complete trace — an orphan-free span
+   tree with every span closed, whose child-span durations sum to the
+   measured end-to-end latency within 5% (the span model tiles the
+   interval, so the margin is structural slack, not tolerance), and
+   whose escalation / failover-requeue hops are attributed with one
+   event per hop. The Prometheus exposition and the JSONL trace sink
+   must round-trip the same story.
+2. **Clean-path overhead** — identical request waves through the
+   single-engine micro-batching scheduler with the whole obs plane ON
+   (tracing + JSONL sink + metrics registry) vs OFF: median wave
+   latency ratio <= 1.05x. Timing-gated, full-size runs only
+   (``smoke_ok=False``).
+
+Run:  PYTHONPATH=src python benchmarks/obs_bench.py
+          [--requests 160] [--poison-every 20] [--overhead-waves 30]
+          [--json BENCH_obs.json] [--smoke]
+
+Writes a ``repro.bench/1`` document (benchmarks/schema.py); the runner
+drives the same measurement through :func:`run`.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+# devices must be forced before jax initializes (cluster_bench has the
+# full rationale); under ``benchmarks.run`` the parent already committed
+# the count into the child environment, so this is a no-op there.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
+import jax          # noqa: E402  (after XLA_FLAGS)
+import numpy as np  # noqa: E402
+
+if __package__ in (None, ""):   # `python benchmarks/<name>.py`
+    import os as _os
+    import sys as _sys
+    _sys.path.insert(0, _os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))))
+
+from benchmarks import schema                                  # noqa: E402
+from benchmarks.schema import Metric                           # noqa: E402
+from repro.cluster import ClusterConfig, ClusterPool           # noqa: E402
+from repro.guardrails import GuardrailConfig, GuardrailViolation  # noqa: E402
+from repro.models import so3krates as so3                      # noqa: E402
+from repro.obs import (REGISTRY, TRACER, JsonlTraceSink,       # noqa: E402
+                       configure_tracing, load_traces,
+                       prometheus_text, write_metrics)
+from repro.server import save_artifact                         # noqa: E402
+from repro.server.scheduler import (MicroBatchScheduler,       # noqa: E402
+                                    SchedulerConfig)
+from repro.serving import (Graph, QuantizedEngine,             # noqa: E402
+                           ServeConfig)
+from repro.serving.qparams import quantize_so3_params          # noqa: E402
+
+WAIT_S = 1200.0
+BUCKET = 16
+SPAN_SUM_TOL = 0.05     # the committed <= 5% acceptance margin
+
+
+def parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="w4a8",
+                    choices=["fp32", "w8a8", "w4a8"],
+                    help="traffic (primary) tier; poison escalates one "
+                         "tier above it")
+    ap.add_argument("--requests", type=int, default=160,
+                    help="scenario 1: chaos replay size")
+    ap.add_argument("--poison-every", type=int, default=20,
+                    help="scenario 1: every Nth request is NaN-poisoned "
+                         "(each one exercises an escalation hop)")
+    ap.add_argument("--overhead-waves", type=int, default=30,
+                    help="scenario 2: timed request waves per A/B arm")
+    ap.add_argument("--wave-size", type=int, default=16,
+                    help="scenario 2: requests per wave")
+    ap.add_argument("--atoms", type=int, default=12)
+    ap.add_argument("--feat", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--json", default="BENCH_obs.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--workdir", default="/tmp/obs_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: same trace-completeness gates, "
+                         "overhead gate skipped")
+    return ap
+
+
+def apply_smoke(args) -> None:
+    args.requests = 32
+    args.poison_every = 8
+    args.overhead_waves = 6
+    args.wave_size = 8
+
+
+def _graph(n_species, n=12, seed=0, density=0.1):
+    rng = np.random.default_rng(seed)
+    side = (n / density) ** (1.0 / 3.0)
+    return Graph(species=rng.integers(0, n_species, n).astype(np.int32),
+                 coords=rng.uniform(0, side, size=(n, 3)).astype(np.float32))
+
+
+def _poison(n_species, n=12, seed=0):
+    g = _graph(n_species, n, seed)
+    coords = g.coords.copy()
+    coords[0] = np.nan
+    return Graph(species=g.species, coords=coords)
+
+
+def _audit_trace(doc: dict, latency_s: float) -> dict:
+    """Structural audit of one trace against its measured latency."""
+    out = {"orphans": 0, "unclosed": 0, "sum_violation": 0,
+           "unattributed": 0}
+    spans = doc["spans"]
+    root, children = spans[0], spans[1:]
+    if root["t1"] is None:
+        out["unclosed"] += 1
+    for s in children:
+        if s["parent_id"] != root["span_id"]:
+            out["orphans"] += 1
+        if s["t1"] is None:
+            out["unclosed"] += 1
+    if not out["unclosed"]:
+        total = sum(s["t1"] - s["t0"] for s in children)
+        if latency_s > 0 and abs(total - latency_s) > SPAN_SUM_TOL \
+                * latency_s:
+            out["sum_violation"] += 1
+    # one attributing event per hop: each re-entry into a queue must be
+    # explained by an "escalated" or "requeued" event
+    hop_events = sum(1 for e in doc["events"]
+                     if e["name"] in ("escalated", "requeued"))
+    if doc["hops"] != hop_events:
+        out["unattributed"] += 1
+    return out
+
+
+def scenario_chaos(model_cfg, params, serve4, serve8, args,
+                   workdir) -> dict:
+    """Seeded poison + in-flight kill + rolling swap through a traced
+    4-replica mixed-tier pool; audit every request's trace."""
+    trace_path = os.path.join(workdir, "chaos_traces.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    sink = JsonlTraceSink(trace_path)
+    TRACER.reset()
+    configure_tracing(enabled=True, sink=sink)
+    REGISTRY.set_enabled(True)
+
+    guard = GuardrailConfig(check_finite=True)
+    qp4 = quantize_so3_params(params, serve4.mode)
+    qp8 = quantize_so3_params(params, serve8.mode)
+    engines = (
+        [QuantizedEngine.from_quantized(model_cfg, qp4, serve4,
+                                        guardrails=guard)
+         for _ in range(3)]
+        + [QuantizedEngine.from_quantized(model_cfg, qp8, serve8)])
+    art = os.path.join(workdir, "swap_v2.npz")
+    save_artifact(art, QuantizedEngine.from_config(
+        model_cfg, serve=serve4, seed=99))
+
+    kill_at = args.requests // 3
+    swap_at = 2 * args.requests // 3
+    n_poison = lost = typed = 0
+    handles = []
+    try:
+        with ClusterPool(engines, ClusterConfig(
+                n_replicas=4, max_batch=4, deadline_ms=2.0, warmup=False,
+                max_escalations=1)) as pool:
+            for i in range(args.requests):
+                poisoned = i % args.poison_every == args.poison_every - 1
+                n_poison += poisoned
+                g = (_poison(model_cfg.n_species, n=args.atoms, seed=i)
+                     if poisoned
+                     else _graph(model_cfg.n_species, n=args.atoms,
+                                 seed=i))
+                handles.append(pool.submit(g))
+                if i == kill_at:
+                    pool.kill_replica(1, mode="in_flight")
+                if i == swap_at:
+                    pool.swap_artifact(art, warmup=False)
+            for h in handles:
+                try:
+                    h.result(timeout=WAIT_S)
+                except GuardrailViolation:
+                    typed += 1
+                except BaseException:
+                    lost += 1
+    finally:
+        configure_tracing(enabled=False)
+        sink.close()
+
+    docs = TRACER.drain()
+    by_id: dict = {}
+    duplicates = 0
+    for d in docs:
+        if d["trace_id"] in by_id:
+            duplicates += 1
+        by_id[d["trace_id"]] = d
+    missing = orphans = unclosed = sum_viol = unattributed = 0
+    escalated = requeued = 0
+    lat = []
+    for h in handles:
+        doc = by_id.get(h.trace.trace_id)
+        if doc is None:
+            missing += 1
+            continue
+        audit = _audit_trace(doc, h.latency_s)
+        orphans += audit["orphans"]
+        unclosed += audit["unclosed"]
+        sum_viol += audit["sum_violation"]
+        unattributed += audit["unattributed"]
+        escalated += any(e["name"] == "escalated" for e in doc["events"])
+        requeued += any(e["name"] == "requeued" for e in doc["events"])
+        lat.append(h.latency_s)
+
+    # export round-trip: the JSONL sink and the Prometheus exposition
+    # must tell the same story the in-memory objects do
+    sunk = {t["trace_id"] for t in load_traces(trace_path)}
+    prom_path = os.path.join(workdir, "chaos_metrics.prom")
+    write_metrics(prom_path)
+    prom = open(prom_path).read()
+    roundtrip_ok = int(
+        sunk == set(by_id)
+        and prom.startswith("# exported_at ")
+        and "pool_events_total" in prom
+        and 'event="escalated"' in prometheus_text())
+
+    out = {
+        "n_requests": args.requests,
+        "n_poison": n_poison,
+        "typed_errors": typed,
+        "requests_lost": lost,
+        "traces_missing": missing,
+        "traces_duplicate": duplicates,
+        "orphan_spans": orphans,
+        "unclosed_spans": unclosed,
+        "span_sum_violations": sum_viol,
+        "unattributed_hops": unattributed,
+        "escalated_traces": escalated,
+        "requeued_traces": requeued,
+        "export_roundtrip_ok": roundtrip_ok,
+        "traced_p50_ms": float(np.percentile(lat, 50) * 1e3) if lat
+        else 0.0,
+    }
+    print(f"chaos: {args.requests} requests ({n_poison} poisoned, 1 kill,"
+          f" 1 swap) -> {len(by_id)} traces, {missing} missing, "
+          f"{sum_viol} span-sum violations, {escalated} escalated, "
+          f"{requeued} requeued")
+    return out
+
+
+def scenario_overhead(model_cfg, params, serve4, args, workdir) -> dict:
+    """A/B the obs plane's clean-path cost through the single-engine
+    scheduler: tracing + JSONL sink + registry ON vs everything OFF.
+
+    The arms are **interleaved wave-by-wave** on one shared scheduler
+    (tracing is minted per-submit, so toggling between waves is safe):
+    sequential arms measure machine drift — on this box the bare
+    baseline itself moves ~20% over a 30-wave run — so the reported
+    ratio is the median of per-wave-pair on/off ratios, with the
+    within-pair order alternating to cancel any order bias. Each pair
+    runs the *same* wave twice, so the pair ratio is a same-input,
+    same-instant comparison.
+    """
+    qp4 = quantize_so3_params(params, serve4.mode)
+    engine = QuantizedEngine.from_quantized(model_cfg, qp4, serve4)
+    cfg = SchedulerConfig(max_batch=4, deadline_ms=2.0, warmup=False)
+    waves = [[_graph(model_cfg.n_species, n=args.atoms,
+                     seed=1000 + w * args.wave_size + i)
+              for i in range(args.wave_size)]
+             for w in range(args.overhead_waves + 2)]
+    sink_path = os.path.join(workdir, "overhead_traces.jsonl")
+    sink = JsonlTraceSink(sink_path)
+
+    def set_arm(on: bool) -> None:
+        configure_tracing(enabled=on, sink=sink if on else None)
+        REGISTRY.set_enabled(on)
+
+    def run_wave(sched, wave) -> float:
+        t0 = time.perf_counter()
+        for h in [sched.submit(g) for g in wave]:
+            h.result(timeout=WAIT_S)
+        return time.perf_counter() - t0
+
+    t_off, t_on = [], []
+    try:
+        with MicroBatchScheduler(engine, cfg) as sched:
+            for wave in waves[:2]:                     # warm / compile
+                run_wave(sched, wave)
+            for w, wave in enumerate(waves[2:]):
+                order = (True, False) if w % 2 else (False, True)
+                for on in order:
+                    set_arm(on)
+                    (t_on if on else t_off).append(run_wave(sched, wave))
+    finally:
+        configure_tracing(enabled=False)
+        sink.close()
+        REGISTRY.set_enabled(True)
+    off_s = float(np.median(t_off))
+    on_s = float(np.median(t_on))
+    ratio = float(np.median([a / b for a, b in zip(t_on, t_off)]))
+    out = {
+        "waves": args.overhead_waves,
+        "wave_size": args.wave_size,
+        "off_p50_ms": off_s * 1e3,
+        "on_p50_ms": on_s * 1e3,
+        "overhead_x": ratio,
+    }
+    print(f"overhead: off {off_s * 1e3:.2f} ms/wave, on "
+          f"{on_s * 1e3:.2f} ms/wave -> {ratio:.3f}x "
+          f"(median of {len(t_on)} paired wave ratios)")
+    return out
+
+
+def collect(args) -> dict:
+    if args.mode == "fp32":
+        raise SystemExit("--mode fp32 has no tier above it for the "
+                         "poison-escalation chaos; use w4a8 or w8a8")
+    model_cfg = so3.So3kratesConfig(feat=args.feat, vec_feat=4,
+                                    n_layers=args.layers, n_rbf=4,
+                                    dir_bits=6, cutoff=3.0)
+    # dense path: the one NaN coordinates propagate through
+    serve4 = ServeConfig(mode=args.mode, bucket_sizes=(BUCKET,),
+                         max_batch=4, path="dense")
+    esc_mode = "w8a8" if args.mode == "w4a8" else "fp32"
+    serve8 = dataclasses.replace(serve4, mode=esc_mode)
+    params = so3.init_params(jax.random.PRNGKey(0), model_cfg)
+    os.makedirs(args.workdir, exist_ok=True)
+    workdir = os.path.join(args.workdir, f"run_{os.getpid()}")
+    os.makedirs(workdir, exist_ok=True)
+    print(f"mode={args.mode} (escalates to {esc_mode}) "
+          f"backend={jax.default_backend()} "
+          f"devices={len(jax.devices())} requests={args.requests}")
+    record = {
+        "benchmark": "obs_tracing",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "n_cores": os.cpu_count() or 1,
+        "mode": args.mode,
+        "escalation_mode": esc_mode,
+        "feat": args.feat,
+        "n_layers": args.layers,
+        "n_atoms": args.atoms,
+        "chaos": scenario_chaos(model_cfg, params, serve4, serve8, args,
+                                workdir),
+        "overhead": scenario_overhead(model_cfg, params, serve4, args,
+                                      workdir),
+        "smoke": args.smoke,
+    }
+    return record
+
+
+def metrics_from_record(record: dict) -> list:
+    """Normalize into gated metrics. Trace completeness is structural
+    and size-independent, so those gates are hard in smoke too; the
+    overhead ratio is timing and full-size-only."""
+    ch, ov = record["chaos"], record["overhead"]
+    return [
+        Metric("obs_traces_missing", float(ch["traces_missing"]),
+               "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_traces_duplicate", float(ch["traces_duplicate"]),
+               "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_orphan_spans", float(ch["orphan_spans"]), "count",
+               kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_unclosed_spans", float(ch["unclosed_spans"]),
+               "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_span_sum_violations",
+               float(ch["span_sum_violations"]), "count", kind="hard",
+               gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_unattributed_hops", float(ch["unattributed_hops"]),
+               "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_requests_lost", float(ch["requests_lost"]), "count",
+               kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_escalated_traces", float(ch["escalated_traces"]),
+               "count", kind="hard", gate={"op": "ge", "bound": 1.0}),
+        Metric("obs_requeued_traces", float(ch["requeued_traces"]),
+               "count", kind="hard", gate={"op": "ge", "bound": 1.0}),
+        Metric("obs_export_roundtrip_ok",
+               float(ch["export_roundtrip_ok"]), "bool", kind="hard",
+               gate={"op": "eq", "bound": 1.0}),
+        Metric("obs_overhead_x", ov["overhead_x"], "x", kind="hard",
+               gate={"op": "le", "bound": 1.05}, smoke_ok=False),
+        Metric("obs_traced_p50_ms", ch["traced_p50_ms"], "ms",
+               direction="lower"),
+        Metric("obs_typed_errors", float(ch["typed_errors"]), "count",
+               kind="info"),
+    ]
+
+
+def check(record: dict) -> None:
+    """Standalone acceptance assertions (the runner gates via baselines
+    instead)."""
+    ch, ov = record["chaos"], record["overhead"]
+    fails = []
+    for key, label in (("traces_missing", "requests without a trace"),
+                       ("traces_duplicate", "duplicate traces"),
+                       ("orphan_spans", "orphan spans"),
+                       ("unclosed_spans", "unclosed spans"),
+                       ("span_sum_violations",
+                        "traces whose span sum misses e2e latency by "
+                        ">5%"),
+                       ("unattributed_hops",
+                        "traces with unexplained hops"),
+                       ("requests_lost", "requests lost")):
+        if ch[key] != 0:
+            fails.append(f"{ch[key]} {label} (must be 0)")
+    if ch["escalated_traces"] < 1:
+        fails.append("chaos replay produced no escalation hop to trace")
+    if ch["requeued_traces"] < 1:
+        fails.append("chaos replay produced no failover requeue to trace")
+    if not ch["export_roundtrip_ok"]:
+        fails.append("JSONL sink / Prometheus exposition round-trip "
+                     "disagrees with in-memory traces")
+    if not record["smoke"] and ov["overhead_x"] > 1.05:
+        fails.append(f"obs clean-path overhead {ov['overhead_x']:.3f}x "
+                     "> 1.05x")
+    if fails:
+        raise SystemExit("FAIL: " + "; ".join(fails))
+    print(f"PASS: {ch['n_requests']} requests -> "
+          f"{ch['n_requests'] - ch['traces_missing']} complete traces "
+          f"({ch['escalated_traces']} escalated, "
+          f"{ch['requeued_traces']} requeued), overhead "
+          f"{ov['overhead_x']:.3f}x")
+
+
+def run(config) -> tuple:
+    """Runner entrypoint: ExperimentConfig -> (metrics, record)."""
+    args = parser().parse_args([])
+    args.json = ""
+    if config.mode in ("w8a8", "w4a8"):
+        args.mode = config.mode
+    if config.smoke:
+        apply_smoke(args)
+    for k, v in config.extra.items():
+        setattr(args, k.replace("-", "_"), v)
+    args.smoke = config.smoke
+    record = collect(args)
+    return metrics_from_record(record), record
+
+
+def main(argv=None):
+    args = parser().parse_args(argv)
+    if args.smoke:
+        apply_smoke(args)
+    record = collect(args)
+    if args.json:
+        result = schema.ExperimentResult(
+            experiment={"domain": "obs", "mode": args.mode,
+                        "path": "dense", "replicas": 4,
+                        "devices": len(jax.devices()),
+                        "smoke": args.smoke},
+            fingerprint=(f"obs:{args.mode}:dense:r4"
+                         f":d{len(jax.devices())}"),
+            hardware=schema.hardware_context(),
+            metrics=metrics_from_record(record),
+            detail=record)
+        schema.write_document(args.json, schema.bench_document(
+            [result], generated_by="benchmarks/obs_bench.py"))
+        print(f"\nwrote {args.json}")
+    check(record)
+
+
+if __name__ == "__main__":
+    main()

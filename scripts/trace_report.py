@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Render a latency breakdown table from a JSONL trace file.
+
+Reads the per-request traces written by `--trace-out` (repro.obs,
+docs/observability.md) and attributes each trace's wall time to three
+buckets:
+
+  queue      hop-0 "queue" spans — time waiting for a flush slot
+  compute    hop-0 "serve" spans — time inside the engine flush
+  escalation all hop>0 spans — re-queue + re-serve time spent on
+             guardrail escalations and failover requeues
+
+Per-trace the three buckets tile the end-to-end duration exactly (the
+span model closes each segment where the next begins), so the table's
+rows sum to the latency column. Usage:
+
+    PYTHONPATH=src python scripts/trace_report.py traces.jsonl
+    PYTHONPATH=src python scripts/trace_report.py traces.jsonl --kind chunk
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str):
+    traces = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                traces.append(json.loads(line))
+    return traces
+
+
+def breakdown(trace: dict) -> dict:
+    """Attribute one trace's spans to queue/compute/escalation ms."""
+    out = {"queue_ms": 0.0, "compute_ms": 0.0, "escalation_ms": 0.0}
+    for span in trace.get("spans", ()):
+        if span.get("parent_id") is None:     # root span == e2e latency
+            continue
+        dur = (span["t1"] - span["t0"]) * 1e3
+        hop = span.get("attrs", {}).get("hop", 0)
+        if hop > 0:
+            out["escalation_ms"] += dur
+        elif span["name"] == "queue":
+            out["queue_ms"] += dur
+        else:
+            out["compute_ms"] += dur
+    out["total_ms"] = trace.get("duration_s", 0.0) * 1e3
+    out["hops"] = trace.get("hops", 0)
+    out["status"] = trace.get("status", "")
+    return out
+
+
+def percentile(values, q):
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return xs[idx]
+
+
+def render(rows, out=sys.stdout):
+    cols = ("segment", "p50 ms", "p95 ms", "p99 ms", "mean ms", "share")
+    widths = [max(len(c), 12) for c in cols]
+    widths[0] = max(widths[0], *(len(r["segment"]) for r in rows))
+    line = "  ".join(f"{{:<{w}}}" if i == 0 else f"{{:>{w}}}"
+                     for i, w in enumerate(widths))
+    print(line.format(*cols), file=out)
+    print(line.format(*("-" * w for w in widths)), file=out)
+    for r in rows:
+        print(line.format(r["segment"], f"{r['p50']:.2f}",
+                          f"{r['p95']:.2f}", f"{r['p99']:.2f}",
+                          f"{r['mean']:.2f}", f"{r['share']:.1%}"),
+              file=out)
+
+
+def report(traces, kind=None, out=sys.stdout):
+    if kind:
+        traces = [t for t in traces if t.get("kind") == kind]
+    if not traces:
+        print("no traces" + (f" of kind {kind!r}" if kind else ""),
+              file=out)
+        return 1
+    bds = [breakdown(t) for t in traces]
+    total = sum(b["total_ms"] for b in bds) or 1.0
+    rows = []
+    for seg, key in (("queue wait", "queue_ms"),
+                     ("compute", "compute_ms"),
+                     ("escalation/requeue", "escalation_ms"),
+                     ("end-to-end", "total_ms")):
+        vals = [b[key] for b in bds]
+        rows.append({
+            "segment": seg,
+            "p50": percentile(vals, 0.50),
+            "p95": percentile(vals, 0.95),
+            "p99": percentile(vals, 0.99),
+            "mean": sum(vals) / len(vals),
+            "share": sum(vals) / total,
+        })
+    n_err = sum(1 for b in bds if b["status"] == "error")
+    n_hopped = sum(1 for b in bds if b["hops"] > 0)
+    print(f"{len(bds)} trace(s)"
+          + (f", kind={kind}" if kind else "")
+          + f": {n_hopped} escalated/requeued, {n_err} error(s)",
+          file=out)
+    render(rows, out=out)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace_file", help="JSONL trace file (--trace-out)")
+    ap.add_argument("--kind", default=None,
+                    help="only report traces of this kind "
+                         "(e.g. request, chunk)")
+    args = ap.parse_args(argv)
+    if not Path(args.trace_file).exists():
+        print(f"no such file: {args.trace_file}", file=sys.stderr)
+        return 2
+    return report(load(args.trace_file), kind=args.kind)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -64,6 +64,7 @@ import jax
 from repro.guardrails import (EscalationRecord, GuardrailConfig,
                               GuardrailViolation, tier_rank)
 from repro.models import so3krates as so3
+from repro.obs.metrics import REGISTRY
 from repro.serving.bucketing import Graph, assign_bucket
 from repro.serving.engine import QuantizedEngine, MoleculeResult, ServeConfig
 from repro.serving.qparams import fp32_bytes, quantize_so3_params
@@ -217,6 +218,14 @@ class ClusterPool:
         self._n_stalls_detected = 0
         self._n_breaker_trips = 0
         self._quarantine_counts: Dict[int, int] = {}
+        # fleet-lifetime accumulators for counters of engines this pool
+        # retired (rolling swap_artifact exchanges, quarantine
+        # cold-restarts): without these, stats() summed only the
+        # *current* engines' dispatch/guardrail counters and every
+        # exchange silently zeroed the fleet totals
+        self._retired_dispatch: Dict[str, int] = {}
+        self._retired_detectors: Dict[str, int] = {}
+        self._n_engines_retired = 0
         # static bucket -> home replica map (affinity tie-break): spread
         # the ladder round-robin over *primary-tier* replicas so each
         # "owns" some shape classes (escalation replicas never get homes)
@@ -365,23 +374,30 @@ class ClusterPool:
         is closed or no replica survives, :class:`SchedulerOverloaded`
         (with ``retry_after_s``) when bounded admission sheds."""
         handle = RequestHandle(graph, time.monotonic())
-        handle.bucket_capacity = assign_bucket(graph.n_atoms,
-                                               self._buckets).capacity
-        # a replica can die between routing and admission: re-route, the
-        # alive set is re-read each attempt
-        for _ in range(2 * len(self._replicas)):
-            rep = self._route(handle.bucket_capacity)
-            if rep.try_submit(handle):
-                with self._lock:
-                    self._n_routed += 1
-                    self._routed_per_replica[rep.replica_id] = (
-                        self._routed_per_replica.get(rep.replica_id, 0) + 1)
-                return handle
-        with self._lock:
-            self._n_shed += 1
-        raise SchedulerOverloaded(
-            "no replica admitted the request (queues filled while "
-            "routing)", self._retry_after())
+        try:
+            handle.bucket_capacity = assign_bucket(graph.n_atoms,
+                                                   self._buckets).capacity
+            if handle.trace is not None:
+                handle.trace.set_attr("bucket", handle.bucket_capacity)
+            # a replica can die between routing and admission: re-route,
+            # the alive set is re-read each attempt
+            for _ in range(2 * len(self._replicas)):
+                rep = self._route(handle.bucket_capacity)
+                if rep.try_submit(handle):
+                    with self._lock:
+                        self._n_routed += 1
+                        self._routed_per_replica[rep.replica_id] = (
+                            self._routed_per_replica.get(
+                                rep.replica_id, 0) + 1)
+                    return handle
+            with self._lock:
+                self._n_shed += 1
+            raise SchedulerOverloaded(
+                "no replica admitted the request (queues filled while "
+                "routing)", self._retry_after())
+        except BaseException as e:
+            handle._reject(e)
+            raise
 
     def submit_chunk(self, fn, bucket_capacity: int,
                      preferred_replica: Optional[int] = None,
@@ -413,31 +429,37 @@ class ClusterPool:
         min_rank = (self._primary_rank if min_tier is None
                     else tier_rank(min_tier))
         mq = self.cluster.max_queue
-        if preferred_replica is not None:
-            for rep in self._replicas:
-                if (rep.replica_id == preferred_replica and rep.accepting
-                        and tier_rank(rep.tier) >= min_rank
-                        and (mq is None or rep.depth() < mq)
-                        and rep.try_submit(handle)):
+        try:
+            if preferred_replica is not None:
+                for rep in self._replicas:
+                    if (rep.replica_id == preferred_replica
+                            and rep.accepting
+                            and tier_rank(rep.tier) >= min_rank
+                            and (mq is None or rep.depth() < mq)
+                            and rep.try_submit(handle)):
+                        with self._lock:
+                            self._n_chunks_routed += 1
+                            self._routed_per_replica[rep.replica_id] = (
+                                self._routed_per_replica.get(
+                                    rep.replica_id, 0) + 1)
+                        return handle
+            for _ in range(2 * len(self._replicas)):
+                rep = self._route(handle.bucket_capacity, min_rank=min_rank)
+                if rep.try_submit(handle):
                     with self._lock:
                         self._n_chunks_routed += 1
                         self._routed_per_replica[rep.replica_id] = (
-                            self._routed_per_replica.get(rep.replica_id, 0)
-                            + 1)
+                            self._routed_per_replica.get(
+                                rep.replica_id, 0) + 1)
                     return handle
-        for _ in range(2 * len(self._replicas)):
-            rep = self._route(handle.bucket_capacity, min_rank=min_rank)
-            if rep.try_submit(handle):
-                with self._lock:
-                    self._n_chunks_routed += 1
-                    self._routed_per_replica[rep.replica_id] = (
-                        self._routed_per_replica.get(rep.replica_id, 0) + 1)
-                return handle
-        with self._lock:
-            self._n_shed += 1
-        raise SchedulerOverloaded(
-            "no replica admitted the chunk (queues filled while routing)",
-            self._retry_after())
+            with self._lock:
+                self._n_shed += 1
+            raise SchedulerOverloaded(
+                "no replica admitted the chunk (queues filled while "
+                "routing)", self._retry_after())
+        except BaseException as e:
+            handle._reject(e)
+            raise
 
     def infer(self, graphs: Sequence[Graph],
               timeout: Optional[float] = None,
@@ -546,6 +568,8 @@ class ClusterPool:
         requeue its queued + in-flight handles onto survivors."""
         with self._lock:
             self._n_failures += 1
+        REGISTRY.counter("pool_events_total",
+                         event="replica_failure").inc()
         self._requeue_orphans(rep, orphans, error)
 
     def _requeue_orphans(self, rep: Replica, orphans: List[RequestHandle],
@@ -560,8 +584,22 @@ class ClusterPool:
         for h in orphans:
             h.n_requeues += 1
             if h.n_requeues > self.cluster.max_requeues:
+                if h.trace is not None:
+                    h.trace.event("requeue_budget_exhausted",
+                                  from_replica=rep.replica_id,
+                                  n_requeues=h.n_requeues)
                 h._resolve(error=error, replica_id=rep.replica_id)
                 continue
+            if h.trace is not None:
+                # re-enter a queue *before* any survivor can pick the
+                # handle: the hop's queue segment starts here (it
+                # closes the dead replica's serve segment for in-flight
+                # work; queued orphans just start a fresh queue segment)
+                h.trace.bump_hop()
+                h.trace.event("requeued", from_replica=rep.replica_id,
+                              error=type(error).__name__)
+                h.trace.begin("queue")
+            REGISTRY.counter("pool_events_total", event="requeued").inc()
             placed = False
             for min_rank in tries:
                 for _ in range(2 * len(self._replicas)):
@@ -607,6 +645,16 @@ class ClusterPool:
              and tier_rank(r.tier) > from_rank),
             key=lambda r: (tier_rank(r.tier), r.depth(), r.replica_id))
         reason = result.flags[0].reason if result.flags else "flagged"
+        if handle.trace is not None and targets:
+            # hop bookkeeping *before* the first try_submit: once a
+            # target admits the handle its worker may open the next
+            # serve segment immediately, so the escalation's queue
+            # segment must already be the open one
+            handle.trace.bump_hop()
+            handle.trace.event("escalated", from_tier=rep.tier,
+                               from_replica=rep.replica_id, reason=reason)
+            handle.trace.begin("queue", tier=targets[0].tier,
+                               escalated=True)
         for tgt in targets:
             # append the audit hop *before* submitting: the target's
             # flush stamps handle.escalations into its result
@@ -616,10 +664,18 @@ class ClusterPool:
             if tgt.try_submit(handle, force=True):
                 with self._lock:
                     self._n_escalated += 1
+                REGISTRY.counter("pool_events_total",
+                                 event="escalated").inc()
                 return True
             handle.escalations.pop()
+        if handle.trace is not None and targets:
+            # no target admitted: the flagging replica resolves locally;
+            # the optimistic queue segment closes at resolve (~0s)
+            handle.trace.event("escalation_failed", from_tier=rep.tier)
         with self._lock:
             self._n_escalation_failures += 1
+        REGISTRY.counter("pool_events_total",
+                         event="escalation_failed").inc()
         return False
 
     # -- watchdog / circuit breaker / quarantine -----------------------------
@@ -676,6 +732,8 @@ class ClusterPool:
             n = self._quarantine_counts.get(rep.replica_id, 0) + 1
             self._quarantine_counts[rep.replica_id] = n
             self._n_quarantined += 1
+        REGISTRY.counter("pool_events_total",
+                         event="quarantined").inc()
         orphans = rep.expropriate(error)
         self._requeue_orphans(rep, orphans, error)
         if n > self.cluster.max_quarantines:
@@ -683,6 +741,10 @@ class ClusterPool:
                 self._n_permanent_deaths += 1
             return
         old = rep.engine
+        # the expropriated worker runs no further flushes on old (its
+        # handles are gone); fold its counters into the fleet totals
+        # before the cold restart discards the engine
+        self._retire_engine_counters(old)
         eng = QuantizedEngine.from_quantized(
             old.model_cfg, old.qparams, old.serve,
             device=old.device, artifact_version=old.artifact_version,
@@ -703,6 +765,24 @@ class ClusterPool:
         survivors. ``mode="in_flight"`` also fails the flush being
         formed — see :meth:`Replica.kill`."""
         self._replicas[replica_id].kill(mode)
+
+    def _retire_engine_counters(self, engine: QuantizedEngine) -> None:
+        """Fold a retiring engine's dispatch/guardrail counters into the
+        pool's fleet-lifetime accumulators before the engine is dropped
+        (swap_artifact exchange, quarantine cold-restart) — ``stats()``
+        adds these back so fleet totals survive engine exchanges. The
+        process-wide ``repro.obs`` registry needs no such handling: its
+        instruments are keyed by (name, labels), not by engine."""
+        dispatch = engine.stats_snapshot()
+        detectors = engine.guard_snapshot()
+        with self._lock:
+            for k, v in dispatch.items():
+                self._retired_dispatch[k] = (
+                    self._retired_dispatch.get(k, 0) + v)
+            for k, v in detectors.items():
+                self._retired_detectors[k] = (
+                    self._retired_detectors.get(k, 0) + v)
+            self._n_engines_retired += 1
 
     # -- rolling weight swap -------------------------------------------------
 
@@ -737,7 +817,13 @@ class ClusterPool:
                 fp32_nbytes=art.fp32_bytes, device=rep.device,
                 artifact_version=art.version_tag)
             warm_s = eng.warmup() if warmup else 0.0
+            old_engine = rep.engine
             pause_s = rep.swap_engine(eng)
+            # swap_engine held the flush lock: once it returns, the old
+            # engine serves no more work and its counters are final
+            self._retire_engine_counters(old_engine)
+            REGISTRY.counter("pool_events_total",
+                             event="engine_swapped").inc()
             report.append({"replica_id": rep.replica_id,
                            "warmup_s": warm_s, "pause_s": pause_s,
                            "total_s": time.monotonic() - t0})
@@ -769,6 +855,12 @@ class ClusterPool:
             self._n_chunks_requeued = 0
             self._routed_per_replica = {}
             self._retry_cache = (0.0, 0.0)
+            # per-phase view: retired-engine accumulators zero with the
+            # engine counters they extend (fleet-lifetime totals live in
+            # the process-wide obs registry, which reset_stats never
+            # touches)
+            self._retired_dispatch = {}
+            self._retired_detectors = {}
 
     def attach_stats_source(self, name: str, fn) -> None:
         """Register an extra ``stats()`` section: ``fn()`` must return a
@@ -800,7 +892,12 @@ class ClusterPool:
                     sorted(self._routed_per_replica.items())},
             }
             sources = dict(self._stats_sources)
-        dispatch: Dict[str, int] = {}
+        # fleet totals = current engines + engines retired by swaps /
+        # quarantine cold-restarts (the satellite fix: exchanges used to
+        # silently zero these)
+        with self._lock:
+            dispatch: Dict[str, int] = dict(self._retired_dispatch)
+            n_retired = self._n_engines_retired
         for r in self._replicas:
             for k, v in r.engine.stats_snapshot().items():
                 dispatch[k] = dispatch.get(k, 0) + v
@@ -813,6 +910,7 @@ class ClusterPool:
             "warmup_s": max((r["warmup_s"] for r in replicas), default=0.0),
             "replicas": replicas,
             "router": router,
+            "n_engines_retired": n_retired,
         }
         out["chunks"] = {
             "n_routed": router["n_chunks_routed"],
@@ -825,7 +923,8 @@ class ClusterPool:
         tiers: Dict[str, int] = {}
         for r in self._replicas:
             tiers[r.tier] = tiers.get(r.tier, 0) + 1
-        detectors: Dict[str, int] = {}
+        with self._lock:
+            detectors: Dict[str, int] = dict(self._retired_detectors)
         for r in self._replicas:
             for k, v in r.engine.guard_snapshot().items():
                 detectors[k] = detectors.get(k, 0) + v

@@ -61,6 +61,7 @@ from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.guardrails import GuardrailViolation
+from repro.obs.metrics import REGISTRY
 from repro.serving.engine import QuantizedEngine
 from repro.server.scheduler import BatchQueue, RequestHandle, SchedulerConfig
 from repro.server.stats import FlushRecord
@@ -93,6 +94,8 @@ class ChunkHandle(RequestHandle):
 
     __slots__ = ("fn", "session_id", "chunk_idx")
 
+    _trace_kind = "chunk"
+
     def __init__(self, fn: Callable[[QuantizedEngine], Any],
                  t_submit: float, bucket_capacity: int = 0,
                  session_id: str = "", chunk_idx: int = 0):
@@ -100,6 +103,9 @@ class ChunkHandle(RequestHandle):
         self.fn = fn
         self.session_id = session_id
         self.chunk_idx = chunk_idx
+        if self.trace is not None:
+            self.trace.set_attr("session_id", session_id)
+            self.trace.set_attr("chunk_idx", chunk_idx)
 
 
 class Replica:
@@ -161,6 +167,17 @@ class Replica:
         self._expropriated = False
         self._admit_at = 0.0            # monotonic probation gate
         self._last_beat = time.monotonic()
+        # fleet-level obs plane: instruments are shared across replicas
+        # (and across engine exchanges) by (name, labels) identity
+        self._m_wait = REGISTRY.histogram("serve_queue_wait_seconds",
+                                          surface="replica")
+        self._m_service = REGISTRY.histogram("serve_flush_seconds",
+                                             surface="replica")
+        self._m_completed = REGISTRY.counter(
+            "serve_requests_total", surface="replica", event="completed")
+        self._m_chunks = {
+            k: REGISTRY.counter("cluster_chunks_total", event=k)
+            for k in ("completed", "error")}
         self._worker = threading.Thread(
             target=self._run, name=f"cluster-replica-{replica_id}",
             daemon=True)
@@ -390,6 +407,9 @@ class Replica:
         safe (it always is, chunks are pure functions of that state, but
         the *decision* belongs to the layer that can also checkpoint)."""
         t0 = time.monotonic()
+        if chunk.trace is not None:
+            chunk.trace.begin("serve", t0, replica=self.replica_id,
+                              tier=self.tier)
         chunk_error = None
         stall = self._take_stall()
         with self._engine_lock:   # swaps wait for the chunk, not v.v.
@@ -412,6 +432,7 @@ class Replica:
                 self._consecutive_errors += 1
                 broken = (self._consecutive_errors
                           >= self.MAX_CONSECUTIVE_ERRORS)
+            self._m_chunks["error"].inc()
             chunk._resolve(error=chunk_error, replica_id=self.replica_id)
             if broken:
                 self._die([], chunk_error)
@@ -427,6 +448,7 @@ class Replica:
             self._last_beat = time.monotonic()
         # a genuine result is still the best resolution — first resolve
         # wins if the pool's re-run already answered
+        self._m_chunks["completed"].inc()
         chunk._resolve(result=result, replica_id=self.replica_id)
         return not expropriated
 
@@ -500,6 +522,11 @@ class Replica:
             cap, handles, reason = picked
             wait_s = time.monotonic() - handles[0].t_submit
             t0 = time.monotonic()
+            for h in handles:
+                if h.trace is not None:
+                    h.trace.begin("serve", t0, replica=self.replica_id,
+                                  tier=self.tier, bucket=cap,
+                                  flush_reason=reason)
             flush_error = None
             stall = self._take_stall()
             with self._engine_lock:   # swap waits for the flush, not v.v.
@@ -538,11 +565,17 @@ class Replica:
                 continue
             service_s = time.monotonic() - t0
             # stamp the escalation audit trail the pool appended to each
-            # handle into its delivered result
+            # handle (and the obs trace id) into its delivered result
             results = [dataclasses.replace(
                            r, replica_id=self.replica_id,
-                           escalations=tuple(h.escalations))
+                           escalations=tuple(h.escalations),
+                           trace_id=(h.trace.trace_id
+                                     if h.trace is not None else ""))
                        for h, r in zip(handles, results)]
+            trace_ids = tuple(h.trace.trace_id for h in handles
+                              if h.trace is not None)
+            # stub engines in tests may not expose the profiling hook
+            bd = getattr(engine, "last_infer_breakdown", None) or {}
             with self._lock:
                 self._busy_since = None
                 self._in_flight = []
@@ -554,13 +587,27 @@ class Replica:
                     capacity=cap, n_requests=len(handles), reason=reason,
                     queue_depth=depth, wait_s=wait_s, service_s=service_s,
                     path=results[0].path, batch_size=results[0].batch_size,
-                    replica_id=self.replica_id))
+                    replica_id=self.replica_id, trace_ids=trace_ids,
+                    prep_s=bd.get("prep_s", 0.0),
+                    dispatch_s=bd.get("dispatch_s", 0.0),
+                    sync_s=bd.get("sync_s", 0.0)))
                 # feed the circuit-breaker window (flush results only —
                 # chunk health is the session layer's concern)
                 for r in results:
                     self._recent_flags.append(bool(r.flags))
                 self._n_flagged += sum(1 for r in results if r.flags)
+            self._m_completed.inc(len(handles))
+            self._m_wait.observe(wait_s)
+            self._m_service.observe(service_s)
+            REGISTRY.counter("serve_flushes_total", surface="replica",
+                             reason=reason).inc()
             for h, r in zip(handles, results):
+                if h.trace is not None and r.flags:
+                    for f in r.flags:
+                        h.trace.event("guardrail_flag", reason=f.reason,
+                                      severity=f.severity,
+                                      replica=self.replica_id,
+                                      tier=self.tier)
                 if r.flags:
                     # triage, hook first (no replica locks held): the
                     # pool may take ownership and re-run one tier up

@@ -59,7 +59,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                              attn_chunk_q=attn_chunk_q, remat=remat,
                              act_sharding=act_sharding, norm_f32=norm_f32)
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-    t0 = time.time()
+    t0 = time.monotonic()
 
     params, p_specs, b_specs = _spec_trees(cfg, cell, mesh, policy)
     p_sh = shd.to_shardings(p_specs, mesh)
@@ -103,9 +103,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     with mesh:
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.monotonic() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

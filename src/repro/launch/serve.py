@@ -99,13 +99,13 @@ def run_lm(args) -> None:
     # warm
     nxt, cache = step(params, cache, tok, jnp.asarray(0, jnp.int32))
     jax.block_until_ready(nxt)
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(1, args.tokens):
         nxt, cache = step(params, cache,
                           nxt if cfg.frontend == "token" else tok,
                           jnp.asarray(i, jnp.int32))
     jax.block_until_ready(nxt)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     tps = (args.tokens - 1) * args.batch / dt
     print(f"arch={cfg.name} quant={args.quant} kv_quant={args.kv_quant}")
     print(f"weights: fp32 {fp32_bytes/1e6:.2f} MB -> served "
@@ -135,13 +135,14 @@ def run_so3(args) -> None:
         # pass. The mode is baked into the packed weights, so it comes
         # from the artifact unless the user explicitly asks (and an
         # explicit mismatch is an error, not a silent override).
-        t0 = time.time()
+        t0 = time.monotonic()
         mode = args.mode or _artifact_mode(args.artifact)
         serve = ServeConfig(mode=mode, bucket_sizes=tuple(args.buckets),
                             max_batch=args.max_batch, path=args.path)
         engine = load_engine(args.artifact, serve=serve)
         model_cfg = engine.model_cfg
-        print(f"cold start from {args.artifact} in {time.time() - t0:.2f}s "
+        print(f"cold start from {args.artifact} in "
+              f"{time.monotonic() - t0:.2f}s "
               "(packed weights, no quantization pass)")
     else:
         serve = ServeConfig(mode=args.mode or "w8a8",
@@ -178,14 +179,14 @@ def run_so3(args) -> None:
 
     # warm the exact shape classes this traffic will use, so the timed
     # pass below measures steady-state throughput, not compilation
-    t0 = time.time()
+    t0 = time.monotonic()
     engine.infer_batch(graphs)
     print(f"warmup: compiled {len(engine.compiled_shapes)} shape "
-          f"class(es) in {time.time() - t0:.2f}s")
+          f"class(es) in {time.monotonic() - t0:.2f}s")
 
-    t0 = time.time()
+    t0 = time.monotonic()
     results = engine.infer_batch(graphs)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     buckets_used = sorted({r.bucket_capacity for r in results})
     paths_used = sorted({r.path for r in results})
     print(f"infer_batch: {len(graphs)} molecules "
@@ -386,6 +387,38 @@ def _print_server_summary(res, stats, args, max_batch) -> None:
     print(f"dispatch: {stats['engine_dispatch']}")
 
 
+def _setup_obs(args):
+    """`--metrics-out` / `--trace-out`: arm the unified metrics plane
+    and the per-request tracer (repro.obs, docs/observability.md).
+    Returns a cleanup callable that flushes the final export and closes
+    the trace sink."""
+    if not (args.metrics_out or args.trace_out):
+        return lambda: None
+    from repro.obs import (JsonlTraceSink, PeriodicExporter,
+                           configure_tracing)
+    sink = exporter = None
+    if args.trace_out:
+        sink = JsonlTraceSink(args.trace_out)
+        configure_tracing(enabled=True, sink=sink)
+        print(f"tracing: per-request spans -> {args.trace_out} "
+              "(render with scripts/trace_report.py)")
+    if args.metrics_out:
+        exporter = PeriodicExporter(
+            args.metrics_out, interval_s=args.export_interval).start()
+        print(f"metrics: Prometheus text exposition -> "
+              f"{args.metrics_out} every {args.export_interval:.0f}s")
+
+    def cleanup():
+        if exporter is not None:
+            exporter.stop()   # joins + writes one final export
+        if sink is not None:
+            configure_tracing(enabled=False)
+            sink.close()
+            print(f"tracing: {sink.n_written} trace(s) written to "
+                  f"{args.trace_out}")
+    return cleanup
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default="lm", choices=["lm", "so3"])
@@ -471,6 +504,20 @@ def main():
                          "is stuck on one flush/chunk longer than this "
                          "is quarantined and cold-restarted, its "
                          "requests requeued (--server cluster path)")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="export the unified metrics registry as "
+                         "Prometheus text exposition to this file, "
+                         "rewritten atomically every --export-interval "
+                         "seconds (repro.obs, docs/observability.md)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="enable per-request tracing and append one "
+                         "JSON trace per completed request to this "
+                         "file; render the latency breakdown with "
+                         "scripts/trace_report.py")
+    ap.add_argument("--export-interval", type=float, default=5.0,
+                    metavar="S",
+                    help="metrics export period in seconds "
+                         "(--metrics-out)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifact",
                     help="cold-start the engine from a packed quantized "
@@ -480,12 +527,16 @@ def main():
                          ".npz and continue")
     args = ap.parse_args()
 
-    if args.workload == "lm":
-        if not args.arch:
-            ap.error("--workload lm requires --arch")
-        run_lm(args)
-    else:
-        run_so3(args)
+    cleanup_obs = _setup_obs(args)
+    try:
+        if args.workload == "lm":
+            if not args.arch:
+                ap.error("--workload lm requires --arch")
+            run_lm(args)
+        else:
+            run_so3(args)
+    finally:
+        cleanup_obs()
 
 
 if __name__ == "__main__":

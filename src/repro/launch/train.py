@@ -120,7 +120,7 @@ def main():
 
     data_iter = synthetic_token_batches(cfg, args.batch, args.seq, seed=17)
     losses = []
-    t_start = time.time()
+    t_start = time.monotonic()
     with mesh:
         for step in range(start_step, args.steps):
             batch = next(data_iter)
@@ -133,7 +133,7 @@ def main():
                 loss_f = float(loss)
                 losses.append(loss_f)
                 print(f"step {step:5d} loss {loss_f:.4f} "
-                      f"({(time.time()-t_start):.1f}s)", flush=True)
+                      f"({(time.monotonic()-t_start):.1f}s)", flush=True)
             if args.ckpt_every and step and step % args.ckpt_every == 0:
                 mgr.save(step, params, extra={"loss": float(loss)})
 

@@ -1,0 +1,21 @@
+"""repro.obs — unified metrics plane + end-to-end request tracing.
+
+Dependency leaf (stdlib only, like ``repro.guardrails``): everything in
+the stack can import it. See docs/observability.md.
+"""
+from repro.obs.metrics import (MetricsRegistry, Counter, Gauge, Histogram,
+                               REGISTRY, get_registry, snapshot)
+from repro.obs.trace import (Span, RequestTrace, Tracer, TRACER,
+                             configure_tracing, get_tracer)
+from repro.obs.export import (prometheus_text, write_metrics,
+                              JsonlTraceSink, PeriodicExporter,
+                              load_traces)
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "REGISTRY",
+    "get_registry", "snapshot",
+    "Span", "RequestTrace", "Tracer", "TRACER", "configure_tracing",
+    "get_tracer",
+    "prometheus_text", "write_metrics", "JsonlTraceSink",
+    "PeriodicExporter", "load_traces",
+]

@@ -59,6 +59,8 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.guardrails import GuardrailViolation
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 from repro.serving.bucketing import BucketSpec, Graph, assign_bucket
 from repro.serving.engine import QuantizedEngine, MoleculeResult
 from repro.server.stats import FlushRecord, flush_summary
@@ -121,11 +123,19 @@ class RequestHandle:
     single-engine scheduler; the serving replica's id in a cluster —
     after failover this is the survivor that actually completed it).
     ``n_requeues`` counts cluster failover requeues (0 outside clusters).
+
+    ``trace`` is the request's :class:`repro.obs.trace.RequestTrace`
+    (``None`` when tracing is disabled — the default). It is minted here
+    so the root span starts exactly at ``t_submit``, and finished in
+    ``_resolve`` at exactly ``t_done``, whichever path (scheduler,
+    cluster replica, failover survivor) resolves the handle.
     """
 
     __slots__ = ("graph", "t_submit", "t_done", "bucket_capacity",
-                 "replica_id", "n_requeues", "escalations", "_event",
-                 "_result", "_error")
+                 "replica_id", "n_requeues", "escalations", "trace",
+                 "_event", "_result", "_error")
+
+    _trace_kind = "request"  # ChunkHandle overrides
 
     def __init__(self, graph: Graph, t_submit: float,
                  bucket_capacity: int = 0):
@@ -139,12 +149,22 @@ class RequestHandle:
         # EscalationRecords, appended by ClusterPool when a flagged
         # result is re-run one tier up; stamped into the final result)
         self.escalations: list = []
+        self.trace = TRACER.start_request(kind=type(self)._trace_kind,
+                                          t0=t_submit)
         self._event = threading.Event()
         self._result: Optional[MoleculeResult] = None
         self._error: Optional[BaseException] = None
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def _reject(self, exc: BaseException) -> None:
+        """Submit-path rejection (oversize / shed / closed): the handle
+        is never returned to the caller, so finish its trace here —
+        rejections stay observable and no trace is left unfinished."""
+        if self.trace is not None:
+            self.trace.finish(status="rejected",
+                              error=type(exc).__name__)
 
     def result(self, timeout: Optional[float] = None,
                timeout_s: Optional[float] = None) -> MoleculeResult:
@@ -181,7 +201,19 @@ class RequestHandle:
         self._result, self._error = result, error
         if replica_id is not None:
             self.replica_id = replica_id
-        self.t_done = time.monotonic()
+        now = time.monotonic()
+        self.t_done = now
+        if self.trace is not None:
+            # same instant as t_done: the trace's span durations sum
+            # exactly to latency_s (the tiling invariant, repro.obs.trace)
+            self.trace.finish(
+                now,
+                status="error" if error is not None else "ok",
+                error=type(error).__name__ if error is not None else None,
+                replica_id=self.replica_id,
+                bucket=self.bucket_capacity,
+                n_requeues=self.n_requeues,
+                n_escalations=len(self.escalations))
         self._event.set()
 
 
@@ -310,6 +342,17 @@ class MicroBatchScheduler:
         self._n_shed = 0
         self._n_guard_flagged = 0
         self._service_ema: Optional[float] = None
+        # dual-write into the process-wide metrics plane (repro.obs):
+        # the per-instance counters above stay the thin stats() view,
+        # the registry carries fleet-lifetime labelled totals
+        self._m_requests = {
+            k: REGISTRY.counter("serve_requests_total",
+                                surface="scheduler", event=k)
+            for k in ("submitted", "completed", "shed", "guard_flagged")}
+        self._m_wait = REGISTRY.histogram("serve_queue_wait_seconds",
+                                          surface="scheduler")
+        self._m_service = REGISTRY.histogram("serve_flush_seconds",
+                                             surface="scheduler")
         self.warmup_s = engine.warmup() if config.warmup else 0.0
         self._worker = threading.Thread(
             target=self._serve_loop, name="microbatch-scheduler", daemon=True)
@@ -323,23 +366,33 @@ class MicroBatchScheduler:
         ``close()``; :class:`SchedulerOverloaded` when bounded admission
         (``max_queue``) sheds the request."""
         handle = RequestHandle(graph, time.monotonic())
-        with self._lock:
-            # bucket assignment under the lock keeps oversize rejection
-            # ordered with close(); it is a few comparisons, not work
-            handle.bucket_capacity = self._queue.bucket_of(graph).capacity
-            if not self._open:
-                raise SchedulerClosed(
-                    "scheduler is closed: request not admitted")
-            if self._queue.is_full():
-                self._n_shed += 1
-                retry = self._retry_after_locked()
-                raise SchedulerOverloaded(
-                    f"admission queue at max_queue="
-                    f"{self.config.max_queue}: request shed "
-                    f"(retry in ~{retry:.3f}s)", retry)
-            self._queue.append(handle)
-            self._n_submitted += 1
-            self._lock.notify()
+        try:
+            with self._lock:
+                # bucket assignment under the lock keeps oversize
+                # rejection ordered with close(); it is a few
+                # comparisons, not work
+                handle.bucket_capacity = (
+                    self._queue.bucket_of(graph).capacity)
+                if not self._open:
+                    raise SchedulerClosed(
+                        "scheduler is closed: request not admitted")
+                if self._queue.is_full():
+                    self._n_shed += 1
+                    self._m_requests["shed"].inc()
+                    retry = self._retry_after_locked()
+                    raise SchedulerOverloaded(
+                        f"admission queue at max_queue="
+                        f"{self.config.max_queue}: request shed "
+                        f"(retry in ~{retry:.3f}s)", retry)
+                self._queue.append(handle)
+                self._n_submitted += 1
+                self._m_requests["submitted"].inc()
+                self._lock.notify()
+        except BaseException as e:
+            handle._reject(e)
+            raise
+        if handle.trace is not None:
+            handle.trace.set_attr("bucket", handle.bucket_capacity)
         return handle
 
     def _retry_after_locked(self) -> float:
@@ -405,6 +458,11 @@ class MicroBatchScheduler:
             # engine work runs outside the lock: submit stays non-blocking
             wait_s = time.monotonic() - handles[0].t_submit
             t0 = time.monotonic()
+            for h in handles:
+                if h.trace is not None:
+                    # close the queue segment, open serve, same instant
+                    h.trace.begin("serve", t0, replica=0, bucket=cap,
+                                  flush_reason=reason)
             try:
                 # on_flag="mark": a poison molecule must fail *its own*
                 # handle with a typed error, not its batch peers — the
@@ -419,6 +477,10 @@ class MicroBatchScheduler:
             # bookkeeping strictly before resolving: a client returning
             # from result() must already see this flush in stats()
             n_flagged = sum(1 for r in results if r.flags)
+            trace_ids = tuple(h.trace.trace_id for h in handles
+                              if h.trace is not None)
+            # stub engines in tests may not expose the profiling hook
+            bd = getattr(self.engine, "last_infer_breakdown", None) or {}
             with self._lock:
                 self._n_completed += len(handles)
                 self._n_guard_flagged += n_flagged
@@ -429,8 +491,23 @@ class MicroBatchScheduler:
                     capacity=cap, n_requests=len(handles), reason=reason,
                     queue_depth=depth, wait_s=wait_s, service_s=service_s,
                     path=results[0].path, batch_size=results[0].batch_size,
-                    replica_id=0))
+                    replica_id=0, trace_ids=trace_ids,
+                    prep_s=bd.get("prep_s", 0.0),
+                    dispatch_s=bd.get("dispatch_s", 0.0),
+                    sync_s=bd.get("sync_s", 0.0)))
+            self._m_requests["completed"].inc(len(handles))
+            if n_flagged:
+                self._m_requests["guard_flagged"].inc(n_flagged)
+            self._m_wait.observe(wait_s)
+            self._m_service.observe(service_s)
+            REGISTRY.counter("serve_flushes_total", surface="scheduler",
+                             reason=reason).inc()
             for h, r in zip(handles, results):
+                if h.trace is not None:
+                    r = dataclasses.replace(r, trace_id=h.trace.trace_id)
+                    for f in r.flags:
+                        h.trace.event("guardrail_flag", reason=f.reason,
+                                      severity=f.severity)
                 # fatal flags (non-finite values) are never delivered:
                 # the single-engine scheduler has no higher tier to
                 # escalate to, so the handle gets the typed error.

@@ -52,6 +52,14 @@ class FlushRecord:
     path: str            # execution path the batch took (dense/sparse)
     batch_size: int = 0  # compiled batch rows (incl. alignment dummies)
     replica_id: int = 0  # replica that served the flush (0: single engine)
+    # obs linkage: trace ids of the requests in this flush (empty when
+    # tracing is disabled); joins flush telemetry to per-request traces
+    trace_ids: tuple = ()
+    # per-flush serve-time breakdown from the engine profiling hooks
+    # (repro.obs): prep (padding), dispatch (kernel submit), device sync
+    prep_s: float = 0.0
+    dispatch_s: float = 0.0
+    sync_s: float = 0.0
 
 
 def flush_summary(flushes: Sequence[FlushRecord]) -> Dict[str, object]:

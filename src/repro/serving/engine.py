@@ -45,6 +45,7 @@ from repro.core.lee import random_rotation, random_rotations
 from repro.guardrails import (Flag, GuardrailConfig, GuardrailViolation,
                               check_result)
 from repro.models import so3krates as so3
+from repro.obs.metrics import REGISTRY
 from repro.serving.bucketing import (BucketSpec, Graph, build_edge_list,
                                      count_edges, pad_graphs, plan_batches)
 from repro.serving.forward import (batched_energy_and_forces,
@@ -125,6 +126,9 @@ class MoleculeResult:
     # entry is one re-run up the w4a8 -> w8a8 -> fp32 ladder a cluster
     # performed before this result was produced
     escalations: tuple = ()
+    # obs linkage: the request trace this result answers ("" when tracing
+    # is disabled or the result came from a direct infer_batch call)
+    trace_id: str = ""
 
 
 class QuantizedEngine:
@@ -213,6 +217,25 @@ class QuantizedEngine:
                             "flagged_outlier": 0, "flagged_lee": 0,
                             "lee_probes": 0}
         self._n_infer_calls = 0         # LEE probe sampling counter
+        # dual-write handles into the process-wide metrics plane
+        # (repro.obs.metrics): the plain dicts above stay the exact
+        # per-engine view (tests/benches subtract snapshots and expect
+        # reset_stats to zero them); the registry instruments are keyed
+        # by (name, labels) so the same counters keep accumulating across
+        # engine exchanges — ClusterPool.swap_artifact and quarantine
+        # cold-restarts no longer lose fleet-lifetime totals
+        self._m_dispatch = {
+            k: REGISTRY.counter("engine_dispatch_total",
+                                mode=serve.mode, path=k)
+            for k in self.dispatch_stats}
+        self._m_guard = {
+            k: REGISTRY.counter("engine_guard_total",
+                                mode=serve.mode, event=k)
+            for k in self.guard_stats}
+        # per-(bucket, batch_size, path) warmup/compile accounting and
+        # the last _infer_raw stage breakdown (obs profiling hooks)
+        self.warmup_report: List[Dict] = []
+        self.last_infer_breakdown: Dict[str, float] = {}
 
     # -- construction -------------------------------------------------------
 
@@ -299,10 +322,24 @@ class QuantizedEngine:
         falls back to dense at dispatch time. That is the complete
         (finite) set of shapes ``infer_batch`` can ever hit, so a warmed
         engine never compiles under traffic. Pass ``buckets`` and/or
-        ``batch_sizes`` to restrict. Returns wall-clock seconds spent
-        compiling.
+        ``batch_sizes`` to restrict. Returns monotonic seconds spent
+        compiling; ``warmup_report`` holds the per-(bucket, batch_size,
+        path) breakdown — the measurement substrate for ROADMAP item 2's
+        scale-from-zero accounting.
         """
-        t0 = time.time()
+        t0 = time.monotonic()
+        self.warmup_report = []
+
+        def _timed(path: str, cap: int, bsz: int, fn) -> None:
+            s0 = time.monotonic()
+            fn()
+            dt = time.monotonic() - s0
+            self.warmup_report.append(
+                {"bucket": cap, "batch_size": bsz, "path": path,
+                 "mode": self.serve.mode, "seconds": dt})
+            REGISTRY.histogram("engine_warmup_compile_seconds",
+                               mode=self.serve.mode, path=path).observe(dt)
+
         caps = list(buckets) if buckets else [b.capacity
                                               for b in self._buckets]
         for cap in caps:
@@ -320,12 +357,18 @@ class QuantizedEngine:
                 # dense is always warmed: it is the overflow fallback of
                 # every sparse-preferring config, so even path="sparse"
                 # can dispatch it under traffic
-                self._run_dense(species, coords, mask)
+                _timed("dense", cap, bsz,
+                       lambda: self._run_dense(species, coords, mask))
                 if self._wants_sparse(spec):
                     el = build_edge_list(coords, mask, self.model_cfg.cutoff,
                                          spec.edges)
-                    self._run_sparse(species, coords, mask, el)
-        return time.time() - t0
+                    _timed("sparse", cap, bsz,
+                           lambda: self._run_sparse(species, coords,
+                                                    mask, el))
+        total = time.monotonic() - t0
+        REGISTRY.counter("engine_warmup_seconds_total",
+                         mode=self.serve.mode).inc(total)
+        return total
 
     def _run_dense(self, species, coords, mask):
         self.compiled_shapes.add(species.shape)
@@ -365,11 +408,14 @@ class QuantizedEngine:
                                  spec.edges)
             if el is not None:
                 self.dispatch_stats["sparse"] += 1
+                self._m_dispatch["sparse"].inc()
                 e, f = self._run_sparse(species, coords, mask, el)
                 return e, f, "sparse"
             # cutoff graph denser than the bucket's edge capacity
             self.dispatch_stats["sparse_fallback"] += 1
+            self._m_dispatch["sparse_fallback"].inc()
         self.dispatch_stats["dense"] += 1
+        self._m_dispatch["dense"].inc()
         e, f = self._run_dense(species, coords, mask)
         return e, f, "dense"
 
@@ -400,6 +446,7 @@ class QuantizedEngine:
             return results
         self._n_infer_calls += 1
         self.guard_stats["checked"] += len(results)
+        self._m_guard["checked"].inc(len(results))
         flagged: Dict[int, tuple] = {}
         for i, r in enumerate(results):
             flags = check_result(r.energy, r.forces, r.bucket_capacity, g)
@@ -418,6 +465,7 @@ class QuantizedEngine:
                        "lee": "flagged_lee"}.get(f.reason)
                 if key is not None:
                     self.guard_stats[key] += 1
+                    self._m_guard[key].inc()
         mode = on_flag if on_flag is not None else g.on_flag
         if mode == "raise":
             worst = max((f for flags in flagged.values() for f in flags),
@@ -435,14 +483,24 @@ class QuantizedEngine:
         """The bucket/pad/dispatch pipeline with no guardrail pass —
         also the re-run path of the LEE probe and ``lee_diagnostic``
         (probing the probe would recurse)."""
+        t_start = time.monotonic()
         plans = plan_batches(graphs, self._buckets)
+        prep_s = dispatch_s = sync_s = 0.0
         results: List[Optional[MoleculeResult]] = [None] * len(graphs)
         for plan in plans:
+            t0 = time.monotonic()
             species, coords, mask = pad_graphs(
                 graphs, plan, pad_species=self.serve.pad_species)
+            t1 = time.monotonic()
             e, f, path = self._dispatch(species, coords, mask, plan.bucket)
+            t2 = time.monotonic()
+            # np.asarray forces device->host transfer: the sync point
             e = np.asarray(e)
             f = np.asarray(f)
+            t3 = time.monotonic()
+            prep_s += t1 - t0
+            dispatch_s += t2 - t1
+            sync_s += t3 - t2
             for row, gi in enumerate(plan.graph_indices):
                 n = graphs[gi].n_atoms
                 results[gi] = MoleculeResult(
@@ -450,6 +508,11 @@ class QuantizedEngine:
                     n_atoms=n, bucket_capacity=plan.bucket.capacity,
                     batch_size=plan.batch_size, path=path,
                     artifact_version=self.artifact_version)
+        # per-flush serve-time breakdown (read by the scheduler/replica
+        # worker right after infer_batch returns, same thread)
+        self.last_infer_breakdown = {
+            "prep_s": prep_s, "dispatch_s": dispatch_s, "sync_s": sync_s,
+            "n_plans": len(plans), "total_s": time.monotonic() - t_start}
         return results  # type: ignore[return-value]
 
     def _lee_probe(self, graphs: Sequence[Graph],
@@ -460,6 +523,7 @@ class QuantizedEngine:
         molecules whose LEE exceeds the limit."""
         g = self.guardrails
         self.guard_stats["lee_probes"] += 1
+        self._m_guard["lee_probes"].inc()
         key = jax.random.PRNGKey(g.lee_seed + self._n_infer_calls)
         R = np.asarray(random_rotation(key))
         rotated = [Graph(gr.species, np.asarray(gr.coords) @ R.T)

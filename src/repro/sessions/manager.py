@@ -80,6 +80,7 @@ from repro.cluster.pool import ClusterPool
 from repro.guardrails import GuardrailViolation, next_tier
 from repro.md.engine import MDConfig, MDEngine, ReplicaState, pad_replicas
 from repro.md.neighbor import NeighborList
+from repro.obs.metrics import REGISTRY
 from repro.server.scheduler import (RequestTimeout, SchedulerClosed,
                                     SchedulerOverloaded)
 from repro.serving.bucketing import assign_bucket
@@ -361,6 +362,8 @@ class SessionManager:
             session = self._rebuild(name, cm, step, on_frame, retain_frames)
             with self._lock:
                 self._checkpoints_restored += 1
+            REGISTRY.counter("session_events_total",
+                             event="checkpoint_restored").inc()
             session.n_restores += 1
             if session.chunks_done >= session.config.n_chunks:
                 with self._lock:
@@ -469,6 +472,8 @@ class SessionManager:
                 attempt += 1
                 with self._lock:
                     self._shed_retries += 1
+                REGISTRY.counter("session_events_total",
+                                 event="shed_retry").inc()
                 if attempt > cfg.max_retries:
                     raise
                 session._cancel.wait(session._rng.uniform(0.0, min(
@@ -493,6 +498,8 @@ class SessionManager:
                 session.n_escalations += 1
                 with self._lock:
                     self._chunk_escalations += 1
+                REGISTRY.counter("session_events_total",
+                                 event="chunk_escalated").inc()
                 min_tier = target
                 session.preferred_replica = None
                 continue
@@ -507,6 +514,8 @@ class SessionManager:
                     self._chunks_retried += 1
                     if isinstance(e, RequestTimeout):
                         self._chunk_timeouts += 1
+                REGISTRY.counter("session_events_total",
+                                 event="chunk_retried").inc()
                 if attempt > cfg.max_retries:
                     raise
                 session.preferred_replica = None
@@ -523,6 +532,8 @@ class SessionManager:
             session.artifact_versions.append(art)
         with self._lock:
             self._chunks_completed += 1
+        REGISTRY.counter("session_events_total",
+                         event="chunk_completed").inc()
         self._emit(session, ci, length, records,
                    handle.replica_id if handle.replica_id is not None else -1,
                    art)
@@ -629,10 +640,15 @@ class SessionManager:
             "config": dataclasses.asdict(cfg),
         }
         cm = CheckpointManager(session.checkpoint_dir, keep=self.keep)
+        t0 = time.monotonic()
         cm.save(session.chunks_done, tree, extra=extra)
         session.n_checkpoints += 1
         with self._lock:
             self._checkpoints_written += 1
+        REGISTRY.counter("session_events_total",
+                         event="checkpoint_written").inc()
+        REGISTRY.histogram("session_checkpoint_seconds").observe(
+            time.monotonic() - t0)
 
     # -- telemetry ----------------------------------------------------------
 

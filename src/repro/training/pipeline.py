@@ -80,7 +80,7 @@ def nve_eval(cfg, params, data, n_steps: int, dt_fs: float = 0.5,
     state = init_state(jax.random.PRNGKey(7), eq, MASSES, force_fn, 300.0)
     run = jax.jit(lambda s: nve_trajectory(s, MASSES, force_fn, energy_fn,
                                            dt_fs, n_steps, record_every))
-    t0 = time.time()
+    t0 = time.monotonic()
     _, energies = run(state)
     energies.block_until_ready()
     drift = energy_drift_rate(energies, dt_fs, record_every, 24)
@@ -91,7 +91,7 @@ def nve_eval(cfg, params, data, n_steps: int, dt_fs: float = 0.5,
         "energies": np.asarray(energies).tolist(),
         "drift_ev_per_atom_ps": drift,
         "blew_up": blew_up,
-        "wall_s": time.time() - t0,
+        "wall_s": time.monotonic() - t0,
         "n_steps": n_steps,
         "dt_fs": dt_fs,
     }
@@ -121,11 +121,11 @@ def latency_eval(cfg, params, dim: int = 2048, n_mats: int = 8) -> Dict[str, flo
 
     def bench(fn, *args):
         jax.block_until_ready(fn(*args))  # warm/compile
-        t0 = time.time()
+        t0 = time.monotonic()
         for _ in range(reps):
             out = fn(*args)
         jax.block_until_ready(out)
-        return (time.time() - t0) / reps * 1e6  # us
+        return (time.monotonic() - t0) / reps * 1e6  # us
 
     # --- weight-I/O row: stream the full weight working set through DRAM.
     # elementwise touch reads+writes N bytes; traffic scales with precision.
@@ -199,7 +199,7 @@ def main(fast: bool = False):
 
     # ---- FP32 baseline (resumes from checkpoint if present) -----------------
     cfg32 = so3.So3kratesConfig(**BASE, **METHODS["fp32"])
-    t0 = time.time()
+    t0 = time.monotonic()
     fp32_ckpt = os.path.join(ART, "ckpt_fp32.npz")
     if os.path.exists(fp32_ckpt) and not os.environ.get("PIPELINE_FRESH"):
         params32 = load_params(fp32_ckpt)
@@ -211,14 +211,14 @@ def main(fast: bool = False):
                                            batch_size=32, lr=5e-3), verbose=True)
         save_params(fp32_ckpt, params32)
     ev = evaluate(cfg32, params32, test_data)
-    metrics["fp32"] = {**ev, "train_s": time.time() - t0,
+    metrics["fp32"] = {**ev, "train_s": time.monotonic() - t0,
                        "final_loss": hist["loss"][-1]}
     print("[fp32]", metrics["fp32"], flush=True)
 
     # ---- QAT finetunes (resume from checkpoints when present) ----------------
     for name in ["gaq_w4a8", "naive_int8", "degree_quant", "svq_kmeans"]:
         cfg = so3.So3kratesConfig(**BASE, **METHODS[name])
-        t0 = time.time()
+        t0 = time.monotonic()
         ckpt = os.path.join(ART, f"ckpt_{name}.npz")
         if os.path.exists(ckpt) and not os.environ.get("PIPELINE_FRESH"):
             params = load_params(ckpt)
@@ -233,7 +233,7 @@ def main(fast: bool = False):
                                  init=params32, verbose=True)
             save_params(ckpt, params)
         ev = evaluate(cfg, params, test_data)
-        metrics[name] = {**ev, "train_s": time.time() - t0,
+        metrics[name] = {**ev, "train_s": time.monotonic() - t0,
                          "final_loss": hist["loss"][-1],
                          "diverged": not np.isfinite(hist["loss"][-1])}
         print(f"[{name}]", metrics[name], flush=True)

@@ -203,6 +203,10 @@ _EXTRAS = {
     "guardrails": {"escalation_mols": 3, "requests": 8, "poison_every": 4,
                    "overhead_batches": 5, "stalls": 2, "stall_traffic": 2,
                    "md_steps": 40},
+    # 16 requests keep the kill (at ~5) and swap (at ~10) inside the
+    # replay and 2 poisoned requests still escalate
+    "obs": {"requests": 16, "poison_every": 8, "overhead_waves": 2,
+            "wave_size": 4},
 }
 
 

@@ -1,0 +1,537 @@
+"""Tests for repro.obs (ISSUE 9): the unified metrics registry, the
+per-request trace span model, the exporters, end-to-end trace
+propagation through the serving stack, and the fleet-lifetime counter
+fix on engine exchanges.
+
+The trace-propagation pins are the acceptance scenarios:
+
+* a guardrail-escalated request (w4a8 -> w8a8) yields one orphan-free
+  span tree whose hop-1 segments attribute the escalation re-run;
+* an in-flight replica kill yields a requeue hop attributed to the
+  surviving replica;
+* a cancelled-then-resumed MD session's chunks trace as ``kind="chunk"``
+  with session/chunk attribution across both incarnations;
+* the tiling invariant — child span durations sum to the end-to-end
+  latency *exactly* (the state machine closes each segment where the
+  next begins), which is the <= 5% acceptance gate with zero margin
+  consumed.
+
+The swap-under-traffic test pins the satellite fix: engine dispatch /
+detector counters survive ``swap_artifact`` engine exchanges instead of
+silently resetting.
+"""
+import dataclasses
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterPool
+from repro.guardrails import ForceEnvelope, GuardrailConfig
+from repro.md.engine import MDConfig
+from repro.models import so3krates as so3
+from repro.obs import (REGISTRY, TRACER, JsonlTraceSink, MetricsRegistry,
+                       PeriodicExporter, RequestTrace, configure_tracing,
+                       load_traces, prometheus_text, write_metrics)
+from repro.server import save_artifact
+from repro.server.scheduler import (MicroBatchScheduler, RequestHandle,
+                                    SchedulerConfig)
+from repro.serving import Graph, QuantizedEngine, ServeConfig
+from repro.serving.qparams import quantize_so3_params
+from repro.sessions import SessionConfig, SessionManager
+
+CFG = so3.So3kratesConfig(feat=16, vec_feat=4, n_layers=1, n_rbf=4,
+                          dir_bits=6, cutoff=3.0)
+SERVE4 = ServeConfig(mode="w4a8", bucket_sizes=(16,), max_batch=4,
+                     path="dense")
+SERVE8 = dataclasses.replace(SERVE4, mode="w8a8")
+WAIT_S = 600
+# every finite w4a8 result flags suspect -> escalates (test_guardrails)
+HAIR = GuardrailConfig(envelope=ForceEnvelope(limits=((16, 1e-9),)))
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _graph(n=10, seed=0, density=0.1):
+    rng = np.random.default_rng(seed)
+    side = (n / density) ** (1.0 / 3.0)
+    return Graph(species=rng.integers(0, CFG.n_species, n).astype(np.int32),
+                 coords=rng.uniform(0, side, size=(n, 3)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def params():
+    import jax
+    return so3.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def qp(params):
+    return {t: quantize_so3_params(params, t) for t in ("w4a8", "w8a8")}
+
+
+@pytest.fixture()
+def traced():
+    """Enable the process tracer for one test, drain + disable after."""
+    configure_tracing(enabled=True)
+    TRACER.reset()
+    yield TRACER
+    configure_tracing(enabled=False)
+    TRACER.reset()
+
+
+def _assert_complete(doc):
+    """One orphan-free span tree whose children tile [t0, t1] exactly."""
+    spans = doc["spans"]
+    root, children = spans[0], spans[1:]
+    assert root["parent_id"] is None
+    assert root["t1"] is not None, "unfinished root span"
+    assert children, "trace has no child spans"
+    for s in children:
+        assert s["parent_id"] == root["span_id"], f"orphan span {s}"
+        assert s["t1"] is not None, f"unclosed span {s}"
+    assert children[0]["t0"] == root["t0"]
+    assert children[-1]["t1"] == root["t1"]
+    for a, b in zip(children, children[1:]):
+        assert a["t1"] == b["t0"], "gap/overlap between segments"
+    total = sum(s["t1"] - s["t0"] for s in children)
+    assert total == pytest.approx(doc["duration_s"], rel=1e-9, abs=1e-9)
+
+
+# -- metrics registry (pure stdlib) ------------------------------------------
+
+class TestRegistry:
+    def test_instruments_keyed_by_name_and_labels(self):
+        reg = MetricsRegistry()
+        a = reg.counter("reqs", surface="sched")
+        b = reg.counter("reqs", surface="sched")
+        c = reg.counter("reqs", surface="replica")
+        assert a is b and a is not c
+        a.inc()
+        a.inc(2.5)
+        assert a.value == 3.5 and c.value == 0.0
+
+    def test_counter_cannot_decrease(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="cannot decrease"):
+            reg.counter("x").inc(-1.0)
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("dual")
+        with pytest.raises(TypeError, match="already registered"):
+            reg.gauge("dual")
+
+    def test_gauge_set_and_add(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("depth")
+        g.set(4.0)
+        g.add(-1.0)
+        assert g.value == 3.0
+
+    def test_histogram_percentiles_and_moments(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat")
+        vals = [0.001 * i for i in range(1, 101)]     # 1ms .. 100ms
+        for v in vals:
+            h.observe(v)
+        assert h.count == 100
+        assert h.sum == pytest.approx(sum(vals))
+        # log buckets over-estimate by <= one bucket width (~19%)
+        assert 0.050 <= h.percentile(0.50) <= 0.050 * 1.19
+        assert 0.095 <= h.percentile(0.95) <= 0.095 * 1.19
+        snap = h.snapshot()
+        assert snap["min"] == pytest.approx(0.001)
+        assert snap["max"] == pytest.approx(0.100)
+        assert snap["p99"] <= snap["max"] + 1e-12
+
+    def test_histogram_underflow_bucket(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("d")
+        h.observe(0.0)
+        h.observe(-1.0)
+        h.observe(1.0)
+        assert h.count == 3
+        assert h.percentile(0.5) == 0.0     # underflow reports 0.0
+
+    def test_disabled_registry_noops_writes(self):
+        reg = MetricsRegistry()
+        c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+        reg.set_enabled(False)
+        c.inc()
+        g.set(9.0)
+        h.observe(1.0)
+        assert c.value == 0.0 and g.value == 0.0 and h.count == 0
+        reg.set_enabled(True)
+        c.inc()
+        assert c.value == 1.0
+
+    def test_snapshot_and_flat(self):
+        reg = MetricsRegistry()
+        reg.counter("c", mode="w4a8").inc(2)
+        reg.gauge("g").set(1.5)
+        reg.histogram("h").observe(0.25)
+        snap = reg.snapshot()
+        assert [e["name"] for e in snap["counters"]] == ["c"]
+        assert snap["counters"][0]["labels"] == {"mode": "w4a8"}
+        assert snap["counters"][0]["value"] == 2.0
+        assert snap["histograms"][0]["count"] == 1
+        flat = reg.flat()
+        assert flat['c{mode="w4a8"}'] == 2.0
+        assert flat["h_count"] == 1
+        reg.reset()
+        assert reg.snapshot() == {"counters": [], "gauges": [],
+                                  "histograms": []}
+
+
+# -- exporters ----------------------------------------------------------------
+
+class TestExport:
+    def test_prometheus_text_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("serve_requests_total", surface="sched").inc(3)
+        reg.gauge("live_replicas").set(4)
+        reg.histogram("wait_s").observe(0.01)
+        text = prometheus_text(registry=reg)
+        assert "# TYPE serve_requests_total counter" in text
+        assert 'serve_requests_total{surface="sched"} 3' in text
+        assert "# TYPE live_replicas gauge" in text
+        assert "# TYPE wait_s summary" in text
+        assert 'wait_s{quantile="0.5"}' in text
+        assert "wait_s_count 1" in text
+        assert "wait_s_sum 0.01" in text
+
+    def test_write_metrics_atomic_with_timestamp(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("n").inc()
+        out = tmp_path / "metrics.prom"
+        write_metrics(str(out), registry=reg)
+        lines = out.read_text().splitlines()
+        assert lines[0].startswith("# exported_at ")
+        assert "n 1" in lines
+        assert not list(tmp_path.glob("*.tmp.*"))
+
+    def test_periodic_exporter_writes_and_final_flush(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("beat").inc()
+        out = tmp_path / "m.prom"
+        exp = PeriodicExporter(str(out), interval_s=0.05,
+                               registry=reg).start()
+        deadline = time.monotonic() + 5.0
+        while exp.n_exports == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        exp.stop()
+        assert exp.n_exports >= 2      # >= 1 periodic + the final flush
+        assert "beat 1" in out.read_text()
+
+    def test_jsonl_sink_roundtrip(self, tmp_path):
+        path = str(tmp_path / "traces.jsonl")
+        with JsonlTraceSink(path) as sink:
+            sink.write({"trace_id": "r-1"})
+            sink.write({"trace_id": "r-2"})
+            assert sink.n_written == 2
+        sink.write({"trace_id": "r-3"})    # closed: dropped, no raise
+        assert [t["trace_id"] for t in load_traces(path)] == ["r-1", "r-2"]
+
+
+# -- trace span model (no engine) ---------------------------------------------
+
+class TestTraceModel:
+    def test_segments_tile_exactly(self):
+        rt = RequestTrace("r-1", "request", t0=10.0)
+        rt.begin("serve", 11.0, replica=0)
+        rt.begin("queue", 11.5)            # escalation re-queue
+        rt.begin("serve", 12.0, replica=2)
+        rt.finish(13.0, status="ok")
+        doc = rt.to_json()
+        assert doc["duration_s"] == 3.0
+        names = [s["name"] for s in doc["spans"][1:]]
+        assert names == ["queue", "serve", "queue", "serve"]
+        _assert_complete(doc)
+
+    def test_mutators_noop_after_finish(self):
+        rt = RequestTrace("r-2", "request", t0=0.0)
+        rt.finish(1.0, status="ok")
+        rt.begin("serve", 2.0)
+        rt.event("late", 2.0)
+        rt.set_attr("x", 1)
+        rt.bump_hop()
+        doc = rt.to_json()
+        assert doc["t1"] == 1.0 and doc["hops"] == 0
+        assert doc["events"] == [] and "x" not in doc["attrs"]
+        assert len(doc["spans"]) == 2      # root + the birth queue span
+
+    def test_hop_attribution_on_events_and_spans(self):
+        rt = RequestTrace("r-3", "request", t0=0.0)
+        rt.begin("serve", 1.0)
+        rt.bump_hop()
+        rt.event("requeued", 1.5, from_replica=0)
+        rt.begin("queue", 1.5)
+        rt.begin("serve", 2.0)
+        rt.finish(3.0)
+        doc = rt.to_json()
+        hops = [s["attrs"]["hop"] for s in doc["spans"][1:]]
+        assert hops == [0, 0, 1, 1]
+        assert doc["hops"] == 1
+
+    def test_tracer_disabled_returns_none(self):
+        configure_tracing(enabled=False)
+        assert TRACER.start_request() is None
+
+    def test_tracer_collects_and_sinks(self, traced, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        sink = JsonlTraceSink(path)
+        configure_tracing(enabled=True, sink=sink)
+        tr = traced.start_request(kind="request", t0=0.0)
+        tr.finish(1.0)
+        docs = traced.drain()
+        assert [d["trace_id"] for d in docs] == [tr.trace_id]
+        assert traced.drain() == []
+        # sink export is async off the resolve path; flush() is the barrier
+        assert traced.flush()
+        assert load_traces(path)[0]["trace_id"] == tr.trace_id
+        sink.close()
+
+    def test_sink_errors_swallowed(self, traced):
+        class Boom:
+            def write(self, doc):
+                raise OSError("disk full")
+        configure_tracing(enabled=True, sink=Boom())
+        traced.start_request(t0=0.0).finish(1.0)
+        assert traced.flush()
+        assert traced.n_sink_errors == 1
+        assert len(traced.drain()) == 1     # trace still delivered
+
+
+# -- scheduler-level propagation ----------------------------------------------
+
+class TestSchedulerTracing:
+    def test_one_complete_trace_per_request(self, qp, traced):
+        engine = QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4)
+        cfg = SchedulerConfig(max_batch=4, deadline_ms=2.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            handles = [sched.submit(_graph(seed=i)) for i in range(6)]
+            results = [h.result(timeout=WAIT_S) for h in handles]
+        ids = [r.trace_id for r in results]
+        assert all(ids) and len(set(ids)) == 6
+        docs = {d["trace_id"]: d for d in traced.drain()}
+        assert set(docs) == set(ids)        # exactly one trace each
+        for h in handles:
+            doc = docs[h.trace.trace_id]
+            assert doc["status"] == "ok" and doc["hops"] == 0
+            assert doc["attrs"]["bucket"] == 16
+            _assert_complete(doc)
+        # flush telemetry carries the member trace ids
+        recorded = [tid for f in sched._flushes for tid in f.trace_ids]
+        assert set(recorded) == set(ids)
+
+    def test_rejected_submit_finishes_trace(self, qp, traced):
+        # a handle rejected at submit (oversize here) is never returned,
+        # so its trace must be finished on the rejection path — no
+        # unfinished trace, and the rejection is observable
+        engine = QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4)
+        cfg = SchedulerConfig(max_batch=4, deadline_ms=2.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            with pytest.raises(ValueError):
+                sched.submit(_graph(n=99))
+        (doc,) = traced.drain()
+        assert doc["status"] == "rejected"
+        assert doc["attrs"]["error"] == "ValueError"
+        assert traced.n_started == traced.n_finished == 1
+        _assert_complete(doc)
+
+    def test_error_trace_finishes_with_status(self, qp, traced):
+        engine = QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4)
+        engine.infer_batch = lambda graphs, on_flag=None: (
+            (_ for _ in ()).throw(RuntimeError("boom")))
+        cfg = SchedulerConfig(max_batch=1, deadline_ms=0.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            h = sched.submit(_graph())
+            with pytest.raises(RuntimeError, match="boom"):
+                h.result(timeout=WAIT_S)
+        (doc,) = traced.drain()
+        assert doc["status"] == "error"
+        assert doc["attrs"]["error"] == "RuntimeError"
+        _assert_complete(doc)
+
+
+# -- acceptance scenario (a): guardrail escalation ----------------------------
+
+class TestEscalationTrace:
+    def test_escalated_request_trace_attributes_the_hop(self, qp, traced):
+        engines = [
+            QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4,
+                                           guardrails=HAIR),
+            QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4,
+                                           guardrails=HAIR),
+            QuantizedEngine.from_quantized(CFG, qp["w8a8"], SERVE8),
+        ]
+        pool = ClusterPool(engines, ClusterConfig(
+            n_replicas=3, max_batch=4, deadline_ms=2.0, warmup=False,
+            max_escalations=1))
+        try:
+            r = pool.submit(_graph(seed=11)).result(timeout=WAIT_S)
+            assert len(r.escalations) == 1 and r.replica_id == 2
+            assert r.trace_id
+        finally:
+            pool.close()
+        docs = {d["trace_id"]: d for d in traced.drain()}
+        doc = docs[r.trace_id]
+        _assert_complete(doc)
+        assert doc["hops"] == 1
+        assert doc["attrs"]["n_escalations"] == 1
+        (esc,) = [e for e in doc["events"] if e["name"] == "escalated"]
+        assert esc["attrs"]["from_tier"] == "w4a8"
+        assert esc["attrs"]["reason"] == "force_outlier"
+        # hop-1 segments: a re-queue then the w8a8 re-run
+        hop1 = [s for s in doc["spans"][1:] if s["attrs"]["hop"] == 1]
+        assert [s["name"] for s in hop1] == ["queue", "serve"]
+        assert hop1[-1]["attrs"]["tier"] == "w8a8"
+        assert hop1[-1]["attrs"]["replica"] == 2
+
+
+# -- acceptance scenario (b): in-flight kill + failover requeue ---------------
+
+class TestRequeueTrace:
+    def test_killed_in_flight_request_traces_the_requeue(self, qp, traced):
+        pool = ClusterPool(
+            [QuantizedEngine.from_quantized(CFG, qp["w8a8"], SERVE8)
+             for _ in range(4)],
+            ClusterConfig(n_replicas=4, max_batch=4, deadline_ms=2.0,
+                          warmup=False))
+        try:
+            rep0 = pool._replicas[0]
+            # arm the in-flight failure first (accepting stays True until
+            # the worker picks work), then pin a request to replica 0: the
+            # flush dies and the orphan fails over to a survivor
+            pool.kill_replica(0, mode="in_flight")
+            h = RequestHandle(_graph(seed=7), time.monotonic(),
+                              bucket_capacity=16)
+            assert rep0.try_submit(h)
+            r = h.result(timeout=WAIT_S)
+            assert np.isfinite(r.energy) and r.replica_id != 0
+        finally:
+            pool.close()
+        docs = {d["trace_id"]: d for d in traced.drain()}
+        doc = docs[h.trace.trace_id]
+        _assert_complete(doc)
+        assert doc["hops"] >= 1
+        requeues = [e for e in doc["events"] if e["name"] == "requeued"]
+        assert requeues and requeues[0]["attrs"]["from_replica"] == 0
+        last_serve = [s for s in doc["spans"][1:]
+                      if s["name"] == "serve"][-1]
+        assert last_serve["attrs"]["replica"] == r.replica_id != 0
+
+
+# -- acceptance scenario (c): session chunks across checkpoint/resume ---------
+
+class TestChunkTrace:
+    def test_resumed_session_chunks_trace_with_attribution(
+            self, qp, traced, tmp_path):
+        pool = ClusterPool(
+            [QuantizedEngine.from_quantized(CFG, qp["w8a8"], SERVE8)
+             for _ in range(2)],
+            ClusterConfig(n_replicas=2, max_batch=4, warmup=False,
+                          max_queue=64))
+        try:
+            rng = np.random.default_rng(13)
+            n = 12
+            side = (n / 0.1) ** (1.0 / 3.0)
+            sp = rng.integers(0, CFG.n_species, n).astype(np.int32)
+            co = rng.uniform(0, side, size=(n, 3)).astype(np.float32)
+            masses = np.full(n, 12.0, np.float32)
+            scfg = SessionConfig(
+                n_steps=100, chunk_steps=20, record_every=10,
+                checkpoint_every=2,
+                md=MDConfig(mode="w8a8", dt_fs=0.25, record_every=10))
+            mgr = SessionManager(pool, str(tmp_path))
+            s = mgr.start(sp, co, masses, seed=5, config=scfg)
+            while s.chunks_done < 2 and not s.done():
+                time.sleep(0.02)
+            s.cancel()
+            mgr.close()
+
+            mgr2 = SessionManager(pool, str(tmp_path))
+            resumed = mgr2.resume_all()
+            assert [x.session_id for x in resumed] == [s.session_id]
+            assert resumed[0].wait(WAIT_S) == "done"
+            assert resumed[0].n_restores == 1
+            mgr2.close()
+        finally:
+            pool.close()
+        chunk_docs = [d for d in traced.drain() if d["kind"] == "chunk"]
+        assert len(chunk_docs) >= scfg.n_chunks   # both incarnations trace
+        for doc in chunk_docs:
+            _assert_complete(doc)
+            assert doc["attrs"]["session_id"] == s.session_id
+            assert doc["attrs"]["chunk_idx"] >= 0
+        # the resumed tail re-runs chunks the first incarnation completed
+        idxs = sorted({d["attrs"]["chunk_idx"] for d in chunk_docs})
+        assert idxs == list(range(scfg.n_chunks))
+        # the restore landed in the unified metrics plane
+        restored = REGISTRY.counter("session_events_total",
+                                    event="checkpoint_restored")
+        assert restored.value >= 1
+
+
+# -- satellite: counters survive engine exchanges -----------------------------
+
+class TestSwapCounterContinuity:
+    def test_dispatch_totals_survive_swap_under_traffic(self, tmp_path):
+        serve = ServeConfig(mode="w8a8", bucket_sizes=(16,), max_batch=4)
+        pool = ClusterPool.from_config(
+            CFG, serve=serve,
+            cluster=ClusterConfig(n_replicas=2, max_batch=4,
+                                  deadline_ms=2.0, warmup=False), seed=0)
+        try:
+            graphs = [_graph(seed=100 + i) for i in range(8)]
+            pool.infer(graphs, timeout=WAIT_S)
+            before = dict(pool.stats()["engine_dispatch"])
+            assert sum(before.values()) >= 1
+
+            art = str(tmp_path / "v2.npz")
+            save_artifact(art, QuantizedEngine.from_config(
+                CFG, serve=serve, seed=99))
+            report = pool.swap_artifact(art, warmup=False)
+            assert len(report["replicas"]) == 2
+
+            pool.infer([_graph(seed=200 + i) for i in range(4)],
+                       timeout=WAIT_S)
+            stats = pool.stats()
+            after = stats["engine_dispatch"]
+            # fleet-lifetime totals: pre-swap counts are retained and
+            # post-swap traffic adds on top (the pre-fix behaviour reset
+            # these to the fresh engines' zeros)
+            for k, v in before.items():
+                assert after.get(k, 0) >= v
+            assert sum(after.values()) > sum(before.values())
+            assert stats["n_engines_retired"] >= 2
+        finally:
+            pool.close()
+
+
+# -- trace_report CLI ----------------------------------------------------------
+
+class TestTraceReport:
+    def test_report_renders_breakdown_table(self, qp, traced, tmp_path):
+        path = str(tmp_path / "traces.jsonl")
+        sink = JsonlTraceSink(path)
+        configure_tracing(enabled=True, sink=sink)
+        engine = QuantizedEngine.from_quantized(CFG, qp["w4a8"], SERVE4)
+        cfg = SchedulerConfig(max_batch=4, deadline_ms=2.0, warmup=False)
+        with MicroBatchScheduler(engine, cfg) as sched:
+            hs = [sched.submit(_graph(seed=i)) for i in range(4)]
+            for h in hs:
+                h.result(timeout=WAIT_S)
+        assert TRACER.flush()     # async export: barrier before reading
+        sink.close()
+        proc = subprocess.run(
+            [sys.executable, str(REPO / "scripts" / "trace_report.py"),
+             path], capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 0, proc.stderr
+        assert "4 trace(s)" in proc.stdout
+        for seg in ("queue wait", "compute", "escalation/requeue",
+                    "end-to-end"):
+            assert seg in proc.stdout
