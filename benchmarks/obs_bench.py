@@ -18,6 +18,16 @@ The claims under test for ``repro.obs`` (docs/observability.md):
    (tracing + JSONL sink + metrics registry) vs OFF: median wave
    latency ratio <= 1.05x. Timing-gated, full-size runs only
    (``smoke_ok=False``).
+3. **Active-plane alerting** (ISSUE 10) — two arms with the identical
+   traffic shape through a 4-replica watchdog fleet plus an MD
+   session, health plane (SLO burn-rate evaluator + anomaly monitor)
+   armed in both. The *chaos* arm seeds five fault classes (guardrail
+   escalations, an in-flight replica kill, an engine-lock stall, MD
+   energy drift, session frame loss) and must fire an alert for
+   **every** class with nothing unattributed; the *clean* arm must
+   stay **silent** (zero false positives). The chaos arm's spans +
+   flush records + warmup compiles must re-export as a Chrome-trace
+   timeline that passes schema + exact-tiling + span-sum validation.
 
 Run:  PYTHONPATH=src python benchmarks/obs_bench.py
           [--requests 160] [--poison-every 20] [--overhead-waves 30]
@@ -53,17 +63,29 @@ if __package__ in (None, ""):   # `python benchmarks/<name>.py`
 from benchmarks import schema                                  # noqa: E402
 from benchmarks.schema import Metric                           # noqa: E402
 from repro.cluster import ClusterConfig, ClusterPool           # noqa: E402
-from repro.guardrails import GuardrailConfig, GuardrailViolation  # noqa: E402
+from repro.guardrails import (ForceEnvelope, GuardrailConfig,  # noqa: E402
+                              GuardrailViolation)
+from repro.md.engine import MDConfig                           # noqa: E402
 from repro.models import so3krates as so3                      # noqa: E402
-from repro.obs import (REGISTRY, TRACER, JsonlTraceSink,       # noqa: E402
-                       configure_tracing, load_traces,
-                       prometheus_text, write_metrics)
+from repro.obs import (REGISTRY, TRACER, AlertBus,             # noqa: E402
+                       AnomalyMonitor, HealthMonitor,
+                       JsonlTraceSink, SLOEvaluator,
+                       configure_tracing, default_detectors,
+                       default_slos, load_traces,
+                       prometheus_text, validate_chrome_trace,
+                       write_chrome_trace, write_metrics)
 from repro.server import save_artifact                         # noqa: E402
 from repro.server.scheduler import (MicroBatchScheduler,       # noqa: E402
+                                    RequestHandle,
                                     SchedulerConfig)
 from repro.serving import (Graph, QuantizedEngine,             # noqa: E402
                            ServeConfig)
 from repro.serving.qparams import quantize_so3_params          # noqa: E402
+from repro.sessions import SessionConfig, SessionManager       # noqa: E402
+
+# scenario 3's seeded fault classes and the alert each must raise
+ALERT_REQUIRED = ("escalation_rate", "replica_failure", "replica_stall",
+                  "md_energy_drift", "session_frame_loss")
 
 WAIT_S = 1200.0
 BUCKET = 16
@@ -85,6 +107,10 @@ def parser() -> argparse.ArgumentParser:
                     help="scenario 2: timed request waves per A/B arm")
     ap.add_argument("--wave-size", type=int, default=16,
                     help="scenario 2: requests per wave")
+    ap.add_argument("--alert-requests", type=int, default=12,
+                    help="scenario 3: paced background requests per arm "
+                         "(detection is structural, not volume-driven, "
+                         "so smoke keeps the same size)")
     ap.add_argument("--atoms", type=int, default=12)
     ap.add_argument("--feat", type=int, default=16)
     ap.add_argument("--layers", type=int, default=1)
@@ -323,6 +349,175 @@ def scenario_overhead(model_cfg, params, serve4, args, workdir) -> dict:
     return out
 
 
+def _alert_arm(model_cfg, qp_primary, qp_esc, serve_primary, serve_esc,
+               hair, args, workdir, chaos: bool):
+    """One arm of the active-plane replay. Identical traffic shape in
+    both arms; only the chaos arm seeds faults. Returns the fired
+    alerts plus (chaos arm) the raw material for the timeline export.
+    """
+    E = QuantizedEngine
+    REGISTRY.reset()
+    if chaos:
+        TRACER.reset()
+        configure_tracing(enabled=True)
+    if chaos:
+        # two hair-trigger primary-tier replicas (every request on them
+        # violates the force envelope -> escalates a tier up) + two
+        # escalation-tier replicas to absorb the hops
+        engines = [E.from_quantized(model_cfg, qp_primary, serve_primary,
+                                    guardrails=hair) for _ in range(2)]
+        engines += [E.from_quantized(model_cfg, qp_esc, serve_esc)
+                    for _ in range(2)]
+    else:
+        engines = [E.from_quantized(model_cfg, qp_esc, serve_esc)
+                   for _ in range(4)]
+    # warmup=True: the stall watchdog cannot tell a first-flush compile
+    # from a stall, so a watchdog fleet must pre-compile
+    pool = ClusterPool(engines, ClusterConfig(
+        n_replicas=4, max_batch=4, deadline_ms=2.0, warmup=True,
+        max_escalations=1, max_queue=64, stall_timeout_s=0.3,
+        watchdog_interval_s=0.1, probation_s=0.1))
+    bus = AlertBus(registry=REGISTRY)
+    fired = []
+    bus.subscribe(fired.append)
+    monitor = HealthMonitor(
+        [SLOEvaluator(default_slos(fast_window_s=0.6, slow_window_s=1.8,
+                                   latency_p99_s=30.0,
+                                   allow_partial=True),
+                      registry=REGISTRY, bus=bus),
+         AnomalyMonitor(default_detectors(), registry=REGISTRY, bus=bus)],
+        interval_s=0.1).start()
+    pool.watch_alerts(bus)
+    flushes, warmups = [], []
+    try:
+        handles = []
+        for i in range(args.alert_requests):    # paced background load
+            handles.append(pool.submit(_graph(
+                model_cfg.n_species, n=args.atoms, seed=100 + i)))
+            time.sleep(0.04)
+        if chaos:
+            # fault 1: guardrail escalations, pinned to a hair-trigger
+            # replica so each re-runs a tier up
+            for k in range(3):
+                h = RequestHandle(
+                    _graph(model_cfg.n_species, n=args.atoms,
+                           seed=500 + k),
+                    time.monotonic(), bucket_capacity=BUCKET)
+                assert pool._replicas[0].try_submit(h)
+                handles.append(h)
+            # fault 2: in-flight replica kill -> failover requeue
+            rep3 = pool._replicas[3]
+            pool.kill_replica(3, mode="in_flight")
+            h = RequestHandle(
+                _graph(model_cfg.n_species, n=args.atoms, seed=600),
+                time.monotonic(), bucket_capacity=BUCKET)
+            assert rep3.try_submit(h)
+            handles.append(h)
+            # fault 3: engine-lock stall -> watchdog quarantine
+            rep1 = pool._replicas[1]
+            rep1.inject_stall(1.5)
+            h = RequestHandle(
+                _graph(model_cfg.n_species, n=args.atoms, seed=700),
+                time.monotonic(), bucket_capacity=BUCKET)
+            assert rep1.try_submit(h)
+            handles.append(h)
+        for h in handles:
+            h.result(timeout=WAIT_S)
+        pool_alerts = pool.stats()["alerts"]
+        flushes = pool.flush_records()
+        warmups = pool.warmup_records()
+    finally:
+        pool.close()
+
+    # fault 4 (chaos) / clean baseline: an MD session on a separate
+    # watchdog-free pool — an MD chunk is ONE unit of worker busy time,
+    # so its first-chunk compile would read as a stall
+    md_pool = ClusterPool(
+        [E.from_quantized(model_cfg, qp_esc, serve_esc)
+         for _ in range(2)],
+        ClusterConfig(n_replicas=2, max_batch=4, warmup=False,
+                      max_queue=64))
+    try:
+        md = MDConfig(mode=serve_esc.mode, dt_fs=0.25, record_every=10,
+                      drift_limit=1e-12 if chaos else None)
+        scfg = SessionConfig(n_steps=40, chunk_steps=20, record_every=10,
+                             checkpoint_every=1, md=md)
+        rng = np.random.default_rng(13)
+        n = args.atoms
+        side = (n / 0.1) ** (1.0 / 3.0)
+        mgr = SessionManager(md_pool, os.path.join(
+            workdir, "alert_chaos" if chaos else "alert_clean"))
+        s = mgr.start(
+            rng.integers(0, model_cfg.n_species, n).astype(np.int32),
+            rng.uniform(0, side, size=(n, 3)).astype(np.float32),
+            np.full(n, 12.0, np.float32), seed=5, config=scfg)
+        try:
+            status = s.wait(WAIT_S)
+        except BaseException:           # wait re-raises the session's
+            status = s.status           # fatal error (drift kill)
+        assert status == ("failed" if chaos else "done"), status
+        mgr.close()
+        time.sleep(0.5)                 # let the windows catch up
+    finally:
+        monitor.stop(final_step=True)
+        md_pool.close()
+        if chaos:
+            configure_tracing(enabled=False)
+    docs = TRACER.drain() if chaos else []
+    return fired, pool_alerts, docs, flushes, warmups
+
+
+def scenario_alerting(model_cfg, params, serve_primary, serve_esc, args,
+                      workdir) -> dict:
+    """Active health plane A/B: clean arm silent, chaos arm fires every
+    seeded fault class, chaos spans re-export as a valid timeline."""
+    qp_primary = quantize_so3_params(params, serve_primary.mode)
+    qp_esc = quantize_so3_params(params, serve_esc.mode)
+    hair = GuardrailConfig(
+        envelope=ForceEnvelope(limits=((BUCKET, 1e-9),)))
+
+    clean_fired, _, _, _, _ = _alert_arm(
+        model_cfg, qp_primary, qp_esc, serve_primary, serve_esc, hair,
+        args, workdir, chaos=False)
+    chaos_fired, pool_alerts, docs, flushes, warmups = _alert_arm(
+        model_cfg, qp_primary, qp_esc, serve_primary, serve_esc, hair,
+        args, workdir, chaos=True)
+
+    required = set(ALERT_REQUIRED)
+    allowed = required | {d.name for d in default_detectors()}
+    names = {a.name for a in chaos_fired}
+    detected = required & names
+
+    chrome_path = os.path.join(workdir, "alert_timeline.json")
+    doc = write_chrome_trace(chrome_path, docs, flushes=flushes,
+                             warmup=warmups)
+    verdict = validate_chrome_trace(doc)
+
+    out = {
+        "requests_per_arm": args.alert_requests,
+        "required_classes": sorted(required),
+        "detected_classes": sorted(detected),
+        "missed_classes": sorted(required - names),
+        "detection_rate": len(detected) / len(required),
+        "alerts_fired": sorted(names),
+        "clean_false_positives": len(clean_fired),
+        "clean_alert_names": sorted({a.name for a in clean_fired}),
+        "unexpected_alerts": len(names - allowed),
+        "pool_alerts_seen": pool_alerts["n_seen"],
+        "chrome_events": verdict["n_events"],
+        "chrome_trees": verdict["n_async_trees"],
+        "chrome_schema_ok": int(verdict["n_schema_errors"] == 0),
+        "chrome_tiling_violations": verdict["tiling_violations"],
+        "chrome_sum_violations": verdict["sum_violations"],
+    }
+    print(f"alerting: chaos arm {len(detected)}/{len(required)} fault "
+          f"classes detected ({', '.join(sorted(names)) or 'none'}), "
+          f"clean arm {len(clean_fired)} false positive(s); timeline "
+          f"{verdict['n_events']} events / {verdict['n_async_trees']} "
+          f"tree(s), ok={verdict['ok']}")
+    return out
+
+
 def collect(args) -> dict:
     if args.mode == "fp32":
         raise SystemExit("--mode fp32 has no tier above it for the "
@@ -356,16 +551,20 @@ def collect(args) -> dict:
                                 workdir),
         "overhead": scenario_overhead(model_cfg, params, serve4, args,
                                       workdir),
+        "alerting": scenario_alerting(model_cfg, params, serve4, serve8,
+                                      args, workdir),
         "smoke": args.smoke,
     }
     return record
 
 
 def metrics_from_record(record: dict) -> list:
-    """Normalize into gated metrics. Trace completeness is structural
-    and size-independent, so those gates are hard in smoke too; the
-    overhead ratio is timing and full-size-only."""
+    """Normalize into gated metrics. Trace completeness and alert
+    detection are structural and size-independent, so those gates are
+    hard in smoke too; the overhead ratio is timing and
+    full-size-only."""
     ch, ov = record["chaos"], record["overhead"]
+    al = record["alerting"]
     return [
         Metric("obs_traces_missing", float(ch["traces_missing"]),
                "count", kind="hard", gate={"op": "eq", "bound": 0.0}),
@@ -391,9 +590,32 @@ def metrics_from_record(record: dict) -> list:
                gate={"op": "eq", "bound": 1.0}),
         Metric("obs_overhead_x", ov["overhead_x"], "x", kind="hard",
                gate={"op": "le", "bound": 1.05}, smoke_ok=False),
+        Metric("obs_alert_detection_rate",
+               float(al["detection_rate"]), "frac", kind="hard",
+               gate={"op": "eq", "bound": 1.0}),
+        Metric("obs_alert_false_positives",
+               float(al["clean_false_positives"]), "count", kind="hard",
+               gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_alert_unexpected",
+               float(al["unexpected_alerts"]), "count", kind="hard",
+               gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_pool_alerts_seen",
+               float(al["pool_alerts_seen"]), "count", kind="hard",
+               gate={"op": "ge", "bound": 1.0}),
+        Metric("obs_chrome_schema_ok",
+               float(al["chrome_schema_ok"]), "bool", kind="hard",
+               gate={"op": "eq", "bound": 1.0}),
+        Metric("obs_chrome_tiling_violations",
+               float(al["chrome_tiling_violations"]), "count",
+               kind="hard", gate={"op": "eq", "bound": 0.0}),
+        Metric("obs_chrome_sum_violations",
+               float(al["chrome_sum_violations"]), "count", kind="hard",
+               gate={"op": "eq", "bound": 0.0}),
         Metric("obs_traced_p50_ms", ch["traced_p50_ms"], "ms",
                direction="lower"),
         Metric("obs_typed_errors", float(ch["typed_errors"]), "count",
+               kind="info"),
+        Metric("obs_chrome_events", float(al["chrome_events"]), "count",
                kind="info"),
     ]
 
@@ -402,6 +624,7 @@ def check(record: dict) -> None:
     """Standalone acceptance assertions (the runner gates via baselines
     instead)."""
     ch, ov = record["chaos"], record["overhead"]
+    al = record["alerting"]
     fails = []
     for key, label in (("traces_missing", "requests without a trace"),
                        ("traces_duplicate", "duplicate traces"),
@@ -425,13 +648,34 @@ def check(record: dict) -> None:
     if not record["smoke"] and ov["overhead_x"] > 1.05:
         fails.append(f"obs clean-path overhead {ov['overhead_x']:.3f}x "
                      "> 1.05x")
+    if al["detection_rate"] < 1.0:
+        fails.append("undetected fault classes: "
+                     + ", ".join(al["missed_classes"]))
+    if al["clean_false_positives"]:
+        fails.append(f"{al['clean_false_positives']} clean-arm false "
+                     "positive(s): "
+                     + ", ".join(al["clean_alert_names"]))
+    if al["unexpected_alerts"]:
+        fails.append(f"{al['unexpected_alerts']} unattributed alert(s)")
+    if al["pool_alerts_seen"] < 1:
+        fails.append("pool.watch_alerts surfaced no alerts in stats()")
+    if not al["chrome_schema_ok"]:
+        fails.append("chrome-trace export has schema errors")
+    if al["chrome_tiling_violations"]:
+        fails.append(f"{al['chrome_tiling_violations']} chrome-trace "
+                     "tiling violation(s)")
+    if al["chrome_sum_violations"]:
+        fails.append(f"{al['chrome_sum_violations']} chrome-trace "
+                     "span-sum violation(s)")
     if fails:
         raise SystemExit("FAIL: " + "; ".join(fails))
     print(f"PASS: {ch['n_requests']} requests -> "
           f"{ch['n_requests'] - ch['traces_missing']} complete traces "
           f"({ch['escalated_traces']} escalated, "
           f"{ch['requeued_traces']} requeued), overhead "
-          f"{ov['overhead_x']:.3f}x")
+          f"{ov['overhead_x']:.3f}x, alerting "
+          f"{len(al['detected_classes'])}/{len(al['required_classes'])} "
+          "fault classes, 0 false positives")
 
 
 def run(config) -> tuple:

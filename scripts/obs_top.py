@@ -1,0 +1,204 @@
+#!/usr/bin/env python3
+"""Live terminal console for a running `launch serve` fleet.
+
+Polls the Prometheus text exposition written by `--metrics-out` (and,
+optionally, the alert JSONL written by `--alerts-out`) and renders a
+top-style view: per-replica queue depth, fleet tier mix, request/pool
+counters, latency quantiles, SLO + anomaly status, and the most recent
+alerts. Pure stdlib — point it at the files, no server required:
+
+    PYTHONPATH=src python -m repro.launch.serve --workload so3 --server \\
+        --replicas 4 --metrics-out /tmp/metrics.prom \\
+        --alerts-out /tmp/alerts.jsonl &
+    python scripts/obs_top.py /tmp/metrics.prom --alerts /tmp/alerts.jsonl
+
+Use `--once` for a single snapshot (no screen clearing) — handy in
+scripts and CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+# `name{k="v",k2="v2"} value` or `name value` (exposition format,
+# src/repro/obs/export.py); label values never contain quotes here.
+_SAMPLE = re.compile(r'^([A-Za-z_:][A-Za-z0-9_:]*)(\{[^}]*\})?\s+(\S+)$')
+_LABEL = re.compile(r'([A-Za-z_][A-Za-z0-9_]*)="([^"]*)"')
+
+
+def parse_exposition(text: str):
+    """-> (samples, exported_at) where samples maps
+    (name, frozenset(labels.items())) -> float."""
+    samples, exported_at = {}, None
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            if line.startswith("# exported_at"):
+                try:
+                    exported_at = float(line.split()[-1])
+                except ValueError:
+                    pass
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            continue
+        name, raw_labels, raw_value = m.groups()
+        try:
+            value = float(raw_value)
+        except ValueError:
+            continue
+        labels = dict(_LABEL.findall(raw_labels or ""))
+        samples[(name, frozenset(labels.items()))] = value
+    return samples, exported_at
+
+
+def select(samples, name, **where):
+    """All (labels, value) for `name` whose labels include `where`."""
+    out = []
+    for (n, key), value in samples.items():
+        if n != name:
+            continue
+        labels = dict(key)
+        if all(labels.get(k) == v for k, v in where.items()):
+            out.append((labels, value))
+    return out
+
+
+def _bar(value, scale, width=24):
+    n = 0 if scale <= 0 else min(width, int(round(width * value / scale)))
+    return "#" * n + "." * (width - n)
+
+
+def tail_alerts(path, n=8):
+    try:
+        lines = Path(path).read_text().splitlines()
+    except OSError:
+        return []
+    out = []
+    for line in lines[-n:]:
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def render(samples, exported_at, alerts, out=sys.stdout):
+    now = time.time()
+    age = "?" if exported_at is None else f"{now - exported_at:.1f}s ago"
+    print(f"== repro fleet health == (export {age})", file=out)
+
+    # per-replica queue depth
+    depths = sorted(select(samples, "cluster_queue_depth"),
+                    key=lambda lv: lv[0].get("replica", ""))
+    if depths:
+        peak = max(1.0, max(v for _, v in depths))
+        print("\nqueue depth (per replica):", file=out)
+        for labels, v in depths:
+            r = labels.get("replica", "?")
+            print(f"  r{r:>2} {_bar(v, peak)} {v:.0f}", file=out)
+
+    # fleet tier mix
+    tiers = sorted(select(samples, "cluster_replicas"),
+                   key=lambda lv: lv[0].get("tier", ""))
+    if tiers:
+        mix = "  ".join(f"{la.get('tier', '?')}x{v:.0f}"
+                        for la, v in tiers if v > 0)
+        print(f"\ntier mix: {mix}", file=out)
+
+    # request + pool counters
+    reqs = select(samples, "serve_requests_total")
+    if reqs:
+        by_event = {}
+        for labels, v in reqs:
+            ev = labels.get("event", "?")
+            by_event[ev] = by_event.get(ev, 0.0) + v
+        line = "  ".join(f"{k}={v:.0f}" for k, v in sorted(by_event.items()))
+        print(f"\nrequests: {line}", file=out)
+    pool = select(samples, "pool_events_total")
+    if pool:
+        by_event = {}
+        for labels, v in pool:
+            ev = labels.get("event", "?")
+            by_event[ev] = by_event.get(ev, 0.0) + v
+        line = "  ".join(f"{k}={v:.0f}" for k, v in sorted(by_event.items()))
+        print(f"pool events: {line}", file=out)
+
+    # latency quantiles (summary-style samples carry a quantile label)
+    lat = select(samples, "serve_request_latency_seconds", kind="request")
+    qs = {la["quantile"]: v for la, v in lat if "quantile" in la}
+    if qs:
+        line = "  ".join(f"p{float(q) * 100:.0f}={v * 1e3:.1f}ms"
+                         for q, v in sorted(qs.items(), key=lambda i:
+                                            float(i[0])))
+        print(f"latency (request): {line}", file=out)
+
+    # SLO + anomaly status
+    slos = sorted(select(samples, "slo_breached"),
+                  key=lambda lv: lv[0].get("slo", ""))
+    if slos:
+        print("\nSLOs:", file=out)
+        for labels, v in slos:
+            mark = "BREACH" if v else "ok"
+            print(f"  {labels.get('slo', '?'):<22} {mark}", file=out)
+    anomalies = sorted(select(samples, "anomaly_active"),
+                       key=lambda lv: lv[0].get("detector", ""))
+    active = [la.get("detector", "?") for la, v in anomalies if v]
+    if anomalies:
+        print("anomalies: " + (", ".join(active) if active else "none"),
+              file=out)
+
+    # alert feed tail
+    if alerts:
+        print("\nrecent alerts:", file=out)
+        for a in alerts:
+            print(f"  [{a.get('severity', '?'):<8}] "
+                  f"{a.get('name', '?'):<22} {a.get('message', '')}",
+                  file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("metrics_file",
+                    help="Prometheus text file written by --metrics-out")
+    ap.add_argument("--alerts", default=None, metavar="PATH",
+                    help="alert JSONL written by --alerts-out")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="refresh period in seconds")
+    ap.add_argument("--once", action="store_true",
+                    help="render a single snapshot and exit")
+    ap.add_argument("--iterations", type=int, default=0,
+                    help="stop after this many refreshes (0 = forever)")
+    args = ap.parse_args(argv)
+
+    i = 0
+    while True:
+        try:
+            text = Path(args.metrics_file).read_text()
+        except OSError:
+            text = ""
+        samples, exported_at = parse_exposition(text)
+        alerts = tail_alerts(args.alerts) if args.alerts else []
+        if not args.once:
+            sys.stdout.write("\x1b[2J\x1b[H")   # clear + home
+        if samples:
+            render(samples, exported_at, alerts)
+        else:
+            print(f"waiting for metrics at {args.metrics_file} ...")
+        i += 1
+        if args.once or (args.iterations and i >= args.iterations):
+            return 0
+        try:
+            time.sleep(args.interval)
+        except KeyboardInterrupt:
+            return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

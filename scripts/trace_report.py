@@ -16,6 +16,13 @@ rows sum to the latency column. Usage:
 
     PYTHONPATH=src python scripts/trace_report.py traces.jsonl
     PYTHONPATH=src python scripts/trace_report.py traces.jsonl --kind chunk
+    PYTHONPATH=src python scripts/trace_report.py traces.jsonl \\
+        --chrome-trace timeline.json    # open in ui.perfetto.dev
+
+`--chrome-trace` re-exports the span trees as a Chrome-trace JSON
+timeline (repro.obs.timeline, docs/observability.md) and validates the
+result: schema per event phase, plus the span-tiling invariant — each
+request's child spans must still sum to its end-to-end duration.
 """
 from __future__ import annotations
 
@@ -111,17 +118,45 @@ def report(traces, kind=None, out=sys.stdout):
     return 0
 
 
+def export_chrome(traces, out_path: str) -> int:
+    """Write the traces as a validated Chrome-trace/Perfetto JSON."""
+    from repro.obs.timeline import validate_chrome_trace, write_chrome_trace
+    doc = write_chrome_trace(out_path, traces)
+    verdict = validate_chrome_trace(doc)
+    print(f"chrome trace: {verdict['n_events']} events, "
+          f"{verdict['n_async_trees']} request tree(s) -> {out_path} "
+          "(open in ui.perfetto.dev or chrome://tracing)")
+    if not verdict["ok"]:
+        print(f"VALIDATION FAILED: {verdict['n_schema_errors']} schema "
+              f"error(s), {verdict['tiling_violations']} tiling "
+              f"violation(s), {verdict['sum_violations']} span-sum "
+              f"violation(s)", file=sys.stderr)
+        for err in verdict["schema_errors"]:
+            print(f"  {err}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace_file", help="JSONL trace file (--trace-out)")
     ap.add_argument("--kind", default=None,
                     help="only report traces of this kind "
                          "(e.g. request, chunk)")
+    ap.add_argument("--chrome-trace", metavar="OUT", default=None,
+                    help="also export the span trees as Chrome-trace "
+                         "JSON for ui.perfetto.dev / chrome://tracing")
     args = ap.parse_args(argv)
     if not Path(args.trace_file).exists():
         print(f"no such file: {args.trace_file}", file=sys.stderr)
         return 2
-    return report(load(args.trace_file), kind=args.kind)
+    traces = load(args.trace_file)
+    rc = report(traces, kind=args.kind)
+    if args.chrome_trace is not None:
+        kept = ([t for t in traces if t.get("kind") == args.kind]
+                if args.kind else traces)
+        rc = max(rc, export_chrome(kept, args.chrome_trace))
+    return rc
 
 
 if __name__ == "__main__":

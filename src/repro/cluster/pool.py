@@ -57,6 +57,7 @@ import dataclasses
 import threading
 import time
 import warnings
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -248,6 +249,11 @@ class ClusterPool:
                     on_flagged=self._on_flagged,
                     breaker_window=cluster.breaker_window)
             for i, eng in enumerate(engines)]
+        # health-plane linkage (watch_alerts): recent alerts the pool
+        # has been handed, surfaced under stats()["alerts"]
+        self._alerts_seen: deque = deque(maxlen=64)
+        self._n_alerts_seen = 0
+        self._alert_unsub = None
         self._watchdog: Optional[threading.Thread] = None
         self._watchdog_stop = threading.Event()
         if (cluster.stall_timeout_s is not None
@@ -255,6 +261,7 @@ class ClusterPool:
             self._watchdog = threading.Thread(
                 target=self._watch, name="cluster-watchdog", daemon=True)
             self._watchdog.start()
+        self._publish_fleet_gauges()
         if wait_ready:
             self.wait_ready()
 
@@ -389,9 +396,14 @@ class ClusterPool:
                         self._routed_per_replica[rep.replica_id] = (
                             self._routed_per_replica.get(
                                 rep.replica_id, 0) + 1)
+                    REGISTRY.counter("serve_requests_total",
+                                     surface="pool",
+                                     event="submitted").inc()
                     return handle
             with self._lock:
                 self._n_shed += 1
+            REGISTRY.counter("serve_requests_total", surface="pool",
+                             event="shed").inc()
             raise SchedulerOverloaded(
                 "no replica admitted the request (queues filled while "
                 "routing)", self._retry_after())
@@ -480,6 +492,9 @@ class ClusterPool:
         if self._watchdog is not None:
             self._watchdog_stop.set()
             self._watchdog.join()
+        if self._alert_unsub is not None:
+            self._alert_unsub()
+            self._alert_unsub = None
         for r in self._replicas:
             r.begin_close()
         for r in self._replicas:
@@ -702,6 +717,8 @@ class ClusterPool:
                     if busy is not None and busy > c.stall_timeout_s:
                         with self._lock:
                             self._n_stalls_detected += 1
+                        REGISTRY.counter("pool_events_total",
+                                         event="stall_detected").inc()
                         self._quarantine(idx, GuardrailViolation(
                             f"replica {rep.replica_id} stalled: busy "
                             f"{busy:.2f}s > stall_timeout_s="
@@ -758,6 +775,7 @@ class ClusterPool:
         self._replicas[idx] = fresh
         with self._lock:
             self._n_respawned += 1
+        self._publish_fleet_gauges()
 
     def kill_replica(self, replica_id: int, mode: str = "drain") -> None:
         """Injectable failure (tests, chaos drills, cluster_bench):
@@ -837,6 +855,50 @@ class ClusterPool:
 
     def queue_depth(self) -> int:
         return sum(r.depth() for r in self._replicas)
+
+    def _publish_fleet_gauges(self) -> None:
+        """Fleet composition into the obs registry (``obs_top`` reads
+        the exported file, not ``stats()``): live replicas per tier."""
+        tiers: Dict[str, int] = {}
+        for r in self._replicas:
+            if r.accepting or r.busy_duration() is not None:
+                tiers[r.tier] = tiers.get(r.tier, 0) + 1
+        for tier, n in tiers.items():
+            REGISTRY.gauge("cluster_replicas", tier=tier).set(n)
+
+    def watch_alerts(self, bus) -> "ClusterPool":
+        """Subscribe the pool to an :class:`~repro.obs.slo.AlertBus`:
+        alerts are recorded (bounded history, ``stats()["alerts"]``)
+        and counted under ``pool_events_total{event="alert"}`` so the
+        fleet's own heartbeat carries the health plane's verdicts.
+        *Acting* on alerts stays the guardrail/watchdog layer's job —
+        the bus hands the pool attributed evidence, not commands.
+        Returns ``self`` so ``ClusterPool.from_config(...)
+        .watch_alerts(bus)`` chains."""
+        def _on_alert(alert) -> None:
+            with self._lock:
+                self._alerts_seen.append(alert)
+                self._n_alerts_seen += 1
+            REGISTRY.counter("pool_events_total", event="alert").inc()
+        if self._alert_unsub is not None:
+            self._alert_unsub()
+        self._alert_unsub = bus.subscribe(_on_alert)
+        return self
+
+    def flush_records(self) -> List:
+        """Every replica's :class:`FlushRecord` list, merged — the
+        flush-slice source for ``repro.obs.timeline.chrome_trace``."""
+        return [f for r in self._replicas for f in r.records()]
+
+    def warmup_records(self) -> List[Dict]:
+        """Per-replica warmup/compile report entries (each tagged with
+        its ``replica`` id) — the compile-slice source for the
+        timeline export."""
+        out: List[Dict] = []
+        for r in self._replicas:
+            for rec in getattr(r.engine, "warmup_report", None) or []:
+                out.append({"replica": r.replica_id, **rec})
+        return out
 
     def reset_stats(self) -> None:
         """Zero per-phase telemetry (flush records, completion/error and
@@ -940,6 +1002,11 @@ class ClusterPool:
                 "n_respawned": self._n_respawned,
                 "n_permanent_deaths": self._n_permanent_deaths,
                 "detectors": detectors,
+            }
+        with self._lock:
+            out["alerts"] = {
+                "n_seen": self._n_alerts_seen,
+                "recent": [a.to_json() for a in self._alerts_seen],
             }
         for name, fn in sources.items():
             try:

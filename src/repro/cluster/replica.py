@@ -178,6 +178,14 @@ class Replica:
         self._m_chunks = {
             k: REGISTRY.counter("cluster_chunks_total", event=k)
             for k in ("completed", "error")}
+        # health-plane feeds: live per-replica queue depth (anomaly
+        # detectors) and a per-replica service histogram (latency-skew
+        # detection needs the replica label; the fleet-level
+        # serve_flush_seconds{surface="replica"} aggregate stays as-is)
+        self._m_depth = REGISTRY.gauge("cluster_queue_depth",
+                                       replica=str(replica_id))
+        self._m_service_r = REGISTRY.histogram("replica_flush_seconds",
+                                               replica=str(replica_id))
         self._worker = threading.Thread(
             target=self._run, name=f"cluster-replica-{replica_id}",
             daemon=True)
@@ -228,6 +236,7 @@ class Replica:
                 self._chunks.append(handle)
             else:
                 self._queue.append(handle)
+            self._m_depth.set(self._queue.depth() + len(self._chunks))
             self._lock.notify()
             return True
 
@@ -296,6 +305,7 @@ class Replica:
                        + list(self._chunks))
             self._in_flight = []
             self._chunks.clear()
+            self._m_depth.set(0.0)
             self._lock.notify()
         return [h for h in orphans if not h.done()]
 
@@ -512,6 +522,8 @@ class Replica:
                     self._busy_since = time.monotonic()
                     self._in_flight = (list(picked[1]) if picked is not None
                                        else [chunk])
+                    self._m_depth.set(self._queue.depth()
+                                      + len(self._chunks))
             if picked is None and chunk is None:
                 self._die(in_flight, err)
                 return
@@ -590,7 +602,8 @@ class Replica:
                     replica_id=self.replica_id, trace_ids=trace_ids,
                     prep_s=bd.get("prep_s", 0.0),
                     dispatch_s=bd.get("dispatch_s", 0.0),
-                    sync_s=bd.get("sync_s", 0.0)))
+                    sync_s=bd.get("sync_s", 0.0),
+                    t_start=t0))
                 # feed the circuit-breaker window (flush results only —
                 # chunk health is the session layer's concern)
                 for r in results:
@@ -599,6 +612,7 @@ class Replica:
             self._m_completed.inc(len(handles))
             self._m_wait.observe(wait_s)
             self._m_service.observe(service_s)
+            self._m_service_r.observe(service_s)
             REGISTRY.counter("serve_flushes_total", surface="replica",
                              reason=reason).inc()
             for h, r in zip(handles, results):

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -254,6 +255,11 @@ def run_so3_server(engine, args) -> None:
                 fp32_nbytes=engine.memory_report()["fp32_bytes"],
                 artifact_version=engine.artifact_version,
                 guardrails=engine.guardrails if args.guardrails else None)
+        alert_bus = getattr(args, "_alert_bus", None)
+        if alert_bus is not None:
+            # fleet surfacing: alerts land in pool.stats()["alerts"] and
+            # bump pool_events_total{event="alert"}
+            pool.watch_alerts(alert_bus)
         swap_report = {}
         swap_thread = None
         session = session_mgr = None
@@ -388,15 +394,18 @@ def _print_server_summary(res, stats, args, max_batch) -> None:
 
 
 def _setup_obs(args):
-    """`--metrics-out` / `--trace-out`: arm the unified metrics plane
-    and the per-request tracer (repro.obs, docs/observability.md).
-    Returns a cleanup callable that flushes the final export and closes
-    the trace sink."""
-    if not (args.metrics_out or args.trace_out):
+    """`--metrics-out` / `--trace-out` / `--alerts-out`: arm the unified
+    metrics plane, the per-request tracer, and the active health plane
+    (SLO burn-rate evaluation + anomaly detectors; repro.obs,
+    docs/observability.md).  Returns a cleanup callable that stops the
+    health monitor, flushes the final export, and closes the sinks."""
+    if not (args.metrics_out or args.trace_out or args.alerts_out):
         return lambda: None
-    from repro.obs import (JsonlTraceSink, PeriodicExporter,
-                           configure_tracing)
-    sink = exporter = None
+    from repro.obs import (AlertBus, AnomalyMonitor, HealthMonitor,
+                           JsonlTraceSink, PeriodicExporter, REGISTRY,
+                           SLOEvaluator, TRACER, configure_tracing,
+                           default_detectors, default_slos)
+    sink = exporter = monitor = alerts_file = None
     if args.trace_out:
         sink = JsonlTraceSink(args.trace_out)
         configure_tracing(enabled=True, sink=sink)
@@ -404,13 +413,40 @@ def _setup_obs(args):
               "(render with scripts/trace_report.py)")
     if args.metrics_out:
         exporter = PeriodicExporter(
-            args.metrics_out, interval_s=args.export_interval).start()
+            args.metrics_out, interval_s=args.export_interval,
+            tracer=TRACER if sink is not None else None,
+            trace_sink=None).start()
         print(f"metrics: Prometheus text exposition -> "
               f"{args.metrics_out} every {args.export_interval:.0f}s")
+    if args.alerts_out:
+        REGISTRY.set_enabled(True)     # the evaluators read the registry
+        bus = AlertBus(registry=REGISTRY)
+        alerts_file = open(args.alerts_out, "a", encoding="utf-8")
+
+        def on_alert(alert):
+            alerts_file.write(json.dumps(alert.to_json()) + "\n")
+            alerts_file.flush()
+            print(f"ALERT[{alert.severity}] {alert.name}: "
+                  f"{alert.message}")
+        bus.subscribe(on_alert)
+        evaluator = SLOEvaluator(default_slos(), registry=REGISTRY,
+                                 bus=bus)
+        anomaly = AnomalyMonitor(default_detectors(), registry=REGISTRY,
+                                 bus=bus)
+        monitor = HealthMonitor([evaluator, anomaly],
+                                interval_s=args.health_interval).start()
+        args._alert_bus = bus      # cluster path: pool.watch_alerts
+        print(f"health plane: {len(evaluator.slos)} SLOs + "
+              f"{len(anomaly.detectors)} anomaly detectors every "
+              f"{args.health_interval:.1f}s, alerts -> {args.alerts_out}")
 
     def cleanup():
+        if monitor is not None:
+            monitor.stop()         # one final evaluation step
         if exporter is not None:
-            exporter.stop()   # joins + writes one final export
+            exporter.stop()        # joins + writes one final export
+        if alerts_file is not None:
+            alerts_file.close()
         if sink is not None:
             configure_tracing(enabled=False)
             sink.close()
@@ -518,6 +554,17 @@ def main():
                     metavar="S",
                     help="metrics export period in seconds "
                          "(--metrics-out)")
+    ap.add_argument("--alerts-out", metavar="PATH",
+                    help="arm the active health plane: evaluate the "
+                         "default SLO catalogue (burn-rate windows) and "
+                         "anomaly detectors against the live registry "
+                         "and append one JSON alert per line to this "
+                         "file (repro.obs.slo, docs/observability.md); "
+                         "watch live with scripts/obs_top.py")
+    ap.add_argument("--health-interval", type=float, default=1.0,
+                    metavar="S",
+                    help="health-plane evaluation period in seconds "
+                         "(--alerts-out)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifact",
                     help="cold-start the engine from a packed quantized "

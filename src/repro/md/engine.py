@@ -45,6 +45,7 @@ from repro.guardrails import GuardrailViolation, check_finite_tree
 from repro.kernels import ops
 from repro.md.neighbor import NeighborList, build_neighbor_list, maybe_rebuild
 from repro.md.nve import _FS
+from repro.obs.metrics import REGISTRY
 from repro.models import so3krates as so3
 from repro.serving.bucketing import EDGE_LANE, count_edges
 from repro.serving.forward import sparse_energy_and_forces
@@ -366,6 +367,15 @@ class MDEngine:
                         e_ref = e_tot
                     else:
                         drift = float(np.abs(e_tot - e_ref).max())
+                        # SLO feed: drift as a fraction of the limit
+                        # (> 1.0 breaches md_energy_drift) — published
+                        # whether or not the guardrail trips, so the
+                        # health plane sees drift *approaching* the
+                        # limit too
+                        REGISTRY.gauge(
+                            "md_energy_drift_ratio",
+                            mode=self.md.mode).set(
+                            drift / self.md.drift_limit)
                         if drift > self.md.drift_limit:
                             raise GuardrailViolation(
                                 f"energy drift {drift:.4g} eV exceeds "

@@ -1,4 +1,6 @@
-"""repro.obs — unified metrics plane + end-to-end request tracing.
+"""repro.obs — unified metrics plane + end-to-end request tracing,
+plus the active health plane (SLOs, burn-rate alerting, anomaly
+detection, Chrome-trace timeline export).
 
 Dependency leaf (stdlib only, like ``repro.guardrails``): everything in
 the stack can import it. See docs/observability.md.
@@ -10,6 +12,14 @@ from repro.obs.trace import (Span, RequestTrace, Tracer, TRACER,
 from repro.obs.export import (prometheus_text, write_metrics,
                               JsonlTraceSink, PeriodicExporter,
                               load_traces)
+from repro.obs.slo import (Alert, AlertBus, SLO, SLOEvaluator,
+                           HealthMonitor, SampleWindow, default_slos)
+from repro.obs.anomaly import (AnomalyMonitor, Detector, EwmaZScore,
+                               QueueDepthRunaway, CompileStorm,
+                               ReplicaLatencySkew, EscalationTrend,
+                               default_detectors, robust_zscore)
+from repro.obs.timeline import (chrome_trace, write_chrome_trace,
+                                validate_chrome_trace)
 
 __all__ = [
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "REGISTRY",
@@ -18,4 +28,10 @@ __all__ = [
     "get_tracer",
     "prometheus_text", "write_metrics", "JsonlTraceSink",
     "PeriodicExporter", "load_traces",
+    "Alert", "AlertBus", "SLO", "SLOEvaluator", "HealthMonitor",
+    "SampleWindow", "default_slos",
+    "AnomalyMonitor", "Detector", "EwmaZScore", "QueueDepthRunaway",
+    "CompileStorm", "ReplicaLatencySkew", "EscalationTrend",
+    "default_detectors", "robust_zscore",
+    "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
 ]

@@ -175,9 +175,15 @@ class Histogram(_Instrument):
         with self._lock:
             if self._count == 0:
                 return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
-                        "p50": 0.0, "p95": 0.0, "p99": 0.0}
+                        "p50": 0.0, "p95": 0.0, "p99": 0.0,
+                        "buckets": {}}
             base = {"count": self._count, "sum": self._sum,
-                    "min": self._min, "max": self._max}
+                    "min": self._min, "max": self._max,
+                    # JSON-able bucket dict ("u" = underflow) so the
+                    # health plane (repro.obs.slo) can compute windowed
+                    # quantiles from snapshot deltas
+                    "buckets": {("u" if k is None else str(k)): n
+                                for k, n in self._buckets.items()}}
         base["p50"] = self.percentile(0.50)
         base["p95"] = self.percentile(0.95)
         base["p99"] = self.percentile(0.99)
@@ -186,6 +192,11 @@ class Histogram(_Instrument):
 
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
 
+#: Catch-all label set a name's instruments fold into once it exceeds
+#: the registry's per-name cardinality cap.
+OVERFLOW_LABELS = {"overflow": "true"}
+_OVERFLOW_COUNTER = "repro_obs_label_overflow_total"
+
 
 class MetricsRegistry:
     """Get-or-create instrument registry keyed by ``(name, labels)``.
@@ -193,13 +204,33 @@ class MetricsRegistry:
     One process-wide instance (:data:`REGISTRY`) backs the whole stack;
     separate instances exist only for tests. Re-registering a name with
     a different instrument kind raises — a name means one thing.
+
+    Label cardinality is bounded: once a name has ``max_label_sets``
+    distinct label sets, further *new* label sets fold into one
+    ``{overflow="true"}`` catch-all instrument (per name) and each
+    folded lookup bumps ``repro_obs_label_overflow_total`` — a
+    per-``session_id``-style label can no longer leak instruments
+    forever, and the leak is visible instead of silent. Existing label
+    sets keep resolving normally.
     """
 
-    def __init__(self):
+    def __init__(self, max_label_sets: int = 1024):
         self._lock = threading.Lock()
         self._instruments: Dict[Tuple[str, str], _Instrument] = {}
         self._kinds: Dict[str, str] = {}
+        self._label_counts: Dict[str, int] = {}
+        self.max_label_sets = int(max_label_sets)
         self.enabled = True
+
+    def _overflow_counter_locked(self) -> Counter:
+        key = (_OVERFLOW_COUNTER, "")
+        inst = self._instruments.get(key)
+        if inst is None:
+            inst = Counter(self, _OVERFLOW_COUNTER, {})
+            self._instruments[key] = inst
+            self._kinds[_OVERFLOW_COUNTER] = "counter"
+            self._label_counts[_OVERFLOW_COUNTER] = 1
+        return inst
 
     def _get(self, kind: str, name: str, labels: Dict[str, str]):
         key = (name, label_suffix(labels))
@@ -211,9 +242,23 @@ class MetricsRegistry:
                     f"cannot re-register as {kind}")
             inst = self._instruments.get(key)
             if inst is None:
+                if (labels != OVERFLOW_LABELS
+                        and self._label_counts.get(name, 0)
+                        >= self.max_label_sets):
+                    overflow = self._overflow_counter_locked()
+                    labels = dict(OVERFLOW_LABELS)
+                    key = (name, label_suffix(labels))
+                    inst = self._instruments.get(key)
+                    # instrument locks differ from the registry lock,
+                    # so bumping under it cannot deadlock
+                    overflow.inc()
+                    if inst is not None:
+                        return inst
                 inst = _KINDS[kind](self, name, labels)
                 self._instruments[key] = inst
                 self._kinds[name] = kind
+                self._label_counts[name] = (
+                    self._label_counts.get(name, 0) + 1)
             return inst
 
     def counter(self, name: str, **labels: str) -> Counter:
@@ -233,6 +278,7 @@ class MetricsRegistry:
         with self._lock:
             self._instruments.clear()
             self._kinds.clear()
+            self._label_counts.clear()
 
     def snapshot(self) -> Dict:
         """One labelled JSON-able document over every instrument."""

@@ -214,6 +214,14 @@ class RequestHandle:
                 bucket=self.bucket_capacity,
                 n_requeues=self.n_requeues,
                 n_escalations=len(self.escalations))
+        if REGISTRY.enabled:
+            # per-request e2e latency, windowed-p99 SLO feed; labelled
+            # by kind so chunk runtimes never pollute the request p99
+            REGISTRY.histogram(
+                "serve_request_latency_seconds",
+                kind=type(self)._trace_kind,
+                bucket=str(self.bucket_capacity)).observe(
+                now - self.t_submit)
         self._event.set()
 
 
@@ -494,7 +502,8 @@ class MicroBatchScheduler:
                     replica_id=0, trace_ids=trace_ids,
                     prep_s=bd.get("prep_s", 0.0),
                     dispatch_s=bd.get("dispatch_s", 0.0),
-                    sync_s=bd.get("sync_s", 0.0)))
+                    sync_s=bd.get("sync_s", 0.0),
+                    t_start=t0))
             self._m_requests["completed"].inc(len(handles))
             if n_flagged:
                 self._m_requests["guard_flagged"].inc(n_flagged)

@@ -60,6 +60,9 @@ class FlushRecord:
     prep_s: float = 0.0
     dispatch_s: float = 0.0
     sync_s: float = 0.0
+    # monotonic flush start time: places the flush on the fleet
+    # timeline (repro.obs.timeline); 0.0 = recorded pre-timeline
+    t_start: float = 0.0
 
 
 def flush_summary(flushes: Sequence[FlushRecord]) -> Dict[str, object]:

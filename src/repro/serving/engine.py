@@ -334,9 +334,11 @@ class QuantizedEngine:
             s0 = time.monotonic()
             fn()
             dt = time.monotonic() - s0
+            # t0 places the compile on the fleet timeline
+            # (repro.obs.timeline renders one slice per compile)
             self.warmup_report.append(
                 {"bucket": cap, "batch_size": bsz, "path": path,
-                 "mode": self.serve.mode, "seconds": dt})
+                 "mode": self.serve.mode, "seconds": dt, "t0": s0})
             REGISTRY.histogram("engine_warmup_compile_seconds",
                                mode=self.serve.mode, path=path).observe(dt)
 
@@ -529,14 +531,21 @@ class QuantizedEngine:
         rotated = [Graph(gr.species, np.asarray(gr.coords) @ R.T)
                    for gr in graphs]
         out = []
+        level = 0.0
         for i, (r0, r1) in enumerate(zip(results,
                                          self._infer_raw(rotated))):
             if not np.isfinite(r0.forces).all():
                 continue            # nonfinite already flagged as fatal
             err = float(np.linalg.norm(r1.forces - r0.forces @ R.T))
+            if np.isfinite(err):
+                level = max(level, err / max(g.lee_limit, 1e-12))
             if not np.isfinite(err) or err > g.lee_limit:
                 out.append((i, Flag("lee", "suspect", value=err,
                                     limit=g.lee_limit)))
+        # SLO feed: worst probed LEE as a fraction of the limit
+        # (> 1.0 breaches the lee_probe_level objective)
+        REGISTRY.gauge("engine_lee_probe_level",
+                       mode=self.serve.mode).set(level)
         return out
 
     # -- MD bridge ----------------------------------------------------------

@@ -243,6 +243,7 @@ class MDSession:
             self.frames_emitted += 1
             if self.retain_frames:
                 self.collected.append(frame)
+        REGISTRY.counter("session_frames_total", event="emitted").inc()
         if self.on_frame is not None:
             self.on_frame(frame)
         self._frame_q.put(frame)
@@ -444,6 +445,13 @@ class SessionManager:
             else:
                 session._finish("done")
         except BaseException as e:
+            # frame-loss SLO feed: frames the trajectory promised but
+            # will never stream (ceil covers a ragged final chunk)
+            expected = math.ceil(cfg.n_steps / cfg.record_every)
+            lost = max(0, expected - session.frames_emitted)
+            if lost:
+                REGISTRY.counter("session_frames_total",
+                                 event="lost").inc(lost)
             session._finish("failed", e)
 
     def _run_chunk(self, session: MDSession) -> None:

@@ -1,0 +1,731 @@
+"""Tests for the active health plane (ISSUE 10): SLO burn-rate
+alerting, anomaly detectors, the Chrome-trace timeline export, and the
+collection-plane hardening satellites (label-cardinality bounding,
+trace-sink rotation, guaranteed exporter shutdown).
+
+Two layers:
+
+* property-style unit tests drive :class:`SLOEvaluator` /
+  :class:`AnomalyMonitor` over synthetic metric streams with *known*
+  breach points — the alert must fire at (and only at) the engineered
+  step, re-arm on recovery, and stay silent on clean streams;
+* a seeded 4-replica chaos replay injects one fault per class (poison
+  escalations, in-flight kill, watchdog stall, drifting MD session)
+  and asserts the exact attributed alert set fires — and that an
+  identical clean arm fires nothing. ``benchmarks/obs_bench.py`` gates
+  the same invariant at scale.
+"""
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.obs import (REGISTRY, Alert, AlertBus, AnomalyMonitor,
+                       CompileStorm, EscalationTrend, EwmaZScore,
+                       HealthMonitor, JsonlTraceSink, MetricsRegistry,
+                       PeriodicExporter, QueueDepthRunaway, ReplicaLatencySkew,
+                       RequestTrace, SLO, SLOEvaluator, chrome_trace,
+                       default_detectors, default_slos, robust_zscore,
+                       validate_chrome_trace)
+from repro.obs.metrics import OVERFLOW_LABELS
+
+WAIT_S = 600
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _bus():
+    """Fresh bus on a throwaway registry, with a capture list."""
+    reg = MetricsRegistry()
+    bus = AlertBus(registry=reg)
+    fired = []
+    bus.subscribe(fired.append)
+    return bus, fired
+
+
+# -- burn-rate SLO evaluation (synthetic streams, synthetic clock) ------------
+
+class TestBurnRate:
+    RATIO = SLO(name="err_rate", kind="ratio",
+                bad="reqs", bad_where={"event": "bad"},
+                total="reqs", total_where={"event": "all"},
+                objective=0.01, burn_threshold=10.0,
+                fast_window_s=10.0, slow_window_s=30.0)
+
+    def test_breach_fires_once_at_the_engineered_step(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        ev = SLOEvaluator([self.RATIO], registry=reg, bus=bus)
+        all_c = reg.counter("reqs", event="all")
+        bad_c = reg.counter("reqs", event="bad")
+        breach_t = 41
+        for t in range(80):
+            all_c.inc(10)
+            if t >= breach_t:
+                bad_c.inc(5)          # 50% bad from t=41 on
+            ev.step(now=float(t))
+            if t < breach_t:
+                assert not fired, f"false positive at t={t}"
+        # both windows must burn >= 10x: the slow (30s) window needs
+        # several bad seconds accumulated, so the fire lands after the
+        # injection but within one slow window of it
+        assert len(fired) == 1
+        alert = fired[0]
+        assert alert.name == "err_rate" and alert.source == "slo"
+        assert breach_t < alert.t <= breach_t + 30
+        assert alert.evidence["fast_burn"] >= 10.0
+        assert alert.evidence["slow_burn"] >= 10.0
+        assert alert.evidence["slo_kind"] == "ratio"
+
+    def test_strict_mode_waits_for_slow_window_coverage(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        ev = SLOEvaluator([self.RATIO], registry=reg, bus=bus)
+        all_c = reg.counter("reqs", event="all")
+        bad_c = reg.counter("reqs", event="bad")
+        for t in range(20):               # 100% bad, but only 20s of
+            all_c.inc(10)                 # history vs a 30s slow window
+            bad_c.inc(10)
+            ev.step(now=float(t))
+        assert fired == []
+        assert ev.status()["err_rate"]["evaluable"] is False
+
+    def test_allow_partial_evaluates_early(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        slo = dataclasses.replace(self.RATIO, allow_partial=True)
+        ev = SLOEvaluator([slo], registry=reg, bus=bus)
+        all_c = reg.counter("reqs", event="all")
+        bad_c = reg.counter("reqs", event="bad")
+        for t in range(5):
+            all_c.inc(10)
+            bad_c.inc(10)
+            ev.step(now=float(t))
+        assert len(fired) == 1            # rates over available history
+
+    def test_rearm_after_recovery_fires_again(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        ev = SLOEvaluator([self.RATIO], registry=reg, bus=bus)
+        all_c = reg.counter("reqs", event="all")
+        bad_c = reg.counter("reqs", event="bad")
+        phases = [(40, 0.0), (20, 5.0), (60, 0.0), (20, 5.0), (60, 0.0)]
+        t = 0
+        for steps, bad_rate in phases:
+            for _ in range(steps):
+                all_c.inc(10)
+                if bad_rate:
+                    bad_c.inc(bad_rate)
+                ev.step(now=float(t))
+                t += 1
+        assert [a.name for a in fired] == ["err_rate", "err_rate"]
+        # recovered in between: the status gauge dropped back to 0
+        assert reg.gauge("slo_breached", slo="err_rate").value == 0.0
+
+    def test_event_slo_arms_baseline_then_fires_per_burst(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        slo = SLO(name="deaths", kind="event", metric="pool_events_total",
+                  where={"event": "replica_failure"})
+        ev = SLOEvaluator([slo], registry=reg, bus=bus)
+        c = reg.counter("pool_events_total", event="replica_failure")
+        c.inc(7)                          # pre-existing: must never fire
+        ev.step(now=0.0)
+        assert fired == []
+        c.inc()                           # a fresh death
+        ev.step(now=1.0)
+        assert [a.name for a in fired] == ["deaths"]
+        ev.step(now=2.0)                  # quiet: clears (edge re-arms)
+        c.inc()
+        ev.step(now=3.0)
+        assert [a.name for a in fired] == ["deaths", "deaths"]
+
+    def test_level_slo_fires_and_clears_with_the_gauge(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        slo = SLO(name="drift", kind="level",
+                  metric="md_energy_drift_ratio", objective=1.0)
+        ev = SLOEvaluator([slo], registry=reg, bus=bus)
+        ev.step(now=0.0)                  # gauge unwritten: not evaluable
+        assert ev.status()["drift"]["evaluable"] is False
+        reg.gauge("md_energy_drift_ratio", mode="w8a8").set(3.5)
+        ev.step(now=1.0)
+        assert [a.name for a in fired] == ["drift"]
+        assert fired[0].value == 3.5
+        reg.gauge("md_energy_drift_ratio", mode="w8a8").set(0.2)
+        ev.step(now=2.0)
+        assert ev.status()["drift"]["breached"] is False
+
+    def test_quantile_slo_window_ages_out_old_storm(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        slo = SLO(name="p99", kind="quantile",
+                  metric="serve_request_latency_seconds",
+                  where={"kind": "request"}, q=0.99, objective=0.5,
+                  min_events=20, fast_window_s=10.0, slow_window_s=30.0,
+                  allow_partial=True)
+        ev = SLOEvaluator([slo], registry=reg, bus=bus)
+        h = reg.histogram("serve_request_latency_seconds", kind="request",
+                          bucket="16")
+        ev.step(now=0.0)
+        for _ in range(30):               # the storm: p99 ~ 2s
+            h.observe(2.0)
+        ev.step(now=1.0)
+        assert [a.name for a in fired] == ["p99"]
+        assert fired[0].value > 0.5
+        # fast traffic only from t=50 on: the storm ages out of both
+        # windows and the windowed p99 recovers (a cumulative histogram
+        # would hold p99 ~ 2s forever)
+        for t in range(50, 90):
+            for _ in range(5):
+                h.observe(0.001)
+            ev.step(now=float(t))
+        st = ev.status()["p99"]
+        assert st["breached"] is False
+        assert st["value"] < 0.5
+        assert len(fired) == 1            # no re-fire after recovery
+
+    def test_duplicate_slo_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            SLOEvaluator([self.RATIO, self.RATIO])
+
+    def test_default_catalogue_shape(self):
+        slos = default_slos()
+        names = {s.name for s in slos}
+        assert names == {"latency_p99", "shed_rate", "escalation_rate",
+                         "session_frame_loss", "md_energy_drift",
+                         "lee_probe_level", "replica_failure",
+                         "replica_stall"}
+        for s in slos:
+            assert s.runbook, f"SLO {s.name} has no runbook"
+
+
+# -- anomaly statistics --------------------------------------------------------
+
+class TestStats:
+    def test_ewma_scores_spike_against_pre_spike_baseline(self):
+        z = EwmaZScore(alpha=0.3, min_points=3)
+        for x in (10.0, 10.5, 9.5, 10.2, 9.8):
+            assert abs(z.score(x)) < 5.0
+            z.update(x)
+        assert z.score(100.0) > 10.0      # judged before folding in
+        assert abs(z.mean - 10.0) < 1.0
+
+    def test_ewma_needs_min_points(self):
+        z = EwmaZScore(min_points=3)
+        z.update(1.0)
+        z.update(1.0)
+        assert z.score(1000.0) == 0.0     # not warmed up yet
+
+    def test_robust_zscore_constant_baseline_semantics(self):
+        assert robust_zscore([2.0, 2.0, 2.0, 2.0], 2.0) == 0.0
+        assert robust_zscore([2.0, 2.0, 2.0, 2.0], 9.0) == math.inf
+        assert robust_zscore([2.0, 2.0, 2.0, 2.0], -9.0) == -math.inf
+        assert robust_zscore([], 5.0) == 0.0
+
+    def test_robust_zscore_scales_by_mad(self):
+        xs = [1.0, 2.0, 3.0, 4.0, 5.0]    # median 3, MAD 1
+        assert robust_zscore(xs, 3.0) == pytest.approx(0.0)
+        assert robust_zscore(xs, 3.0 + 1.4826) == pytest.approx(1.0)
+
+
+# -- anomaly detectors over synthetic registry streams ------------------------
+
+class TestDetectors:
+    def test_queue_depth_runaway_fires_on_growth_not_level(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([QueueDepthRunaway()], registry=reg, bus=bus)
+        g = reg.gauge("cluster_queue_depth", replica="0")
+        for t in range(10):               # flat low depth: silent
+            g.set(2.0)
+            mon.step(now=float(t))
+        assert fired == []
+        for t, depth in enumerate((10.0, 14.0, 19.0, 25.0, 33.0), 10):
+            g.set(depth)
+            mon.step(now=float(t))
+        names = [a.name for a in fired]
+        assert names == ["queue_depth_runaway"]   # edge-triggered: once
+        assert fired[0].severity == "page"
+        assert fired[0].evidence["depth"] >= 8.0
+
+    def test_queue_depth_high_but_flat_is_silent(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([QueueDepthRunaway()], registry=reg, bus=bus)
+        g = reg.gauge("cluster_queue_depth", replica="0")
+        for t in range(20):               # saturated but stable
+            g.set(50.0)
+            mon.step(now=float(t))
+        assert fired == []
+
+    def test_compile_storm_skips_startup_then_fires(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([CompileStorm()], registry=reg, bus=bus)
+        h = reg.histogram("engine_warmup_compile_seconds", path="dense")
+        h.observe(1.2)                    # startup warmup compile
+        mon.step(now=0.0)
+        mon.step(now=1.0)
+        for t in range(2, 6):             # steady serving, no compiles
+            mon.step(now=float(t))
+        assert fired == []
+        h.observe(0.8)                    # a mid-serving recompile
+        mon.step(now=6.0)
+        assert [a.name for a in fired] == ["compile_storm"]
+        assert fired[0].evidence["new_compiles"] == 1
+
+    def test_replica_latency_skew_fires_on_one_slow_replica(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([ReplicaLatencySkew(ratio=4.0, min_events=8)],
+                             registry=reg, bus=bus)
+        mon.step(now=0.0)
+        for r in range(4):
+            h = reg.histogram("replica_flush_seconds", replica=str(r))
+            for _ in range(10):
+                h.observe(0.10 if r == 2 else 0.01)
+        mon.step(now=1.0)
+        assert [a.name for a in fired] == ["replica_latency_skew"]
+        assert fired[0].evidence["worst_replica"] == "2"
+
+    def test_replica_latency_skew_silent_on_even_fleet(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([ReplicaLatencySkew()], registry=reg, bus=bus)
+        mon.step(now=0.0)
+        for r in range(4):
+            h = reg.histogram("replica_flush_seconds", replica=str(r))
+            for _ in range(10):
+                h.observe(0.01 * (1.0 + 0.1 * r))   # mild spread only
+        mon.step(now=1.0)
+        assert fired == []
+
+    def test_escalation_trend_fires_on_break_not_steady_rate(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([EscalationTrend()], registry=reg, bus=bus)
+        c = reg.counter("pool_events_total", event="escalated")
+        for t in range(8):                # steady 2 escalations/interval
+            c.inc(2)
+            mon.step(now=float(t))
+        assert fired == []
+        c.inc(12)                         # the burst
+        mon.step(now=8.0)
+        assert [a.name for a in fired] == ["escalation_trend"]
+        assert fired[0].evidence["delta"] == 12.0
+
+    def test_broken_detector_does_not_stop_the_rest(self):
+        class Boom(QueueDepthRunaway):
+            name = "boom"
+
+            def check(self, window):
+                raise RuntimeError("detector bug")
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        mon = AnomalyMonitor([Boom(), EscalationTrend()],
+                             registry=reg, bus=bus)
+        c = reg.counter("pool_events_total", event="escalated")
+        for t in range(8):
+            c.inc(2)
+            mon.step(now=float(t))
+        c.inc(12)
+        mon.step(now=8.0)
+        assert [a.name for a in fired] == ["escalation_trend"]
+
+
+# -- alert bus ----------------------------------------------------------------
+
+class TestAlertBus:
+    def _alert(self, name="a1"):
+        return Alert(name=name, severity="page", source="slo", message="m")
+
+    def test_publish_counts_and_metric(self):
+        reg = MetricsRegistry()
+        bus = AlertBus(registry=reg)
+        bus.publish(self._alert())
+        bus.publish(self._alert())
+        assert bus.n_published == 2 and bus.counts() == {"a1": 2}
+        c = reg.counter("repro_obs_alerts_total", alert="a1",
+                        severity="page")
+        assert c.value == 2.0
+
+    def test_subscriber_error_swallowed_and_counted(self):
+        bus, fired = _bus()
+
+        def bad(alert):
+            raise OSError("pager down")
+        bus.subscribe(bad)
+        bus.publish(self._alert())
+        assert len(fired) == 1            # other subscribers still served
+        assert bus.n_subscriber_errors == 1
+
+    def test_unsubscribe(self):
+        bus, fired = _bus()
+        got = []
+        unsub = bus.subscribe(got.append)
+        bus.publish(self._alert())
+        unsub()
+        bus.publish(self._alert())
+        assert len(got) == 1 and len(fired) == 2
+
+    def test_alert_json_roundtrip(self):
+        doc = self._alert().to_json()
+        assert json.loads(json.dumps(doc)) == doc
+        assert doc["name"] == "a1" and doc["source"] == "slo"
+
+
+# -- satellite: label-cardinality bounding ------------------------------------
+
+class TestCardinality:
+    def test_overflow_folds_into_catchall(self):
+        reg = MetricsRegistry(max_label_sets=4)
+        for i in range(10):
+            reg.counter("hot", user=str(i)).inc()
+        snap = {tuple(sorted(e["labels"].items())): e["value"]
+                for e in reg.snapshot()["counters"] if e["name"] == "hot"}
+        # 4 distinct label sets survive; the rest folded into overflow
+        assert snap[tuple(sorted(OVERFLOW_LABELS.items()))] == 6.0
+        assert len(snap) == 5             # 4 kept + the catch-all
+        ovf = reg.counter("repro_obs_label_overflow_total")
+        assert ovf.value == 6.0
+
+    def test_existing_label_sets_unaffected_by_cap(self):
+        reg = MetricsRegistry(max_label_sets=2)
+        a = reg.counter("hot", user="a")
+        b = reg.counter("hot", user="b")
+        reg.counter("hot", user="c").inc()          # folded
+        assert reg.counter("hot", user="a") is a    # cached lookups keep
+        assert reg.counter("hot", user="b") is b    # their identity
+        a.inc(3)
+        assert a.value == 3.0
+
+    def test_cap_is_per_metric_name(self):
+        reg = MetricsRegistry(max_label_sets=2)
+        for i in range(4):
+            reg.counter("x", k=str(i)).inc()
+            reg.counter("y", k=str(i)).inc()
+        ovf = reg.counter("repro_obs_label_overflow_total")
+        assert ovf.value == 4.0           # 2 folded per name
+
+
+# -- satellite: sink rotation + exporter shutdown -----------------------------
+
+class TestRotationAndShutdown:
+    def test_sink_rotates_and_keeps_every_line(self, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        sink = JsonlTraceSink(path, max_bytes=400, keep=10)
+        for i in range(50):
+            sink.write({"trace_id": f"r-{i}", "pad": "x" * 40})
+        sink.close()
+        assert sink.n_rotations > 0
+        files = [Path(path)] + sorted(tmp_path.glob("t.jsonl.*"))
+        ids = []
+        for f in files:
+            ids += [json.loads(ln)["trace_id"]
+                    for ln in f.read_text().splitlines()]
+        assert sorted(ids) == sorted(f"r-{i}" for i in range(50))
+        assert all(f.stat().st_size <= 400 + 100 for f in files)
+
+    def test_sink_keep_bound_drops_oldest(self, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        sink = JsonlTraceSink(path, max_bytes=120, keep=2)
+        for i in range(60):
+            sink.write({"trace_id": f"r-{i}", "pad": "x" * 40})
+        sink.close()
+        rotated = sorted(p.name for p in tmp_path.glob("t.jsonl.*"))
+        assert rotated == ["t.jsonl.1", "t.jsonl.2"]   # .3+ dropped
+
+    def test_exporter_stop_flushes_tracer_then_closes_sink(self, tmp_path):
+        calls = []
+
+        class FakeTracer:
+            def flush(self, timeout=30.0):
+                calls.append("flush")
+                return True
+
+        class FakeSink:
+            def close(self):
+                calls.append("close")
+        reg = MetricsRegistry()
+        reg.counter("beat").inc()
+        exp = PeriodicExporter(str(tmp_path / "m.prom"), interval_s=30.0,
+                               registry=reg, tracer=FakeTracer(),
+                               trace_sink=FakeSink()).start()
+        exp.stop()
+        exp.stop()                        # idempotent
+        assert calls == ["flush", "close"]
+        assert "beat 1" in (tmp_path / "m.prom").read_text()
+
+
+# -- Chrome-trace timeline export ---------------------------------------------
+
+def _request_trace(trace_id="r-1", t0=10.0, replica=2):
+    rt = RequestTrace(trace_id, "request", t0=t0)
+    rt.begin("serve", t0 + 1.0, replica=replica)
+    rt.begin("queue", t0 + 1.5)
+    rt.begin("serve", t0 + 2.0, replica=replica + 1)
+    rt.finish(t0 + 3.0, status="ok")
+    return rt.to_json()
+
+
+class TestChromeTrace:
+    FLUSHES = [{"t_start": 10.2, "reason": "deadline", "batch_size": 3,
+                "bucket_capacity": 16, "replica_id": 2,
+                "prep_s": 0.001, "dispatch_s": 0.004, "sync_s": 0.002,
+                "service_s": 0.007},
+               {"t_start": 0.0, "reason": "size", "batch_size": 4,
+                "bucket_capacity": 16, "replica_id": 2,
+                "prep_s": 0.001, "dispatch_s": 0.004, "sync_s": 0.002,
+                "service_s": 0.007}]      # pre-timeline record: skipped
+    WARMUP = [{"replica": 0, "path": "dense", "bucket": 16, "batch": 4,
+               "seconds": 1.5, "t0": 9.0}]
+
+    def test_export_validates_with_exact_span_sums(self):
+        doc = chrome_trace([_request_trace(f"r-{i}") for i in range(3)],
+                           flushes=self.FLUSHES, warmup=self.WARMUP)
+        verdict = validate_chrome_trace(doc)
+        assert verdict["ok"], verdict
+        assert verdict["n_async_trees"] == 3
+        assert verdict["tiling_violations"] == 0
+        assert verdict["sum_violations"] == 0
+        assert doc["otherData"]["n_flushes_skipped"] == 1
+
+    def test_replica_lanes_and_router_pids(self):
+        doc = chrome_trace([_request_trace()], flushes=self.FLUSHES,
+                           warmup=self.WARMUP)
+        ev = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+        assert {e["pid"] for e in ev if e["ph"] in ("b", "e")} == {1}
+        flush = [e for e in ev if e["ph"] == "X"
+                 and e["name"].startswith("flush")]
+        assert flush and all(e["pid"] == 102 for e in flush)
+        segs = [e["name"] for e in ev if e["ph"] == "X"
+                and e["name"] in ("prep", "dispatch", "sync")]
+        assert sorted(segs) == ["dispatch", "prep", "sync"]
+        compiles = [e for e in ev if e["ph"] == "X"
+                    and e["name"].startswith("compile")]
+        assert compiles and compiles[0]["pid"] == 100
+        names = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+        assert any("router" in n for n in names)
+        assert any("replica" in n for n in names)
+
+    def test_validator_catches_corrupted_tiling(self):
+        doc = chrome_trace([_request_trace()])
+        spans = [e for e in doc["traceEvents"] if e["ph"] in ("b", "e")]
+        # shift one child boundary: the tiling (and the span sum) break
+        child_end = [e for e in spans if e["ph"] == "e"][1]
+        child_end["ts"] += 40.0
+        verdict = validate_chrome_trace(doc)
+        assert not verdict["ok"]
+        assert verdict["tiling_violations"] >= 1
+
+    def test_validator_catches_schema_violations(self):
+        doc = chrome_trace([_request_trace()])
+        del doc["traceEvents"][-1]["ts"]
+        verdict = validate_chrome_trace(doc)
+        assert not verdict["ok"] and verdict["n_schema_errors"] >= 1
+
+    def test_write_and_cli_roundtrip(self, tmp_path):
+        jsonl = tmp_path / "traces.jsonl"
+        with jsonl.open("w") as f:
+            for i in range(3):
+                f.write(json.dumps(_request_trace(f"r-{i}")) + "\n")
+        out = tmp_path / "chrome.json"
+        proc = subprocess.run(
+            [sys.executable, str(REPO / "scripts" / "trace_report.py"),
+             str(jsonl), "--chrome-trace", str(out)],
+            capture_output=True, text=True, timeout=120,
+            env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+        assert proc.returncode == 0, proc.stderr
+        doc = json.loads(out.read_text())
+        assert validate_chrome_trace(doc)["ok"]
+        assert doc["otherData"]["n_traces"] == 3
+
+
+# -- obs_top exposition parser ------------------------------------------------
+
+class TestObsTop:
+    def test_parses_exposition_and_renders_once(self, tmp_path):
+        from repro.obs import write_metrics
+        reg = MetricsRegistry()
+        reg.gauge("cluster_queue_depth", replica="0").set(3)
+        reg.counter("serve_requests_total", surface="pool",
+                    event="submitted").inc(7)
+        reg.gauge("slo_breached", slo="shed_rate").set(1)
+        path = tmp_path / "m.prom"
+        write_metrics(str(path), registry=reg)
+        proc = subprocess.run(
+            [sys.executable, str(REPO / "scripts" / "obs_top.py"),
+             str(path), "--once"],
+            capture_output=True, text=True, timeout=60)
+        assert proc.returncode == 0, proc.stderr
+        assert "queue depth" in proc.stdout
+        assert "submitted=7" in proc.stdout
+        assert "BREACH" in proc.stdout
+
+
+# -- seeded chaos replay: exact alert set, clean arm silent -------------------
+
+CHAOS_REQUIRED = {"escalation_rate", "replica_failure", "replica_stall",
+                  "md_energy_drift", "session_frame_loss"}
+# anomaly detectors reacting to the same injected faults are legitimate
+CHAOS_ALLOWED = CHAOS_REQUIRED | {d.name for d in default_detectors()}
+
+
+class TestChaosReplay:
+    @pytest.fixture(scope="class")
+    def so3_bits(self):
+        import jax
+
+        from repro.guardrails import ForceEnvelope, GuardrailConfig
+        from repro.models import so3krates as so3
+        from repro.serving import Graph, QuantizedEngine, ServeConfig
+        from repro.serving.qparams import quantize_so3_params
+        cfg = so3.So3kratesConfig(feat=16, vec_feat=4, n_layers=1, n_rbf=4,
+                                  dir_bits=6, cutoff=3.0)
+        params = so3.init_params(jax.random.PRNGKey(0), cfg)
+        qp = {t: quantize_so3_params(params, t) for t in ("w4a8", "w8a8")}
+        serve4 = ServeConfig(mode="w4a8", bucket_sizes=(16,), max_batch=4,
+                             path="dense")
+        serve8 = dataclasses.replace(serve4, mode="w8a8")
+        hair = GuardrailConfig(envelope=ForceEnvelope(limits=((16, 1e-9),)))
+        return {"cfg": cfg, "qp": qp, "serve4": serve4, "serve8": serve8,
+                "hair": hair, "Graph": Graph, "Engine": QuantizedEngine}
+
+    def _graph(self, bits, n=10, seed=0):
+        rng = np.random.default_rng(seed)
+        side = (n / 0.1) ** (1.0 / 3.0)
+        return bits["Graph"](
+            species=rng.integers(0, bits["cfg"].n_species, n)
+            .astype(np.int32),
+            coords=rng.uniform(0, side, size=(n, 3)).astype(np.float32))
+
+    def _run_arm(self, bits, tmp_path, chaos: bool):
+        from repro.cluster import ClusterConfig, ClusterPool
+        from repro.md.engine import MDConfig
+        from repro.server.scheduler import RequestHandle
+        from repro.sessions import SessionConfig, SessionManager
+        REGISTRY.reset()
+        E, cfg, qp = bits["Engine"], bits["cfg"], bits["qp"]
+        if chaos:
+            engines = [E.from_quantized(cfg, qp["w4a8"], bits["serve4"],
+                                        guardrails=bits["hair"])
+                       for _ in range(2)]
+            engines += [E.from_quantized(cfg, qp["w8a8"], bits["serve8"])
+                        for _ in range(2)]
+        else:
+            engines = [E.from_quantized(cfg, qp["w8a8"], bits["serve8"])
+                       for _ in range(4)]
+        # warmup=True: a watchdog fleet pre-compiles so first-flush
+        # compiles can't read as stalls (see test_guardrails)
+        cluster = ClusterConfig(n_replicas=4, max_batch=4, deadline_ms=2.0,
+                                warmup=True, max_escalations=1,
+                                max_queue=64, stall_timeout_s=0.3,
+                                watchdog_interval_s=0.1, probation_s=0.1)
+        pool = ClusterPool(engines, cluster)
+        bus = AlertBus(registry=REGISTRY)
+        fired = []
+        bus.subscribe(fired.append)
+        slos = default_slos(fast_window_s=0.6, slow_window_s=1.8,
+                            latency_p99_s=30.0, allow_partial=True)
+        monitor = HealthMonitor(
+            [SLOEvaluator(slos, registry=REGISTRY, bus=bus),
+             AnomalyMonitor(default_detectors(), registry=REGISTRY,
+                            bus=bus)],
+            interval_s=0.1).start()
+        pool.watch_alerts(bus)
+        try:
+            handles = []
+            for i in range(12):           # paced background traffic
+                handles.append(pool.submit(self._graph(bits, seed=100 + i)))
+                time.sleep(0.04)
+            if chaos:
+                # fault 1: poison escalations — requests pinned to the
+                # hair-trigger w4a8 replicas re-run a tier up
+                for k in range(3):
+                    h = RequestHandle(self._graph(bits, seed=500 + k),
+                                      time.monotonic(), bucket_capacity=16)
+                    assert pool._replicas[0].try_submit(h)
+                    handles.append(h)
+                # fault 2: in-flight replica kill -> failover requeue
+                rep3 = pool._replicas[3]
+                pool.kill_replica(3, mode="in_flight")
+                h = RequestHandle(self._graph(bits, seed=600),
+                                  time.monotonic(), bucket_capacity=16)
+                assert rep3.try_submit(h)
+                handles.append(h)
+                # fault 3: engine-lock stall -> watchdog quarantine
+                rep1 = pool._replicas[1]
+                rep1.inject_stall(1.5)
+                h = RequestHandle(self._graph(bits, seed=700),
+                                  time.monotonic(), bucket_capacity=16)
+                assert rep1.try_submit(h)
+                handles.append(h)
+            for h in handles:
+                h.result(timeout=WAIT_S)
+            pool_alerts = pool.stats()["alerts"]
+        finally:
+            pool.close()
+
+        # fault 4: MD session — drifting (chaos) vs clean. A separate
+        # watchdog-free pool: an MD chunk is ONE unit of worker time and
+        # its first-chunk step compile would read as a stall
+        md_pool = ClusterPool(
+            [E.from_quantized(cfg, qp["w8a8"], bits["serve8"])
+             for _ in range(2)],
+            ClusterConfig(n_replicas=2, max_batch=4, warmup=False,
+                          max_queue=64))
+        try:
+            md = MDConfig(mode="w8a8", dt_fs=0.25, record_every=10,
+                          drift_limit=1e-12 if chaos else None)
+            scfg = SessionConfig(n_steps=40, chunk_steps=20,
+                                 record_every=10, checkpoint_every=1,
+                                 md=md)
+            rng = np.random.default_rng(13)
+            n = 10
+            side = (n / 0.1) ** (1.0 / 3.0)
+            mgr = SessionManager(md_pool, str(tmp_path / ("c" if chaos
+                                                          else "clean")))
+            s = mgr.start(
+                rng.integers(0, cfg.n_species, n).astype(np.int32),
+                rng.uniform(0, side, size=(n, 3)).astype(np.float32),
+                np.full(n, 12.0, np.float32), seed=5, config=scfg)
+            if chaos:
+                with pytest.raises(Exception):   # wait re-raises the
+                    s.wait(WAIT_S)               # session's fatal error
+                assert s.status == "failed"
+            else:
+                assert s.wait(WAIT_S) == "done"
+            mgr.close()
+            time.sleep(0.5)               # let the windows catch up
+        finally:
+            monitor.stop(final_step=True)
+            md_pool.close()
+        return fired, pool_alerts
+
+    def test_chaos_arm_fires_every_fault_class(self, so3_bits, tmp_path):
+        fired, pool_alerts = self._run_arm(so3_bits, tmp_path, chaos=True)
+        names = {a.name for a in fired}
+        missing = CHAOS_REQUIRED - names
+        assert not missing, f"undetected fault classes: {missing}"
+        unexpected = names - CHAOS_ALLOWED
+        assert not unexpected, f"unattributed alerts: {unexpected}"
+        by_name = {a.name: a for a in fired}
+        assert by_name["md_energy_drift"].value > 1.0
+        assert by_name["replica_stall"].evidence["delta"] >= 1.0
+        assert by_name["escalation_rate"].evidence["fast_burn"] >= 1.0
+        # the pool saw the one-shot-phase verdicts through watch_alerts
+        assert pool_alerts["n_seen"] >= 1
+        assert {a["name"] for a in pool_alerts["recent"]} & names
+
+    def test_clean_arm_fires_nothing(self, so3_bits, tmp_path):
+        fired, _ = self._run_arm(so3_bits, tmp_path, chaos=False)
+        assert fired == [], ("clean-arm false positives: "
+                             f"{[a.name for a in fired]}")
