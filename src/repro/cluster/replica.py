@@ -399,6 +399,9 @@ class Replica:
             self._accepting = False
             orphans = in_flight + self._queue.drain_all() + list(self._chunks)
             self._chunks.clear()
+            # a dead replica holds nothing: leaving the last pre-death
+            # depth in the gauge would skew the summed fleet signal
+            self._m_depth.set(0.0)
         self._on_failure(self, orphans, error)
 
     def _take_stall(self) -> float:

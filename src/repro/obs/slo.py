@@ -28,6 +28,7 @@ the ``slo_breached{slo=...}`` status gauges and the
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from collections import deque
@@ -258,8 +259,10 @@ def quantile_from_buckets(buckets: Mapping[str, int], q: float) -> float:
     total = sum(buckets.values())
     if total <= 0:
         return 0.0
-    items = sorted(((None if k == "u" else int(k)), n)
-                   for k, n in buckets.items())
+    # None (underflow) sorts first, as in Histogram.percentile
+    items = sorted((((None if k == "u" else int(k)), n)
+                    for k, n in buckets.items()),
+                   key=lambda kv: -math.inf if kv[0] is None else kv[0])
     target = q * total
     cum = 0
     for idx, n in items:
@@ -365,7 +368,8 @@ class SLOEvaluator:
                 slo.total, slo.total_where, w, slo.allow_partial)
             if bad is None or tot is None:
                 return out  # history does not cover the slow window yet
-            frac = (bad / tot) if tot >= slo.min_events else 0.0
+            frac = (bad / tot) if (tot >= slo.min_events
+                                   and tot > 0) else 0.0
             burn = frac / max(slo.objective, 1e-12)
             burns[tag] = burn
             out["evidence"][f"{tag}_window_s"] = w
@@ -448,7 +452,20 @@ class SLOEvaluator:
         t = self.window.latest.t
         alerts: List[Alert] = []
         for slo in self.slos:
-            res = self._EVAL[slo.kind](self, slo)
+            # one misconfigured SLO must not kill the rest of the
+            # catalogue — isolate, surface, keep evaluating
+            try:
+                res = self._EVAL[slo.kind](self, slo)
+            except Exception as e:
+                self.registry.counter("repro_obs_health_eval_errors_total",
+                                      stepper="slo", slo=slo.name).inc()
+                self._status[slo.name] = {
+                    "kind": slo.kind, "severity": slo.severity,
+                    "breached": False, "evaluable": False, "errored": True,
+                    "error": f"{type(e).__name__}: {e}",
+                    "value": 0.0, "objective": slo.objective, "t": t,
+                }
+                continue
             breached = bool(res["breached"])
             was = self._breached.get(slo.name, False)
             self._breached[slo.name] = breached
@@ -504,7 +521,11 @@ class HealthMonitor:
             try:
                 alerts.extend(s.step(now))
             except Exception:
-                pass  # health evaluation must never take down serving
+                # health evaluation must never take down serving, but a
+                # dead stepper must still be visible to the operator
+                reg = getattr(s, "registry", None) or REGISTRY
+                reg.counter("repro_obs_health_eval_errors_total",
+                            stepper=type(s).__name__).inc()
         self.n_steps += 1
         return alerts
 

@@ -206,6 +206,94 @@ class TestBurnRate:
             assert s.runbook, f"SLO {s.name} has no runbook"
 
 
+# -- evaluator hardening (REVIEW regressions) ---------------------------------
+
+class TestEvalHardening:
+    def test_quantile_from_buckets_handles_underflow_key(self):
+        from repro.obs.slo import quantile_from_buckets
+        # "u" (underflow) alongside numeric indices must not TypeError
+        # and must sort below every index
+        assert quantile_from_buckets({"u": 1, "3": 5}, 0.99) > 0.0
+        assert quantile_from_buckets({"u": 10, "3": 1}, 0.5) == 0.0
+        assert quantile_from_buckets({"u": 4}, 0.99) == 0.0
+
+    def test_underflow_observation_does_not_kill_the_catalogue(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        p99 = SLO(name="p99", kind="quantile",
+                  metric="serve_request_latency_seconds", q=0.99,
+                  objective=0.5, min_events=1, fast_window_s=10.0,
+                  slow_window_s=30.0, allow_partial=True)
+        drift = SLO(name="drift", kind="level",
+                    metric="md_energy_drift_ratio", objective=1.0)
+        ev = SLOEvaluator([p99, drift], registry=reg, bus=bus)
+        h = reg.histogram("serve_request_latency_seconds")
+        reg.gauge("md_energy_drift_ratio").set(3.0)
+        ev.step(now=0.0)
+        h.observe(0.0)                    # zero-duration sample: "u" bucket
+        h.observe(2.0)
+        ev.step(now=1.0)
+        # both SLOs evaluated: p99 sees the 2s sample, drift still fires
+        assert {a.name for a in fired} == {"p99", "drift"}
+
+    def test_one_broken_slo_isolated_and_counted(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        good = SLO(name="drift", kind="level",
+                   metric="md_energy_drift_ratio", objective=1.0)
+        bad = SLO(name="boom", kind="level", metric="whatever")
+        ev = SLOEvaluator([bad, good], registry=reg, bus=bus)
+        ev._EVAL = dict(ev._EVAL)
+        orig = ev._EVAL["level"]
+        ev._EVAL["level"] = (lambda self, slo: (_ for _ in ()).throw(
+            RuntimeError("bad slo")) if slo.name == "boom"
+            else orig(self, slo))
+        reg.gauge("md_energy_drift_ratio").set(3.0)
+        ev.step(now=0.0)
+        # the healthy SLO after the broken one still evaluated + fired
+        assert [a.name for a in fired] == ["drift"]
+        st = ev.status()["boom"]
+        assert st["errored"] is True and "bad slo" in st["error"]
+        assert reg.counter("repro_obs_health_eval_errors_total",
+                           stepper="slo", slo="boom").value == 1.0
+
+    def test_monitor_counts_dead_stepper_instead_of_silence(self):
+        reg = MetricsRegistry()
+
+        class Broken:
+            registry = reg
+            def step(self, now=None):
+                raise RuntimeError("stepper died")
+
+        fired_steps = []
+
+        class Healthy:
+            def step(self, now=None):
+                fired_steps.append(now)
+                return []
+
+        mon = HealthMonitor([Broken(), Healthy()], interval_s=1.0)
+        mon.step_all(now=0.0)
+        assert fired_steps == [0.0]       # later steppers still ran
+        assert reg.counter("repro_obs_health_eval_errors_total",
+                           stepper="Broken").value == 1.0
+
+    def test_ratio_min_events_zero_empty_window_is_safe(self):
+        reg = MetricsRegistry()
+        bus, fired = _bus()
+        slo = SLO(name="r0", kind="ratio", bad="bad_total",
+                  total="req_total", objective=0.01, min_events=0,
+                  fast_window_s=10.0, slow_window_s=30.0,
+                  allow_partial=True)
+        ev = SLOEvaluator([slo], registry=reg, bus=bus)
+        reg.counter("req_total")          # instruments exist, never bumped
+        reg.counter("bad_total")
+        for t in range(5):
+            ev.step(now=float(t))         # windowed total == 0
+        assert fired == []
+        assert ev.status()["r0"].get("errored") is not True
+
+
 # -- anomaly statistics --------------------------------------------------------
 
 class TestStats:
